@@ -1,0 +1,48 @@
+"""Ring allreduce through the proxies: bandwidth vs message size, fp32 vs
+int8-compressed (error-feedback) — the gradient path of the DP trainer."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import MPIJob
+from repro.distributed.compression import ErrorFeedback
+from repro.distributed.proxy_grad import allreduce_grads
+
+
+def run() -> None:
+    n = 4
+    for size in (1 << 12, 1 << 16, 1 << 20):
+        results = {}
+
+        def init_fn(mpi):
+            return {}
+
+        def step_fn(mpi, st, k, size=size):
+            x = {"g": np.ones(size, np.float32) * (mpi.rank + 1)}
+            t0 = time.perf_counter()
+            out = allreduce_grads(mpi, x)
+            dt = time.perf_counter() - t0
+            assert abs(out["g"][0] - (1 + n) / 2) < 1e-5
+            t0 = time.perf_counter()
+            allreduce_grads(mpi, x, ef=ErrorFeedback())
+            dt_c = time.perf_counter() - t0
+            if mpi.rank == 0:
+                results["fp32"] = dt
+                results["int8"] = dt_c
+            return st
+
+        job = MPIJob(n, step_fn, init_fn)
+        job.run(1, timeout=300)
+        job.stop()
+        mb = size * 4 / 1e6
+        emit(f"allreduce/fp32/{size}", results["fp32"] * 1e6,
+             f"MB/s={mb / results['fp32']:.1f}")
+        emit(f"allreduce/int8/{size}", results["int8"] * 1e6,
+             f"MB/s={mb / results['int8']:.1f};speedup={results['fp32']/results['int8']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Proxy interposition cost (the price of the paper's architecture): a
+Send+Recv round trip through plugin->channel->proxy->transport vs calling
+the transport directly.  Also Iprobe cost from cache vs from transport."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_it
+from repro.core import MPIJob
+from repro.core.messages import Envelope, pack
+from repro.core.transport import ShmTransport
+
+
+def run() -> None:
+    # ---- direct transport (no proxy)
+    tr = ShmTransport()
+    tr.start(2)
+    payload, dtype, count = pack(np.zeros(64, np.float64))
+
+    def direct():
+        for _ in range(100):
+            tr.send(Envelope(0, 1, 0, 0, 0, payload, dtype, count))
+            while tr.poll(1) is None:
+                pass
+
+    d = time_it(direct, n=5) / 100
+    emit("proxy_overhead/direct_roundtrip", d * 1e6, "transport-only")
+    tr.stop()
+
+    # ---- through the full plugin/proxy path inside a job
+    results = {}
+
+    def init_fn(mpi):
+        return {}
+
+    def step_fn(mpi, st, k):
+        import time as _t
+        if mpi.rank == 0:
+            t0 = _t.perf_counter()
+            for i in range(100):
+                mpi.Send(np.zeros(64, np.float64), 1, tag=1)
+                mpi.Recv(source=1, tag=2)
+            results["proxied"] = (_t.perf_counter() - t0) / 100
+            t0 = _t.perf_counter()
+            for _ in range(1000):
+                mpi.Iprobe(source=1, tag=3)
+            results["iprobe_miss"] = (_t.perf_counter() - t0) / 1000
+        else:
+            for i in range(100):
+                mpi.Recv(source=0, tag=1)
+                mpi.Send(np.zeros(64, np.float64), 0, tag=2)
+        return st
+
+    job = MPIJob(2, step_fn, init_fn)
+    job.run(1, timeout=240)
+    job.stop()
+    emit("proxy_overhead/proxied_roundtrip", results["proxied"] * 1e6,
+         f"interposition_x{results['proxied'] / max(d, 1e-9):.1f}")
+    emit("proxy_overhead/iprobe_miss", results["iprobe_miss"] * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Restart latency decomposition: image load + admin replay + cache preload
+vs drained-cache size (paper §4 restart path), including cross-transport."""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import MPIJob
+
+
+def _app(m_msgs: int, payload: int):
+    def init_fn(mpi):
+        return {}
+
+    def step_fn(mpi, st, k):
+        n, me = mpi.Comm_size(), mpi.Comm_rank()
+        for j in range(m_msgs):
+            mpi.Send(np.zeros(payload, np.float64), (me + 1) % n,
+                     tag=(k * m_msgs + j) % 1000)
+        if k > 0:
+            for j in range(m_msgs):
+                mpi.Recv(source=(me - 1) % n,
+                         tag=((k - 1) * m_msgs + j) % 1000)
+        return st
+
+    return init_fn, step_fn
+
+
+def run() -> None:
+    n = 4
+    for m, payload in ((4, 64), (64, 64), (64, 4096)):
+        init_fn, step_fn = _app(m, payload)
+        with tempfile.TemporaryDirectory() as d:
+            ck = Path(d) / "ck"
+            job = MPIJob(n, step_fn, init_fn)
+            job.checkpoint_at(5, ck, resume=False)
+            job.run(8, timeout=240)
+            job.stop()
+            for transport in ("shm", "tcp"):
+                t0 = time.perf_counter()
+                job2 = MPIJob.restart(ck, step_fn, init_fn,
+                                      transport=transport)
+                restart_s = time.perf_counter() - t0
+                job2.run(8, timeout=240)
+                job2.stop()
+                cached_kb = m * n * payload * 8 / 1024
+                emit(f"restart/{transport}/inflight={m*n}/payload={payload}",
+                     restart_s * 1e6,
+                     f"cache_kb~{cached_kb:.0f}")
+
+
+if __name__ == "__main__":
+    run()

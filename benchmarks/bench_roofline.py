@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+per (arch x shape x mesh): the three terms, dominant bottleneck, model-vs-
+HLO flops ratio, per-device bytes, fits-HBM — EXPERIMENTS.md §Roofline is
+generated from this output."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_CANDIDATES = [Path("results/dryrun_final"), Path("results/dryrun_v2"),
+               Path("results/dryrun")]
+RESULTS = next((p for p in _CANDIDATES if p.exists()), _CANDIDATES[0])
+
+
+def load(variant: str = "auto", mesh: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{variant}.json"))):
+        r = json.loads(Path(f).read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(variant: str = "auto") -> str:
+    lines = ["| arch | shape | mesh | compute_s | memory_s | coll_s | "
+             "dominant | useful_flops | bytes/dev (GB) | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(variant):
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP | — | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | — | — | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['bytes_per_device']/1e9:.2f} | {r['fits_16g_hbm']} |")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0, "run repro.launch.sweep first")
+        return
+    ok = [r for r in recs if r["status"] == "ok"]
+    for r in ok:
+        if r["mesh"] != "pod":
+            continue
+        t = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             t["bound_s"] * 1e6,
+             f"dom={t['dominant']};compute={t['compute_s']:.4f}"
+             f";mem={t['memory_s']:.4f};coll={t['collective_s']:.4f}"
+             f";useful={r['useful_flops_ratio']:.3f}")
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    emit("roofline/summary", float(len(ok)),
+         f"ok={len(ok)};skip={n_skip};err={n_err}")
+
+
+if __name__ == "__main__":
+    print(table())
+    run()

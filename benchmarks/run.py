@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper claim/table (DESIGN.md §1) plus
+the roofline table from the dry-run.  Prints ``name,us_per_call,derived``
+CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run drain roofline
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_allreduce, bench_ckpt_manager,
+                        bench_ckpt_overhead, bench_drain,
+                        bench_proxy_overhead, bench_restart, bench_roofline)
+
+SUITES = {
+    "drain": bench_drain.run,
+    "ckpt_overhead": bench_ckpt_overhead.run,
+    "restart": bench_restart.run,
+    "proxy_overhead": bench_proxy_overhead.run,
+    "allreduce": bench_allreduce.run,
+    "ckpt_manager": bench_ckpt_manager.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    picked = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        try:
+            SUITES[name]()
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

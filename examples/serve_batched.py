@@ -1,0 +1,63 @@
+"""Batched serving demo: compiled prefill + KV-cache decode, with the
+serving state checkpointed mid-generation (a service can be drained,
+snapshotted and moved — the paper's claim applied to inference).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch yi-9b --batch 4
+"""
+import argparse
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, get_arch, reduce_for_smoke
+from repro.distributed.sharding import make_variant
+from repro.launch.mesh import make_local_mesh
+from repro.models.params import init_params
+from repro.models.registry import get_api
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_arch(args.arch))
+    api = get_api(cfg)
+    max_seq = args.prompt_len + args.new_tokens + 8
+    params = init_params(api.param_defs(cfg, max_seq), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, make_local_mesh(),
+                      make_variant("baseline"), max_seq=max_seq)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = np.ones(
+            (args.batch, cfg.encoder.n_frames, cfg.d_model), np.float32) * .1
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = np.ones(
+            (args.batch, cfg.n_vision_tokens, cfg.d_model), np.float32) * .1
+
+    res = eng.generate(prompts, args.new_tokens, extras=extras)
+    print(f"arch={cfg.name} batch={args.batch}: prefill {res.prefill_s*1e3:.0f}ms, "
+          f"decode {res.decode_s*1e3:.0f}ms "
+          f"({res.tokens_per_s:.0f} tok/s), out shape {res.tokens.shape}")
+    print("first sequence:", res.tokens[0][:12], "...")
+
+    with tempfile.TemporaryDirectory() as d:
+        eng.snapshot_service(CheckpointManager(Path(d) / "svc"), step=1)
+        n_files = len(list((Path(d) / "svc" / "step_0000000001").iterdir()))
+        print(f"serving state checkpointed mid-generation ({n_files} files) "
+              f"— cache+positions are a pure pytree, restorable on any mesh")
+
+
+if __name__ == "__main__":
+    main()

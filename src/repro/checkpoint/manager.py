@@ -1,0 +1,126 @@
+"""Fleet-level checkpoint manager: the paper's protocol at the training
+loop (DESIGN.md §2 mapping).
+
+  drain    = jax.block_until_ready on the state (all dispatched steps and
+             async transfers complete) + wait for the previous async write
+  snapshot = device->host copy of the pure pytree, handed to a background
+             writer thread (the storage 'proxy'; training never blocks on
+             the filesystem)
+  commit   = per-shard files + manifest, atomic rename, crc32
+  restore  = newest VALID checkpoint (corrupt/partial ones skipped),
+             resharded onto the current mesh
+
+Layout: <root>/step_<N>/{leaf shards, MANIFEST.json}
+"""
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import serialization as ser
+from repro.checkpoint.resharding import restore_resharded
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+        self.stats = {"saves": 0, "drain_s": 0.0, "snapshot_s": 0.0,
+                      "write_s": 0.0, "gc_removed": 0}
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, meta: Optional[dict] = None) -> Path:
+        """Drain -> host snapshot -> async commit.  Returns the ckpt dir."""
+        t0 = time.time()
+        jax.block_until_ready(state)          # drain dispatched computation
+        self.wait()                           # drain the previous async write
+        self.stats["drain_s"] += time.time() - t0
+
+        t0 = time.time()
+        host_state = ser.snapshot_to_host(state)   # sync copy: donation-safe
+        self.stats["snapshot_s"] += time.time() - t0
+
+        ckpt_dir = self.root / f"step_{step:010d}"
+        meta = dict(meta or {}, step=step, time=time.time())
+
+        def _write():
+            t1 = time.time()
+            try:
+                ser.save_shards(ckpt_dir, host_state, meta=meta)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+            finally:
+                self.stats["write_s"] += time.time() - t1
+
+        self.stats["saves"] += 1
+        if self.async_write:
+            self._pending = threading.Thread(target=_write, daemon=True,
+                                             name="ckpt-writer")
+            self._pending.start()
+        else:
+            _write()
+            self._raise_pending()
+        return ckpt_dir
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    # ---------------------------------------------------------------- restore
+    def list_steps(self) -> List[int]:
+        out = []
+        for p in self.root.iterdir() if self.root.exists() else []:
+            m = _STEP_RE.match(p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_valid(self) -> Optional[Path]:
+        for step in reversed(self.list_steps()):
+            d = self.root / f"step_{step:010d}"
+            if ser.validate(d):
+                return d
+        return None
+
+    def restore(self, template, shardings=None,
+                ckpt_dir: Optional[Path] = None):
+        """Restore newest valid checkpoint (resharded).  Returns
+        (state, meta) or (None, None) if nothing valid exists."""
+        d = ckpt_dir or self.latest_valid()
+        if d is None:
+            return None, None
+        state = restore_resharded(d, template, shardings)
+        meta = ser.load_manifest(d).get("meta", {})
+        return state, meta
+
+    # --------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for step in steps[:-self.keep] if self.keep else []:
+            d = self.root / f"step_{step:010d}"
+            if ser.validate(d):      # never GC the only valid artifacts race
+                shutil.rmtree(d, ignore_errors=True)
+                self.stats["gc_removed"] += 1

@@ -1,0 +1,168 @@
+"""Per-shard checkpoint serialization.
+
+Each leaf of the state pytree is written as one file PER DEVICE SHARD
+(index-range-addressed, zstd-compressed), plus a JSON manifest holding the
+tree structure, global shapes/dtypes, shard index maps and crc32s.  This is
+the layout a real fleet writes (every host stores its addressable shards);
+restore reassembles logical arrays from chunks and lays them out for
+whatever mesh is current — the paper's cross-implementation restart at the
+tensor level.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard
+
+_CCTX = zstandard.ZstdCompressor(level=3)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+class HostArray:
+    """Synchronous device->host snapshot of a (possibly sharded) jax.Array.
+    Taken BEFORE the async writer runs, so buffer donation in the next
+    train step can't corrupt the checkpoint."""
+
+    def __init__(self, x):
+        self.shape = tuple(x.shape)
+        self.dtype = str(x.dtype)
+        self.shards = []
+        for sh in x.addressable_shards:
+            idx = [[s.start or 0,
+                    s.stop if s.stop is not None else x.shape[d]]
+                   for d, s in enumerate(sh.index)] if x.ndim else []
+            self.shards.append((idx, np.asarray(sh.data).copy(),
+                                int(sh.device.id)))
+
+
+def snapshot_to_host(tree):
+    """jax.Array leaves -> HostArray; everything else -> np copy."""
+    def conv(x):
+        if isinstance(x, jax.Array):
+            return HostArray(x)
+        return np.asarray(x).copy()
+    return jax.tree.map(conv, tree)
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_bytes(data)
+    os.replace(tmp, path)
+
+
+def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None) -> dict:
+    """Write every addressable shard of every leaf.  Returns the manifest
+    (already committed to disk, LAST, for atomicity)."""
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves = _leaf_paths(state)
+    manifest: Dict[str, Any] = {"version": 1, "leaves": {}, "meta": meta or {}}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = leaf
+        entry: Dict[str, Any] = {}
+        if isinstance(arr, jax.Array):
+            arr = HostArray(arr)
+        if isinstance(arr, HostArray):
+            entry["shape"] = list(arr.shape)
+            entry["dtype"] = arr.dtype
+            shards = []
+            # de-dup replicated shards FIRST (write one per index window)
+            uniq_src = {}
+            for idx, data, dev in arr.shards:
+                uniq_src.setdefault(json.dumps(idx), (idx, data, dev))
+            for idx, data, dev in uniq_src.values():
+                blob = _CCTX.compress(data.tobytes())
+                fname = f"leaf{i:05d}_shard{dev:04d}.zst"
+                _atomic_write(ckpt_dir / fname, blob)
+                shards.append({"file": fname, "index": idx,
+                               "crc32": zlib.crc32(blob), "device": dev})
+            entry["shards"] = shards
+        else:
+            data = np.asarray(arr)
+            entry["shape"] = list(data.shape)
+            entry["dtype"] = str(data.dtype)
+            blob = _CCTX.compress(data.tobytes())
+            fname = f"leaf{i:05d}_full.zst"
+            _atomic_write(ckpt_dir / fname, blob)
+            entry["shards"] = [{"file": fname,
+                                "index": [[0, d] for d in data.shape],
+                                "crc32": zlib.crc32(blob), "device": -1}]
+        manifest["leaves"][key] = entry
+    _atomic_write(ckpt_dir / "MANIFEST.json",
+                  json.dumps(manifest, indent=1).encode())
+    return manifest
+
+
+def load_manifest(ckpt_dir: Path) -> dict:
+    return json.loads((ckpt_dir / "MANIFEST.json").read_text())
+
+
+def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True) -> np.ndarray:
+    """Reassemble one logical array from its shard chunks."""
+    shape = tuple(entry["shape"])
+    dtype = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" else None
+    # bfloat16 round-trips through jnp below; read raw bytes as uint16
+    import jax.numpy as jnp
+    jdt = jnp.dtype(entry["dtype"])
+    out = np.zeros(shape, dtype=jdt)
+    for s in entry["shards"]:
+        blob = (ckpt_dir / s["file"]).read_bytes()
+        if verify and zlib.crc32(blob) != s["crc32"]:
+            raise IOError(f"{s['file']}: crc mismatch")
+        raw = _DCTX.decompress(blob)
+        idx = tuple(slice(a, b) for a, b in s["index"])
+        window = out[idx].shape if idx else ()
+        chunk = np.frombuffer(raw, dtype=jdt).reshape(window or shape)
+        if idx:
+            out[idx] = chunk
+        else:
+            out = chunk.reshape(shape).copy()
+    return out
+
+
+def restore_tree(ckpt_dir: Path, template, verify: bool = True):
+    """Restore into the structure of `template` (values ignored; tree shape
+    and leaf order must match what was saved)."""
+    man = load_manifest(ckpt_dir)
+    keys = [k for k, _ in _leaf_paths(template)]
+    missing = [k for k in keys if k not in man["leaves"]]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}")
+    vals = [load_leaf(ckpt_dir, man["leaves"][k], verify) for k in keys]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def validate(ckpt_dir: Path) -> bool:
+    try:
+        man = load_manifest(ckpt_dir)
+        for entry in man["leaves"].values():
+            for s in entry["shards"]:
+                blob = (ckpt_dir / s["file"]).read_bytes()
+                if zlib.crc32(blob) != s["crc32"]:
+                    return False
+        return True
+    except (OSError, KeyError, json.JSONDecodeError):
+        return False

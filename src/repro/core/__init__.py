@@ -1,0 +1,17 @@
+"""The paper's primary contribution: implementation-agnostic MPI
+checkpoint/restart via proxies (DMTCP plugin model), adapted per DESIGN.md.
+
+Public surface:
+    MPI            — passive stub (plugin): full API incl. collectives
+    MPIJob         — runtime: launch, async checkpoint, restart
+    Coordinator    — DMTCP-style coordinator (drain counters, ckpt FSM)
+    transports     — "shm" and "tcp" (two 'MPI implementations')
+"""
+from repro.core.api import COMM_WORLD, MPI
+from repro.core.coordinator import Coordinator
+from repro.core.messages import ANY_SOURCE, ANY_TAG, Status
+from repro.core.runtime import MPIJob
+from repro.core.transport import TRANSPORTS, make_transport
+
+__all__ = ["MPI", "MPIJob", "Coordinator", "COMM_WORLD", "ANY_SOURCE",
+           "ANY_TAG", "Status", "TRANSPORTS", "make_transport"]

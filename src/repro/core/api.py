@@ -1,0 +1,483 @@
+"""The passive MPI stub (the paper's DMTCP plugin).
+
+Implements the paper's validated API — Init / Finalize / Comm_size /
+Comm_rank / Type_size / Send / Recv / Probe / Iprobe / Get_count — plus its
+"future work" list (§5/§7): Isend / Irecv / Test / Wait, the collectives
+(Bcast, Barrier, Scatter, Gather, Allgather, Reduce, Allreduce) built on
+Send/Recv plumbing, and communicator/group management with virtualized ids.
+
+Checkpoint-relevant rules implemented here (paper §4):
+  * every Recv/Probe/Iprobe consults the drained-message CACHE FIRST;
+  * administrative calls are LOGGED for replay;
+  * sent/received counters are maintained for the coordinator's drain
+    heuristic;
+  * a blocked Recv participates in checkpoint agreement via non-blocking
+    proposals (the pending-call re-issue of paper challenge 2 reduces to
+    cache-first matching after restart).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coordinator import Coordinator, PHASE_PENDING
+from repro.core.drain import MessageCache
+from repro.core.messages import (ANY_SOURCE, ANY_TAG, COLL_TAG_BASE, DATATYPES,
+                                 Status, pack, unpack)
+from repro.core.proxy import (CMD_POLL, CMD_REGISTER_COMM, CMD_REGISTER_RANK,
+                              CMD_SEND, CMD_UNREGISTER_COMM, ProxyChannel)
+from repro.core.replay import AdminLog
+from repro.core.virtualization import WORLD_VID, VirtualIds
+
+COMM_WORLD = WORLD_VID
+
+_OPS: dict = {
+    "sum": lambda a, b: a + b,
+    "max": np.maximum,
+    "min": np.minimum,
+    "prod": lambda a, b: a * b,
+}
+
+
+class CheckpointExit(Exception):
+    """Raised out of the step loop when a checkpoint requested exit."""
+
+
+class MPI:
+    def __init__(self, rank: int, n_ranks: int, channel: ProxyChannel,
+                 coordinator: Coordinator):
+        self.rank = rank
+        self.n = n_ranks
+        self.channel = channel
+        self.coord = coordinator
+        self.cache = MessageCache()
+        self.vids = VirtualIds(n_ranks)
+        self.admin = AdminLog()
+        self.sent = 0
+        self.received = 0
+        self.coll_seq: dict = {COMM_WORLD: 0}
+        self.step_idx = 0                 # maintained by the runtime
+        self._proposed_gen = -1
+        self._initialized = False
+
+    # ------------------------------------------------------------------ admin
+    def Init(self) -> None:
+        self.admin.append("init", (self.rank, self.n))
+        self.channel.call(CMD_REGISTER_RANK, self.rank, self.n)
+        self._initialized = True
+
+    def Finalize(self) -> None:
+        self.admin.append("finalize", ())
+        self._initialized = False
+
+    def Comm_size(self, comm: int = COMM_WORLD) -> int:
+        return self.vids.comms[comm].size()
+
+    def Comm_rank(self, comm: int = COMM_WORLD) -> int:
+        return self.vids.comms[comm].rank_of(self.rank)
+
+    @staticmethod
+    def Type_size(datatype: str) -> int:
+        return DATATYPES[datatype]
+
+    # ------------------------------------------------------- point to point
+    def _world_dst(self, dest: int, comm: int) -> int:
+        return self.vids.comms[comm].world_rank(dest)
+
+    def _report(self) -> None:
+        self.coord.report_counters(self.rank, self.sent, self.received)
+
+    def Send(self, value: Any, dest: int, tag: int = 0,
+             comm: int = COMM_WORLD) -> None:
+        assert 0 <= tag < COLL_TAG_BASE, "user tags must be < COLL_TAG_BASE"
+        self._send_raw(value, dest, tag, comm)
+
+    def _send_raw(self, value: Any, dest: int, tag: int, comm: int) -> None:
+        payload, dtype, count = pack(value)
+        self.channel.call(CMD_SEND, self._world_dst(dest, comm), tag, comm,
+                          payload, dtype, count)
+        self.sent += 1
+        self._report()
+
+    def _pump_once(self) -> bool:
+        env = self.channel.call(CMD_POLL)
+        if env is None:
+            return False
+        self.cache.put(env)
+        self.received += 1
+        self._report()
+        return True
+
+    def _participate_if_pending(self) -> None:
+        """Inside a blocked call: keep checkpoint agreement deadlock-free."""
+        if (self.coord.phase == PHASE_PENDING
+                and self._proposed_gen < self.coord.generation):
+            self.coord.propose_ckpt_step(self.rank, self.step_idx + 1)
+            self._proposed_gen = self.coord.generation
+
+    def Recv(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
+             comm: int = COMM_WORLD, timeout: float = 120.0,
+             _status_out: Optional[Status] = None) -> Any:
+        src_world = (source if source in (ANY_SOURCE,)
+                     else self.vids.comms[comm].world_rank(source))
+        deadline = time.time() + timeout
+        while True:
+            env = self.cache.match(src_world, tag, comm)
+            if env is not None:
+                if _status_out is not None:
+                    _status_out.source = env.src
+                    _status_out.tag = env.tag
+                    _status_out.count = env.count
+                    _status_out.dtype = env.dtype
+                return unpack(env)
+            if not self._pump_once():
+                self._participate_if_pending()
+                if time.time() > deadline:
+                    raise TimeoutError(
+                        f"rank {self.rank}: Recv(src={source}, tag={tag}) "
+                        f"timed out")
+                time.sleep(0.0002)
+
+    def Probe(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
+              comm: int = COMM_WORLD, timeout: float = 120.0) -> Status:
+        deadline = time.time() + timeout
+        while True:
+            flag, status = self.Iprobe(source, tag, comm)
+            if flag:
+                return status
+            self._participate_if_pending()
+            if time.time() > deadline:
+                raise TimeoutError("Probe timeout")
+            time.sleep(0.0002)
+
+    def Iprobe(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
+               comm: int = COMM_WORLD) -> Tuple[bool, Optional[Status]]:
+        src_world = (source if source == ANY_SOURCE
+                     else self.vids.comms[comm].world_rank(source))
+        self._pump_once()
+        env = self.cache.match(src_world, tag, comm, remove=False)
+        if env is None:
+            return False, None
+        return True, Status(source=env.src, tag=env.tag, count=env.count,
+                            dtype=env.dtype)
+
+    @staticmethod
+    def Get_count(status: Status, datatype: str) -> int:
+        return status.get_count(datatype)
+
+    # --------------------------------------------------------- non-blocking
+    def Isend(self, value: Any, dest: int, tag: int = 0,
+              comm: int = COMM_WORLD) -> int:
+        """Buffered-send semantics: payload handed to the proxy immediately;
+        the request completes at once (paper §6 notes Isend needs caching of
+        additional data — the proxy's outbound path IS that buffer here)."""
+        self.Send(value, dest, tag, comm)
+        req = self.vids.new_request("send", self.rank, tag, comm)
+        req.done = True
+        return req.vid
+
+    def Irecv(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
+              comm: int = COMM_WORLD) -> int:
+        src_world = (source if source == ANY_SOURCE
+                     else self.vids.comms[comm].world_rank(source))
+        req = self.vids.new_request("recv", src_world, tag, comm)
+        return req.vid
+
+    def Test(self, request: int) -> Tuple[bool, Any]:
+        req = self.vids.requests[request]
+        if req.done:
+            return True, req.value
+        self._pump_once()
+        env = self.cache.match(req.src, req.tag, req.comm_vid)
+        if env is None:
+            return False, None
+        req.done = True
+        req.value = unpack(env)
+        req.status = Status(source=env.src, tag=env.tag, count=env.count,
+                            dtype=env.dtype)
+        return True, req.value
+
+    def Wait(self, request: int, timeout: float = 120.0) -> Any:
+        deadline = time.time() + timeout
+        while True:
+            done, val = self.Test(request)
+            if done:
+                self.vids.requests.pop(request, None)
+                return val
+            self._participate_if_pending()
+            if time.time() > deadline:
+                raise TimeoutError("Wait timeout")
+            time.sleep(0.0002)
+
+    # ------------------------------------------------------------ collectives
+    def _ctag(self, comm: int, op_code: int) -> int:
+        seq = self.coll_seq.get(comm, 0)
+        self.coll_seq[comm] = seq + 1
+        return COLL_TAG_BASE + (seq << 4) + op_code
+
+    def Barrier(self, comm: int = COMM_WORLD) -> None:
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 0)
+        k = 1
+        while k < n:
+            self._send_raw(b"", (me + k) % n, tag, comm)
+            self.Recv(source=(me - k) % n, tag=tag, comm=comm)
+            k *= 2
+
+    def Bcast(self, value: Any, root: int = 0, comm: int = COMM_WORLD) -> Any:
+        """Binomial-tree broadcast."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 1)
+        rel = (me - root) % n
+        k = 1
+        while k < n:
+            if rel < k:
+                if rel + k < n:
+                    self._send_raw(value, (root + rel + k) % n, tag, comm)
+            elif rel < 2 * k:
+                value = self.Recv(source=(root + rel - k) % n, tag=tag,
+                                  comm=comm)
+            k *= 2
+        return value
+
+    def Scatter(self, values: Optional[List[Any]], root: int = 0,
+                comm: int = COMM_WORLD) -> Any:
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 2)
+        if me == root:
+            assert values is not None and len(values) == n
+            for r in range(n):
+                if r != me:
+                    self._send_raw(values[r], r, tag, comm)
+            return values[me]
+        return self.Recv(source=root, tag=tag, comm=comm)
+
+    def Gather(self, value: Any, root: int = 0,
+               comm: int = COMM_WORLD) -> Optional[List[Any]]:
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 3)
+        if me == root:
+            out: List[Any] = [None] * n
+            out[me] = value
+            for _ in range(n - 1):
+                st = Status()
+                v = self.Recv(source=ANY_SOURCE, tag=tag, comm=comm,
+                              _status_out=st)
+                out[info.ranks.index(st.source)] = v
+            return out
+        self._send_raw(value, root, tag, comm)
+        return None
+
+    def Allgather(self, value: Any, comm: int = COMM_WORLD) -> List[Any]:
+        """Ring allgather (n-1 steps)."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 4)
+        out: List[Any] = [None] * n
+        out[me] = value
+        cur, cur_idx = value, me
+        for _ in range(n - 1):
+            self._send_raw((cur_idx, cur), (me + 1) % n, tag, comm)
+            cur_idx, cur = self.Recv(source=(me - 1) % n, tag=tag, comm=comm)
+            out[cur_idx] = cur
+        return out
+
+    def Reduce(self, value: Any, op: str = "sum", root: int = 0,
+               comm: int = COMM_WORLD) -> Any:
+        """Binomial-tree reduce."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        tag = self._ctag(comm, 5)
+        rel = (me - root) % n
+        fn = _OPS[op]
+        acc = value
+        k = 1
+        while k < n:
+            if rel % (2 * k) == 0:
+                if rel + k < n:
+                    other = self.Recv(source=(root + rel + k) % n, tag=tag,
+                                      comm=comm)
+                    acc = fn(acc, other)
+            elif rel % (2 * k) == k:
+                self._send_raw(acc, (root + rel - k) % n, tag, comm)
+                return None
+            k *= 2
+        return acc if rel == 0 else None
+
+    def Allreduce(self, value: Any, op: str = "sum",
+                  comm: int = COMM_WORLD) -> Any:
+        """Ring reduce-scatter + ring allgather for ndarrays (the real HPC
+        algorithm — also the data-parallel gradient path in
+        distributed/proxy_grad.py); tree reduce + bcast otherwise."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        if n == 1:
+            return value
+        if not isinstance(value, np.ndarray) or value.size < n:
+            acc = self.Reduce(value, op, 0, comm)
+            return self.Bcast(acc, 0, comm)
+        tag_rs = self._ctag(comm, 6)
+        tag_ag = self._ctag(comm, 7)
+        fn = _OPS[op]
+        flat = value.reshape(-1)
+        chunks = np.array_split(flat, n)
+        chunks = [c.copy() for c in chunks]
+        # reduce-scatter
+        for step in range(n - 1):
+            send_idx = (me - step) % n
+            recv_idx = (me - step - 1) % n
+            self._send_raw(chunks[send_idx], (me + 1) % n, tag_rs, comm)
+            incoming = self.Recv(source=(me - 1) % n, tag=tag_rs, comm=comm)
+            chunks[recv_idx] = fn(chunks[recv_idx], incoming)
+        # allgather
+        for step in range(n - 1):
+            send_idx = (me - step + 1) % n
+            recv_idx = (me - step) % n
+            self._send_raw(chunks[send_idx], (me + 1) % n, tag_ag, comm)
+            chunks[recv_idx] = self.Recv(source=(me - 1) % n, tag=tag_ag,
+                                         comm=comm)
+        return np.concatenate(chunks).reshape(value.shape)
+
+    def Sendrecv(self, value: Any, dest: int, sendtag: int, source: int,
+                 recvtag: int, comm: int = COMM_WORLD) -> Any:
+        """Combined send+receive (deadlock-free here: sends are buffered
+        through the proxy).  Also used internally with collective tags."""
+        self._send_raw(value, dest, sendtag, comm)
+        return self.Recv(source=source, tag=recvtag, comm=comm)
+
+    def Alltoall(self, values: List[Any], comm: int = COMM_WORLD) -> List[Any]:
+        """values[j] goes to comm-rank j; returns what each rank sent me."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        assert len(values) == n
+        tag = self._ctag(comm, 8)
+        out: List[Any] = [None] * n
+        out[me] = values[me]
+        for off in range(1, n):
+            dst = (me + off) % n
+            src = (me - off) % n
+            out[src] = self.Sendrecv(values[dst], dst, tag, src, tag, comm)
+        return out
+
+    def Reduce_scatter(self, value: Any, op: str = "sum",
+                       comm: int = COMM_WORLD) -> Any:
+        """Ring reduce-scatter: rank i returns the fully-reduced block i of
+        value split into comm_size chunks along axis 0."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
+        chunks = [c.copy() for c in np.array_split(np.asarray(value), n)]
+        if n == 1:
+            return chunks[0]
+        fn = _OPS[op]
+        tag = self._ctag(comm, 9)
+        for step in range(n - 1):
+            send_idx = (me - step) % n
+            recv_idx = (me - step - 1) % n
+            self._send_raw(chunks[send_idx], (me + 1) % n, tag, comm)
+            chunks[recv_idx] = fn(chunks[recv_idx],
+                                  self.Recv(source=(me - 1) % n, tag=tag,
+                                            comm=comm))
+        # after the ring, block (me+1)%n is complete here; route it home
+        tag2 = self._ctag(comm, 10)
+        owner = (me + 1) % n
+        mine = self.Sendrecv(chunks[owner], owner, tag2, (me - 1) % n, tag2,
+                             comm)
+        return mine
+
+    # ------------------------------------------------- communicators / groups
+    def Comm_group(self, comm: int = COMM_WORLD) -> int:
+        info = self.vids.comms[comm]
+        g = self.vids.new_group(info.ranks)
+        self.admin.append("group_incl", (tuple(info.ranks),), g.vid)
+        return g.vid
+
+    def Group_incl(self, group: int, ranks: List[int]) -> int:
+        base = self.vids.groups[group]
+        sub = tuple(base.ranks[r] for r in ranks)
+        g = self.vids.new_group(sub)
+        self.admin.append("group_incl", (sub,), g.vid)
+        return g.vid
+
+    def Comm_create_group(self, group: int, comm: int = COMM_WORLD) -> Optional[int]:
+        g = self.vids.groups[group]
+        if self.rank not in g.ranks:
+            return None
+        c = self.vids.new_comm(g.ranks)
+        self.admin.append("comm_create", (tuple(g.ranks),), c.vid)
+        self.channel.call(CMD_REGISTER_COMM, c.vid, tuple(g.ranks))
+        self.coll_seq.setdefault(c.vid, 0)
+        return c.vid
+
+    def Comm_split(self, color: int, key: int, comm: int = COMM_WORLD) -> int:
+        """Implemented with Allgather plumbing (paper §6: 'a simple matter
+        of plumbing')."""
+        info = self.vids.comms[comm]
+        me = info.rank_of(self.rank)
+        all_ck = self.Allgather((color, key, self.rank), comm)
+        mine = sorted((k, wr) for c, k, wr in all_ck if c == color)
+        ranks = tuple(wr for _, wr in mine)
+        c = self.vids.new_comm(ranks)
+        self.admin.append("comm_create", (ranks,), c.vid)
+        self.channel.call(CMD_REGISTER_COMM, c.vid, ranks)
+        self.coll_seq.setdefault(c.vid, 0)
+        return c.vid
+
+    def Group_free(self, group: int) -> None:
+        self.vids.free_group(group)
+        self.admin.append("group_free", (), group)
+
+    def Comm_free(self, comm: int) -> None:
+        self.vids.free_comm(comm)
+        self.coll_seq.pop(comm, None)
+        self.admin.append("comm_free", (), comm)
+        self.channel.call(CMD_UNREGISTER_COMM, comm)
+
+    # ------------------------------------------------------------- checkpoint
+    def snapshot(self) -> dict:
+        return {
+            "rank": self.rank,
+            "n": self.n,
+            "cache": self.cache.snapshot(),
+            "vids": self.vids.snapshot(),
+            "admin": self.admin.snapshot(),
+            "sent": self.sent,
+            "received": self.received,
+            "coll_seq": dict(self.coll_seq),
+        }
+
+    def restore(self, snap: dict) -> None:
+        assert snap["rank"] == self.rank and snap["n"] == self.n
+        self.cache = MessageCache.restore(snap["cache"])
+        self.admin = AdminLog.restore(snap["admin"])
+        self.vids = VirtualIds(self.n)
+        # replay admin ops against the FRESH proxy (any transport), then
+        # overlay exact virtual-id tables (incl. pending recvs)
+        self.admin.replay(self.vids, _ProxyFacade(self.channel))
+        self.vids.restore(snap["vids"], self.n)
+        self.sent = snap["sent"]
+        self.received = snap["received"]
+        self.coll_seq = dict(snap["coll_seq"])
+        self._initialized = True
+        self._report()
+
+
+class _ProxyFacade:
+    """Adapter giving AdminLog.replay proxy-method names over the channel."""
+
+    def __init__(self, channel: ProxyChannel):
+        self.channel = channel
+
+    def register_rank(self, rank: int, n: int) -> None:
+        self.channel.call(CMD_REGISTER_RANK, rank, n)
+
+    def register_comm(self, vid: int, ranks: tuple) -> None:
+        self.channel.call(CMD_REGISTER_COMM, vid, ranks)
+
+    def unregister_comm(self, vid: int) -> None:
+        self.channel.call(CMD_UNREGISTER_COMM, vid)

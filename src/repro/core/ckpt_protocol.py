@@ -1,0 +1,90 @@
+"""Per-rank checkpoint images + job manifest (paper §3/§4).
+
+An image contains ONLY application-boundary state: app payload, drained
+message cache, admin log, virtual-id tables, counters.  No transport, no
+proxy, no sockets, no thread state — grep this file for 'transport': the
+only hit is the manifest's *informational* record of which transport was in
+use (never required at restore).
+
+Write protocol: tmp file + crc32 + atomic rename; the manifest commits last
+so a crash mid-checkpoint leaves the previous checkpoint valid."""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+import zlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+
+@dataclass
+class RankImage:
+    rank: int
+    n_ranks: int
+    step_idx: int
+    mpi_state: dict              # api.MPI.snapshot()
+    app_state: bytes             # pickled user state (opaque)
+
+    def to_bytes(self) -> bytes:
+        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "RankImage":
+        return pickle.loads(b)
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    tmp = path.with_suffix(".tmp")
+    tmp.write_bytes(data)
+    os.replace(tmp, path)
+
+
+def save_rank_image(ckpt_dir: Path, image: RankImage) -> dict:
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    blob = image.to_bytes()
+    crc = zlib.crc32(blob)
+    path = ckpt_dir / f"rank_{image.rank:05d}.img"
+    _atomic_write(path, blob)
+    return {"file": path.name, "crc32": crc, "bytes": len(blob),
+            "step_idx": image.step_idx}
+
+
+def commit_manifest(ckpt_dir: Path, entries: Dict[int, dict],
+                    meta: Optional[dict] = None) -> None:
+    manifest = {
+        "version": 1,
+        "time": time.time(),
+        "n_ranks": len(entries),
+        "ranks": {str(r): e for r, e in sorted(entries.items())},
+        "meta": meta or {},
+    }
+    _atomic_write(ckpt_dir / "MANIFEST.json",
+                  json.dumps(manifest, indent=1).encode())
+
+
+def load_manifest(ckpt_dir: Path) -> dict:
+    return json.loads((ckpt_dir / "MANIFEST.json").read_text())
+
+
+def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True) -> RankImage:
+    man = load_manifest(ckpt_dir)
+    ent = man["ranks"][str(rank)]
+    blob = (ckpt_dir / ent["file"]).read_bytes()
+    if verify and zlib.crc32(blob) != ent["crc32"]:
+        raise IOError(f"rank {rank} image failed crc32 validation")
+    return RankImage.from_bytes(blob)
+
+
+def checkpoint_valid(ckpt_dir: Path) -> bool:
+    try:
+        man = load_manifest(ckpt_dir)
+        for r, ent in man["ranks"].items():
+            blob = (ckpt_dir / ent["file"]).read_bytes()
+            if zlib.crc32(blob) != ent["crc32"]:
+                return False
+        return True
+    except (OSError, KeyError, json.JSONDecodeError):
+        return False

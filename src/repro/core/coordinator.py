@@ -1,0 +1,176 @@
+"""DMTCP-style coordinator: checkpoint orchestration FSM + the global
+sent/received counter aggregation that detects drain completion.
+
+Phases:  RUN -> DRAIN -> SNAPSHOT -> (RESUME | EXIT)
+
+The coordinator never sees application data — only counters and phase
+acknowledgements (exactly the DMTCP coordinator's role in the paper)."""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PHASE_RUN = "run"
+PHASE_PENDING = "pending"      # ranks converge on a common checkpoint step
+PHASE_DRAIN = "drain"
+PHASE_SNAPSHOT = "snapshot"
+PHASE_RESUME = "resume"
+PHASE_EXIT = "exit"
+
+
+@dataclass
+class RankCounters:
+    sent: int = 0
+    received: int = 0
+
+
+class Coordinator:
+    def __init__(self, n_ranks: int):
+        self.n = n_ranks
+        self.phase = PHASE_RUN
+        self._lock = threading.Condition()
+        self._counters: Dict[int, RankCounters] = {
+            r: RankCounters() for r in range(n_ranks)}
+        self._drain_ack: set = set()
+        self._snap_ack: set = set()
+        self._resume_after_snapshot = True
+        self._barrier_gen = 0
+        self._barrier_count = 0
+        self._finished: set = set()
+        self.stats = {"drain_rounds": 0, "drain_wall_s": 0.0,
+                      "drained_messages": 0, "checkpoints": 0}
+
+    def mark_finished(self, rank: int) -> None:
+        with self._lock:
+            self._finished.add(rank)
+            self._lock.notify_all()
+
+    def all_finished(self) -> bool:
+        with self._lock:
+            return len(self._finished) == self.n and self.phase == PHASE_RUN
+
+    # ---- counters (the Σsent == Σreceived heuristic) -----------------------
+    def report_counters(self, rank: int, sent: int, received: int) -> None:
+        with self._lock:
+            c = self._counters[rank]
+            c.sent, c.received = sent, received
+            self._lock.notify_all()
+
+    def network_empty(self) -> bool:
+        with self._lock:
+            s = sum(c.sent for c in self._counters.values())
+            r = sum(c.received for c in self._counters.values())
+            return s == r
+
+    # ---- checkpoint FSM -----------------------------------------------------
+    def request_checkpoint(self, resume: bool = True) -> None:
+        """Asynchronous, DMTCP-style: may be called from any thread at any
+        time.  Ranks converge on ckpt_step = max(next step index across
+        ranks), run up to it (so every send a pre-ckpt_step recv depends on
+        is issued — BSP per-step communication closure, DESIGN.md §2), then
+        drain."""
+        with self._lock:
+            if self.phase != PHASE_RUN:
+                raise RuntimeError(f"checkpoint during phase {self.phase}")
+            self._resume_after_snapshot = resume
+            self._drain_ack.clear()
+            self._snap_ack.clear()
+            self._proposals: Dict[int, int] = {}
+            self.ckpt_step: Optional[int] = None
+            self.phase = PHASE_PENDING
+            self._drain_t0 = time.time()
+            self.stats["checkpoints"] += 1
+            self._lock.notify_all()
+
+    def propose_ckpt_step(self, rank: int, next_boundary: int) -> Optional[int]:
+        """NON-BLOCKING.  A rank proposes the next step boundary it will
+        reach (called at a boundary, or from inside a blocked Recv with
+        current_step+1 — that is what makes agreement deadlock-free when
+        ranks run at different speeds).  Returns the agreed step once all
+        ranks have proposed, else None.  First proposal per rank wins."""
+        with self._lock:
+            if self.phase not in (PHASE_PENDING, PHASE_DRAIN):
+                return self.ckpt_step
+            self._proposals.setdefault(rank, next_boundary)
+            if self.ckpt_step is None and len(self._proposals) == self.n:
+                self.ckpt_step = max(self._proposals.values())
+                self.phase = PHASE_DRAIN
+                self._lock.notify_all()
+            return self.ckpt_step
+
+    @property
+    def generation(self) -> int:
+        return self.stats["checkpoints"]
+
+    def ack_drained(self, rank: int) -> None:
+        """Rank reports: at step boundary, no un-pumped traffic visible."""
+        with self._lock:
+            self._drain_ack.add(rank)
+            self._lock.notify_all()
+
+    def unack_drained(self, rank: int) -> None:
+        with self._lock:
+            self._drain_ack.discard(rank)
+
+    def drain_complete(self) -> bool:
+        """All ranks quiesced AND the network is globally empty."""
+        with self._lock:
+            if len(self._drain_ack) < self.n:
+                return False
+            s = sum(c.sent for c in self._counters.values())
+            r = sum(c.received for c in self._counters.values())
+            if s == r:
+                if self.phase == PHASE_DRAIN:
+                    self.phase = PHASE_SNAPSHOT
+                    self.stats["drain_wall_s"] += time.time() - self._drain_t0
+                    self._lock.notify_all()
+                return True
+            self.stats["drain_rounds"] += 1
+            return False
+
+    def ack_snapshot(self, rank: int) -> None:
+        with self._lock:
+            self._snap_ack.add(rank)
+            if len(self._snap_ack) == self.n:
+                self.phase = (PHASE_RESUME if self._resume_after_snapshot
+                              else PHASE_EXIT)
+                self._lock.notify_all()
+            self._lock.notify_all()
+
+    def resume_running(self, rank: int) -> None:
+        with self._lock:
+            if self.phase == PHASE_RESUME:
+                self._drain_ack.discard(rank)
+                if not self._drain_ack:
+                    self.phase = PHASE_RUN
+                    self._lock.notify_all()
+
+    def wait_phase(self, *phases: str, timeout: float = 60.0) -> str:
+        deadline = time.time() + timeout
+        with self._lock:
+            while self.phase not in phases:
+                left = deadline - time.time()
+                if left <= 0:
+                    raise TimeoutError(
+                        f"waiting for {phases}, still {self.phase}")
+                self._lock.wait(left)
+            return self.phase
+
+    # ---- generic barrier -----------------------------------------------------
+    def barrier(self, rank: int, timeout: float = 60.0) -> None:
+        with self._lock:
+            gen = self._barrier_gen
+            self._barrier_count += 1
+            if self._barrier_count == self.n:
+                self._barrier_count = 0
+                self._barrier_gen += 1
+                self._lock.notify_all()
+                return
+            deadline = time.time() + timeout
+            while self._barrier_gen == gen:
+                left = deadline - time.time()
+                if left <= 0:
+                    raise TimeoutError("barrier timeout")
+                self._lock.wait(left)

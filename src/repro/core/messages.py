@@ -1,0 +1,84 @@
+"""Wire-level message envelope + MPI datatype table.
+
+The Envelope is the ONLY thing that crosses the transport; payloads are
+opaque bytes to the proxy (the proxy never interprets application data —
+part of the paper's agnosticism argument).
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+ANY_SOURCE = -1
+ANY_TAG = -1
+
+# reserved tag space for collectives (user tags must be < COLL_TAG_BASE)
+COLL_TAG_BASE = 1 << 24
+
+# MPI basic datatypes -> byte size (paper API: MPI_Type_size)
+DATATYPES = {
+    "MPI_BYTE": 1, "MPI_CHAR": 1, "MPI_INT": 4, "MPI_LONG": 8,
+    "MPI_FLOAT": 4, "MPI_DOUBLE": 8, "MPI_INT32_T": 4, "MPI_INT64_T": 8,
+    "MPI_UINT8_T": 1, "MPI_UINT32_T": 4, "MPI_UINT64_T": 8,
+}
+
+_NP_TO_MPI = {
+    np.dtype(np.uint8): "MPI_BYTE", np.dtype(np.int32): "MPI_INT",
+    np.dtype(np.int64): "MPI_LONG", np.dtype(np.float32): "MPI_FLOAT",
+    np.dtype(np.float64): "MPI_DOUBLE",
+}
+
+
+@dataclass(frozen=True)
+class Envelope:
+    src: int                 # world ranks
+    dst: int
+    tag: int
+    comm_vid: int
+    seq: int                 # per (src,dst) monotonically increasing
+    payload: bytes
+    dtype: str = "MPI_BYTE"
+    count: int = 0
+
+    def to_bytes(self) -> bytes:
+        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "Envelope":
+        return pickle.loads(b)
+
+
+def pack(obj: Any) -> tuple[bytes, str, int]:
+    """Application value -> (payload, mpi_dtype, count)."""
+    if isinstance(obj, np.ndarray):
+        dt = _NP_TO_MPI.get(obj.dtype)
+        if dt is not None:
+            return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL), dt, obj.size
+    raw = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return raw, "MPI_BYTE", len(raw)
+
+
+def unpack(env: Envelope) -> Any:
+    return pickle.loads(env.payload)
+
+
+@dataclass
+class Status:
+    """MPI_Status analogue (virtualized — no backend structure leaks)."""
+    source: int = ANY_SOURCE
+    tag: int = ANY_TAG
+    count: int = 0
+    dtype: str = "MPI_BYTE"
+
+    def get_count(self, datatype: str) -> int:
+        """MPI_Get_count semantics."""
+        size = DATATYPES[datatype]
+        if self.dtype == "MPI_BYTE" and datatype != "MPI_BYTE":
+            return self.count // size
+        if datatype == self.dtype:
+            return self.count
+        total = self.count * DATATYPES[self.dtype]
+        return total // size

@@ -1,0 +1,106 @@
+"""The MPI proxy — owner of the ACTIVE transport (paper §3).
+
+Each rank's plugin talks to its proxy exclusively through a ProxyChannel
+(two queues = the paper's "single, ephemeral interface").  The proxy thread
+pumps commands; it holds transport handles, per-destination sequence
+numbers and comm-addressing tables — ALL of which are rebuilt from the
+admin log on restart and are NEVER serialized into a checkpoint.  The
+assertion of the architecture: ``grep`` finds no transport reference in
+api.py, ckpt_protocol.py or runtime.py rank images.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.messages import Envelope
+from repro.core.transport import Transport
+
+CMD_SEND = "send"
+CMD_POLL = "poll"
+CMD_REGISTER_RANK = "register_rank"
+CMD_REGISTER_COMM = "register_comm"
+CMD_UNREGISTER_COMM = "unregister_comm"
+CMD_STOP = "stop"
+
+
+@dataclass
+class ProxyChannel:
+    """The checkpoint-boundary interface.  At checkpoint time this must be
+    EMPTY (the drain protocol guarantees it); nothing here is serialized."""
+    requests: "queue.SimpleQueue" = None
+    responses: "queue.SimpleQueue" = None
+
+    def __post_init__(self):
+        self.requests = queue.SimpleQueue()
+        self.responses = queue.SimpleQueue()
+
+    def call(self, cmd: str, *args) -> Any:
+        self.requests.put((cmd, args))
+        ok, val = self.responses.get()
+        if not ok:
+            raise val
+        return val
+
+
+class MPIProxy(threading.Thread):
+    """Active-library process stand-in (thread; see DESIGN.md §2 assumption
+    notes).  Holds ONLY reconstructible state."""
+
+    def __init__(self, rank: int, transport: Transport, channel: ProxyChannel):
+        super().__init__(daemon=True, name=f"mpi-proxy-{rank}")
+        self.rank = rank
+        self.transport = transport
+        self.channel = channel
+        self._seq: Dict[int, int] = {}          # dst -> next seq
+        self._comms: Dict[int, Tuple[int, ...]] = {}
+        self._registered = False
+
+    # ---- command handlers (executed on the proxy thread) -------------------
+    def register_rank(self, rank: int, n_ranks: int) -> None:
+        self._registered = True
+
+    def register_comm(self, vid: int, ranks: Tuple[int, ...]) -> None:
+        self._comms[vid] = tuple(ranks)
+
+    def unregister_comm(self, vid: int) -> None:
+        self._comms.pop(vid, None)
+
+    def _do_send(self, dst: int, tag: int, comm_vid: int, payload: bytes,
+                 dtype: str, count: int) -> None:
+        seq = self._seq.get(dst, 0)
+        self._seq[dst] = seq + 1
+        env = Envelope(src=self.rank, dst=dst, tag=tag, comm_vid=comm_vid,
+                       seq=seq, payload=payload, dtype=dtype, count=count)
+        self.transport.send(env)
+
+    def _do_poll(self) -> Optional[Envelope]:
+        return self.transport.poll(self.rank)
+
+    # ---- pump ---------------------------------------------------------------
+    def run(self) -> None:
+        while True:
+            cmd, args = self.channel.requests.get()
+            try:
+                if cmd == CMD_STOP:
+                    self.channel.responses.put((True, None))
+                    return
+                if cmd == CMD_SEND:
+                    self.channel.responses.put((True, self._do_send(*args)))
+                elif cmd == CMD_POLL:
+                    self.channel.responses.put((True, self._do_poll()))
+                elif cmd == CMD_REGISTER_RANK:
+                    self.channel.responses.put((True, self.register_rank(*args)))
+                elif cmd == CMD_REGISTER_COMM:
+                    self.channel.responses.put((True, self.register_comm(*args)))
+                elif cmd == CMD_UNREGISTER_COMM:
+                    self.channel.responses.put((True, self.unregister_comm(*args)))
+                else:
+                    raise ValueError(f"unknown proxy command {cmd!r}")
+            except Exception as e:  # surfaced to the caller
+                self.channel.responses.put((False, e))
+
+    def stop(self) -> None:
+        self.channel.call(CMD_STOP)

@@ -1,0 +1,229 @@
+"""MPIJob — launch ranks, drive the paper's checkpoint FSM, restart.
+
+App contract (DESIGN.md §2 assumption notes):
+  * an application is ``init_fn(mpi) -> state`` plus
+    ``step_fn(mpi, state, step_idx) -> state`` run for a number of steps;
+  * messages received in step k were sent in steps <= k (BSP-style
+    communication closure) — sends may freely cross checkpoint boundaries
+    (that IS the drained in-flight case the paper is about).
+
+Checkpointing is ASYNCHRONOUS like DMTCP's coordinator: call
+``job.checkpoint(dir)`` from any thread while the job runs; ranks agree on
+a common boundary step, run up to it (draining the network), snapshot, and
+resume or exit.  ``MPIJob.restart`` reconstructs the job from images on ANY
+transport — checkpoint under shm, restart under tcp is the paper's §7
+cross-implementation restart."""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.api import MPI
+from repro.core.ckpt_protocol import (RankImage, commit_manifest,
+                                      load_manifest, load_rank_image,
+                                      save_rank_image)
+from repro.core.coordinator import (Coordinator, PHASE_DRAIN, PHASE_EXIT,
+                                    PHASE_PENDING, PHASE_RESUME, PHASE_RUN,
+                                    PHASE_SNAPSHOT)
+from repro.core.proxy import MPIProxy, ProxyChannel
+from repro.core.transport import make_transport
+
+
+class MPIJob:
+    def __init__(self, n_ranks: int,
+                 step_fn: Callable[[MPI, Any, int], Any],
+                 init_fn: Callable[[MPI], Any],
+                 transport: str = "shm",
+                 heartbeat_timeout: float = 5.0):
+        self.n = n_ranks
+        self.step_fn = step_fn
+        self.init_fn = init_fn
+        self.transport_name = transport
+        self.coord = Coordinator(n_ranks)
+        self.transport = make_transport(transport)
+        self.transport.start(n_ranks)
+        self.channels = [ProxyChannel() for _ in range(n_ranks)]
+        self.proxies = [MPIProxy(r, self.transport, self.channels[r])
+                        for r in range(n_ranks)]
+        for p in self.proxies:
+            p.start()
+        self.mpis = [MPI(r, n_ranks, self.channels[r], self.coord)
+                     for r in range(n_ranks)]
+        self.states: List[Any] = [None] * n_ranks
+        self.start_steps = [0] * n_ranks
+        self.results: List[Any] = [None] * n_ranks
+        self.errors: Dict[int, BaseException] = {}
+        self._ckpt_dir: Optional[Path] = None
+        self._ckpt_meta: Dict[int, dict] = {}
+        self._ckpt_lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self._restored = False
+        self._trigger: Optional[tuple] = None   # (step, dir, resume)
+        from repro.distributed.faults import (HeartbeatMonitor,
+                                              StragglerTracker)
+        self.heartbeat = HeartbeatMonitor(n_ranks, timeout_s=heartbeat_timeout)
+        self.stragglers = StragglerTracker(n_ranks)
+
+    # ------------------------------------------------------------------ run
+    def _rank_main(self, rank: int, n_steps: int) -> None:
+        mpi = self.mpis[rank]
+        try:
+            if not self._restored:
+                mpi.Init()
+                state = self.init_fn(mpi)
+            else:
+                state = self.states[rank]
+            # run() semantics are absolute: run(N) executes steps [start, N)
+            step = self.start_steps[rank]
+            end = n_steps
+            while step < end:
+                mpi.step_idx = step
+                trig = self._trigger
+                if (trig is not None and rank == 0 and step >= trig[0]
+                        and self.coord.phase == PHASE_RUN):
+                    self._trigger = None
+                    self.checkpoint(trig[1], resume=trig[2])
+                phase = self.coord.phase
+                if phase in (PHASE_PENDING, PHASE_DRAIN):
+                    agreed = self.coord.propose_ckpt_step(rank, step)
+                    mpi._proposed_gen = self.coord.generation
+                    if agreed is not None and step >= agreed:
+                        should_exit = self._do_checkpoint(rank, mpi, state,
+                                                          step)
+                        if should_exit:
+                            self.states[rank] = state
+                            return
+                        continue
+                    if agreed is None:
+                        # wait for agreement; serve nothing (at boundary)
+                        time.sleep(0.0002)
+                        continue
+                t_step = time.time()
+                state = self.step_fn(mpi, state, step)
+                self.heartbeat.ping(rank)
+                self.stragglers.record(rank, time.time() - t_step)
+                step += 1
+            self.states[rank] = state
+            self.results[rank] = state
+            # keep serving the checkpoint FSM until every rank is done —
+            # an async checkpoint may land while peers are still running
+            self.coord.mark_finished(rank)
+            while not self.coord.all_finished():
+                self.heartbeat.ping(rank)    # alive while serving the FSM
+                if self.coord.phase in (PHASE_PENDING, PHASE_DRAIN):
+                    mpi.step_idx = step
+                    agreed = self.coord.propose_ckpt_step(rank, step)
+                    mpi._proposed_gen = self.coord.generation
+                    if agreed is not None and step >= agreed:
+                        if self._do_checkpoint(rank, mpi, state, step):
+                            return
+                        continue
+                time.sleep(0.0005)
+        except BaseException as e:  # noqa: BLE001 - surfaced to driver
+            self.errors[rank] = e
+            raise
+
+    def _do_checkpoint(self, rank: int, mpi: MPI, state: Any,
+                       step: int) -> bool:
+        """Drain -> snapshot -> resume/exit.  Returns True if job exits."""
+        coord = self.coord
+        while coord.phase == PHASE_DRAIN:
+            pumped = mpi._pump_once()
+            coord.ack_drained(rank)
+            coord.drain_complete()
+            if not pumped:
+                time.sleep(0.0002)
+        # messages that crossed the checkpoint boundary (restored from cache)
+        coord.stats["drained_messages"] += len(mpi.cache)
+        # SNAPSHOT
+        image = RankImage(rank=rank, n_ranks=self.n, step_idx=step,
+                          mpi_state=mpi.snapshot(),
+                          app_state=pickle.dumps(state))
+        entry = save_rank_image(self._ckpt_dir, image)
+        with self._ckpt_lock:
+            self._ckpt_meta[rank] = entry
+            if len(self._ckpt_meta) == self.n:
+                commit_manifest(self._ckpt_dir, self._ckpt_meta,
+                                meta={"transport": self.transport_name,
+                                      "step": step})
+        coord.ack_snapshot(rank)
+        phase = coord.wait_phase(PHASE_RESUME, PHASE_EXIT)
+        if phase == PHASE_EXIT:
+            return True
+        coord.resume_running(rank)
+        coord.wait_phase(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
+        return False
+
+    def run(self, n_steps: int, timeout: float = 300.0) -> List[Any]:
+        self._threads = [
+            threading.Thread(target=self._rank_main, args=(r, n_steps),
+                             daemon=True, name=f"rank-{r}")
+            for r in range(self.n)]
+        for t in self._threads:
+            t.start()
+        deadline = time.time() + timeout
+        for t in self._threads:
+            t.join(max(deadline - time.time(), 0.001))
+            if t.is_alive():
+                raise TimeoutError(f"{t.name} did not finish")
+        if self.errors:
+            rank, err = next(iter(self.errors.items()))
+            raise RuntimeError(f"rank {rank} failed: {err!r}") from err
+        return self.results
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint(self, ckpt_dir: str | Path, resume: bool = True) -> None:
+        """Asynchronous checkpoint request (any thread, any time)."""
+        if self.coord.all_finished() and all(not t.is_alive()
+                                             for t in self._threads):
+            raise RuntimeError("job already finished; nothing to checkpoint")
+        self._ckpt_dir = Path(ckpt_dir)
+        self._ckpt_meta = {}
+        self.coord.request_checkpoint(resume=resume)
+
+    def checkpoint_at(self, step: int, ckpt_dir: str | Path,
+                      resume: bool = True) -> None:
+        """Deterministic trigger: rank 0 requests the checkpoint when it
+        reaches `step` (the DMTCP coordinator's interval-checkpoint mode)."""
+        self._ckpt_dir = Path(ckpt_dir)
+        self._trigger = (step, Path(ckpt_dir), resume)
+
+    def wait_checkpoint(self, timeout: float = 120.0) -> None:
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._ckpt_lock:
+                if len(self._ckpt_meta) == self.n:
+                    return
+            time.sleep(0.001)
+        raise TimeoutError("checkpoint did not complete")
+
+    def stop(self) -> None:
+        for p in self.proxies:
+            try:
+                p.stop()
+            except Exception:
+                pass
+        self.transport.stop()
+
+    # --------------------------------------------------------------- restart
+    @classmethod
+    def restart(cls, ckpt_dir: str | Path,
+                step_fn: Callable[[MPI, Any, int], Any],
+                init_fn: Callable[[MPI], Any],
+                transport: str = "shm") -> "MPIJob":
+        """Reconstruct a job from a checkpoint on ANY transport: fresh
+        proxies + transports, admin-log replay, cache preload."""
+        ckpt_dir = Path(ckpt_dir)
+        man = load_manifest(ckpt_dir)
+        n = man["n_ranks"]
+        job = cls(n, step_fn, init_fn, transport=transport)
+        for r in range(n):
+            img = load_rank_image(ckpt_dir, r)
+            job.mpis[r].restore(img.mpi_state)
+            job.states[r] = pickle.loads(img.app_state)
+            job.start_steps[r] = img.step_idx
+        job._restored = True
+        return job

@@ -1,0 +1,200 @@
+"""Pluggable transports — the "MPI implementations" of the reproduction.
+
+Two deliberately different mechanisms prove implementation-agnosticism
+(paper §1, §7):
+
+  * ShmTransport — in-process queues (the "shared-memory MPI").
+  * TcpTransport — real localhost sockets through a switchboard daemon
+    (the "socket MPI"); frames are length-prefixed pickled Envelopes.
+
+The checkpoint NEVER serializes a transport: at restart the runtime builds
+a FRESH transport (possibly of the other kind) and replays the admin log.
+A checkpoint written under one transport restarting under the other is the
+paper's future-work cross-implementation claim, validated in
+tests/test_drain_restart.py::test_cross_transport_restart.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.messages import Envelope
+
+
+class Transport:
+    """Reliable, per-(src,dst)-ordered message fabric."""
+
+    name = "abstract"
+
+    def start(self, n_ranks: int) -> None:
+        raise NotImplementedError
+
+    def stop(self) -> None:
+        raise NotImplementedError
+
+    def send(self, env: Envelope) -> None:
+        raise NotImplementedError
+
+    def poll(self, rank: int) -> Optional[Envelope]:
+        """Non-blocking: next envelope destined to `rank`, else None."""
+        raise NotImplementedError
+
+
+class ShmTransport(Transport):
+    name = "shm"
+
+    def start(self, n_ranks: int) -> None:
+        self._queues: List[queue.SimpleQueue] = [
+            queue.SimpleQueue() for _ in range(n_ranks)]
+
+    def stop(self) -> None:
+        self._queues = []
+
+    def send(self, env: Envelope) -> None:
+        self._queues[env.dst].put(env)
+
+    def poll(self, rank: int) -> Optional[Envelope]:
+        try:
+            return self._queues[rank].get_nowait()
+        except queue.Empty:
+            return None
+
+
+class _Switchboard(threading.Thread):
+    """Routing daemon: accepts one connection per rank, forwards frames."""
+
+    def __init__(self, n_ranks: int):
+        super().__init__(daemon=True, name="mpi-switchboard")
+        self.n = n_ranks
+        self.srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.srv.bind(("127.0.0.1", 0))
+        self.srv.listen(n_ranks)
+        self.port = self.srv.getsockname()[1]
+        self.conns: Dict[int, socket.socket] = {}
+        self.lock = threading.Lock()
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        readers = []
+        while len(self.conns) < self.n and not self._stop.is_set():
+            conn, _ = self.srv.accept()
+            rank = struct.unpack("!i", self._read_exact(conn, 4))[0]
+            with self.lock:
+                self.conns[rank] = conn
+            t = threading.Thread(target=self._pump, args=(conn,), daemon=True)
+            t.start()
+            readers.append(t)
+        for t in readers:
+            t.join()
+
+    def _pump(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                hdr = self._read_exact(conn, 8)
+                if hdr is None:
+                    return
+                (ln,) = struct.unpack("!q", hdr)
+                body = self._read_exact(conn, ln)
+                if body is None:
+                    return
+                env = Envelope.from_bytes(body)
+                with self.lock:
+                    out = self.conns.get(env.dst)
+                if out is not None:
+                    frame = struct.pack("!q", len(body)) + body
+                    with self.lock:
+                        out.sendall(frame)
+        except (OSError, ConnectionError):
+            return
+
+    @staticmethod
+    def _read_exact(conn, n) -> Optional[bytes]:
+        buf = b""
+        while len(buf) < n:
+            try:
+                chunk = conn.recv(n - len(buf))
+            except (OSError, ConnectionError):
+                return None
+            if not chunk:
+                return None
+            buf += chunk
+        return buf
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        try:
+            self.srv.close()
+        except OSError:
+            pass
+        with self.lock:
+            for c in self.conns.values():
+                try:
+                    c.close()
+                except OSError:
+                    pass
+
+
+class TcpTransport(Transport):
+    name = "tcp"
+
+    def start(self, n_ranks: int) -> None:
+        self.n = n_ranks
+        self.board = _Switchboard(n_ranks)
+        self.board.start()
+        self._socks: List[socket.socket] = []
+        self._inbox: List[queue.SimpleQueue] = [queue.SimpleQueue()
+                                                for _ in range(n_ranks)]
+        self._send_locks = [threading.Lock() for _ in range(n_ranks)]
+        self._readers = []
+        self._stop = threading.Event()
+        for r in range(n_ranks):
+            s = socket.create_connection(("127.0.0.1", self.board.port))
+            s.sendall(struct.pack("!i", r))
+            self._socks.append(s)
+            t = threading.Thread(target=self._reader, args=(r, s), daemon=True)
+            t.start()
+            self._readers.append(t)
+
+    def _reader(self, rank: int, s: socket.socket) -> None:
+        while not self._stop.is_set():
+            hdr = _Switchboard._read_exact(s, 8)
+            if hdr is None:
+                return
+            (ln,) = struct.unpack("!q", hdr)
+            body = _Switchboard._read_exact(s, ln)
+            if body is None:
+                return
+            self._inbox[rank].put(Envelope.from_bytes(body))
+
+    def stop(self) -> None:
+        self._stop.set()
+        for s in self._socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+        self.board.shutdown()
+
+    def send(self, env: Envelope) -> None:
+        body = env.to_bytes()
+        frame = struct.pack("!q", len(body)) + body
+        with self._send_locks[env.src]:
+            self._socks[env.src].sendall(frame)
+
+    def poll(self, rank: int) -> Optional[Envelope]:
+        try:
+            return self._inbox[rank].get_nowait()
+        except queue.Empty:
+            return None
+
+
+TRANSPORTS = {"shm": ShmTransport, "tcp": TcpTransport}
+
+
+def make_transport(name: str) -> Transport:
+    return TRANSPORTS[name]()

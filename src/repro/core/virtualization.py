@@ -1,0 +1,110 @@
+"""Virtual id tables (paper §7): communicators, groups and requests are
+exposed to the application as small integers that survive checkpoint /
+restart and transport switches; the mapping to live backend objects is
+rebuilt by admin-log replay."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+WORLD_VID = 0
+
+
+@dataclass(frozen=True)
+class CommInfo:
+    vid: int
+    ranks: Tuple[int, ...]        # world ranks, ordered
+
+    def size(self) -> int:
+        return len(self.ranks)
+
+    def rank_of(self, world_rank: int) -> int:
+        return self.ranks.index(world_rank)
+
+    def world_rank(self, comm_rank: int) -> int:
+        return self.ranks[comm_rank]
+
+
+@dataclass(frozen=True)
+class GroupInfo:
+    vid: int
+    ranks: Tuple[int, ...]
+
+
+@dataclass
+class RequestInfo:
+    vid: int
+    kind: str                    # "send" | "recv"
+    src: int                     # world rank (recv side) / self (send side)
+    tag: int
+    comm_vid: int
+    done: bool = False
+    value: object = None
+    status: object = None
+
+
+class VirtualIds:
+    """Per-rank table; contents are checkpointed verbatim (pure data)."""
+
+    def __init__(self, n_ranks: int):
+        self.comms: Dict[int, CommInfo] = {
+            WORLD_VID: CommInfo(WORLD_VID, tuple(range(n_ranks)))}
+        self.groups: Dict[int, GroupInfo] = {}
+        self.requests: Dict[int, RequestInfo] = {}
+        self._next_comm = 1
+        self._next_group = 1
+        self._next_req = 1
+
+    def new_comm(self, ranks: Tuple[int, ...],
+                 vid: Optional[int] = None) -> CommInfo:
+        if vid is None:
+            vid = self._next_comm
+        info = CommInfo(vid, tuple(ranks))
+        self.comms[vid] = info
+        self._next_comm = max(self._next_comm, vid + 1)
+        return info
+
+    def new_group(self, ranks: Tuple[int, ...],
+                  vid: Optional[int] = None) -> GroupInfo:
+        if vid is None:
+            vid = self._next_group
+        info = GroupInfo(vid, tuple(ranks))
+        self.groups[vid] = info
+        self._next_group = max(self._next_group, vid + 1)
+        return info
+
+    def new_request(self, kind, src, tag, comm_vid) -> RequestInfo:
+        info = RequestInfo(self._next_req, kind, src, tag, comm_vid)
+        self.requests[info.vid] = info
+        self._next_req += 1
+        return info
+
+    def free_comm(self, vid: int) -> None:
+        if vid == WORLD_VID:
+            raise ValueError("cannot free MPI_COMM_WORLD")
+        self.comms.pop(vid, None)
+
+    def free_group(self, vid: int) -> None:
+        self.groups.pop(vid, None)
+
+    # --- checkpoint payload -------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "comms": {v: tuple(c.ranks) for v, c in self.comms.items()},
+            "groups": {v: tuple(g.ranks) for v, g in self.groups.items()},
+            "pending_recvs": [
+                (r.vid, r.src, r.tag, r.comm_vid)
+                for r in self.requests.values()
+                if r.kind == "recv" and not r.done],
+            "next": (self._next_comm, self._next_group, self._next_req),
+        }
+
+    def restore(self, snap: dict, n_ranks: int) -> None:
+        self.comms = {int(v): CommInfo(int(v), tuple(r))
+                      for v, r in snap["comms"].items()}
+        self.groups = {int(v): GroupInfo(int(v), tuple(r))
+                       for v, r in snap["groups"].items()}
+        self.requests = {}
+        for vid, src, tag, comm_vid in snap["pending_recvs"]:
+            self.requests[vid] = RequestInfo(vid, "recv", src, tag, comm_vid)
+        self._next_comm, self._next_group, self._next_req = snap["next"]

@@ -1,0 +1,39 @@
+"""Elastic scaling: adapt mesh + shardings to whatever devices exist now,
+and restore any checkpoint onto them (cross-topology restart).
+
+The admin-log idea from the paper appears here as the mesh-reconstruction
+record: a checkpoint's manifest stores (mesh shape, axis names, rules name)
+as *informational* metadata; restore ignores it and rebuilds for the
+CURRENT world — the whole point of the proxy boundary."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.sharding import ShardingRules, make_variant
+from repro.launch.mesh import _make
+
+
+def choose_mesh(n_devices: Optional[int] = None,
+                model_parallel: int = 1):
+    """Largest (data, model) mesh for the current world size."""
+    n = n_devices or len(jax.devices())
+    model = model_parallel
+    while n % model:
+        model -= 1
+    return _make((n // model, model), ("data", "model"))
+
+
+def elastic_restore(mgr: CheckpointManager, template, mesh,
+                    rules: ShardingRules, state_shardings):
+    """Restore the newest valid checkpoint onto the CURRENT mesh.  Returns
+    (state, meta) — meta records the source world for telemetry."""
+    state, meta = mgr.restore(template, state_shardings)
+    if state is None:
+        return None, None
+    meta = dict(meta or {})
+    meta["restored_onto"] = {"devices": len(mesh.devices.flatten()),
+                             "mesh": dict(mesh.shape)}
+    return state, meta

@@ -1,0 +1,116 @@
+"""Failure detection, straggler mitigation, and the restart driver.
+
+At fleet scale the paper's protocol is what makes failures cheap: because
+the checkpoint is implementation-free, a replacement node (or a different
+cluster/transport) restores without any state from the dead one.  Here:
+
+  * HeartbeatMonitor — missed-heartbeat failure detector (ranks ping; a
+    monitor thread flags silence > timeout).
+  * StragglerTracker — per-rank step-duration EWMA; ranks slower than
+    ``factor`` x median are flagged (policy hook: reassign / exclude).
+  * FaultTolerantDriver — run an MPIJob with periodic checkpoints; on any
+    rank failure, rebuild the job from the newest valid checkpoint (losing
+    at most ckpt_every steps) — optionally on a different transport.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_ranks: int, timeout_s: float = 1.0):
+        self.timeout = timeout_s
+        self.last: Dict[int, float] = {r: time.time() for r in range(n_ranks)}
+        self._lock = threading.Lock()
+
+    def ping(self, rank: int) -> None:
+        with self._lock:
+            self.last[rank] = time.time()
+
+    def dead_ranks(self) -> List[int]:
+        now = time.time()
+        with self._lock:
+            return [r for r, t in self.last.items() if now - t > self.timeout]
+
+
+class StragglerTracker:
+    def __init__(self, n_ranks: int, factor: float = 3.0, ema: float = 0.5):
+        self.factor = factor
+        self.ema = ema
+        self.dur: Dict[int, float] = {}
+        self._lock = threading.Lock()
+
+    def record(self, rank: int, seconds: float) -> None:
+        with self._lock:
+            prev = self.dur.get(rank)
+            self.dur[rank] = seconds if prev is None else \
+                self.ema * seconds + (1 - self.ema) * prev
+
+    def stragglers(self) -> List[int]:
+        with self._lock:
+            if len(self.dur) < 2:
+                return []
+            med = float(np.median(list(self.dur.values())))
+            return [r for r, d in self.dur.items() if d > self.factor * med]
+
+
+class RankKilled(Exception):
+    """Injected failure (tests/benchmarks)."""
+
+
+class FaultTolerantDriver:
+    """Run-to-completion with checkpoint/restart recovery (MPIJob level)."""
+
+    def __init__(self, job_factory: Callable[[], "MPIJob"],
+                 restart_factory: Callable[[Path, str], "MPIJob"],
+                 ckpt_root: str | Path, ckpt_every: int,
+                 max_restarts: int = 3):
+        self.job_factory = job_factory
+        self.restart_factory = restart_factory
+        self.ckpt_root = Path(ckpt_root)
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.events: List[str] = []
+
+    def _latest_valid(self) -> Optional[Path]:
+        from repro.core.ckpt_protocol import checkpoint_valid
+        if not self.ckpt_root.exists():
+            return None
+        cands = sorted(self.ckpt_root.iterdir())
+        for d in reversed(cands):
+            if d.is_dir() and checkpoint_valid(d):
+                return d
+        return None
+
+    def run(self, n_steps: int, transport_after_failure: str = "shm",
+            timeout: float = 120.0):
+        attempts = 0
+        while True:
+            latest = self._latest_valid()
+            if latest is None:
+                job = self.job_factory()
+                self.events.append("start:fresh")
+            else:
+                job = self.restart_factory(latest, transport_after_failure)
+                self.events.append(f"restart:{latest.name}")
+            start = max(job.start_steps) if latest is not None else 0
+            # schedule periodic checkpoints from the next multiple
+            nxt = ((start // self.ckpt_every) + 1) * self.ckpt_every
+            if nxt < n_steps:
+                job.checkpoint_at(nxt, self.ckpt_root / f"at_{nxt:08d}")
+            try:
+                results = job.run(n_steps, timeout=timeout)
+                job.stop()
+                self.events.append("done")
+                return results
+            except (RuntimeError, TimeoutError) as e:
+                job.stop()
+                attempts += 1
+                self.events.append(f"failure:{type(e).__name__}")
+                if attempts > self.max_restarts:
+                    raise

@@ -1,0 +1,201 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with
+divisibility-guarded resolution and optional FSDP parameter sharding.
+
+The same rules translate both parameter trees (via their Pm logical axes)
+and activations (via ``logical_spec`` / ``shard_act``).  Hillclimb variants
+are expressed as alternative ``ShardingRules`` (see launch/dryrun.py
+``--variant``), so every perf experiment is a named, reproducible config.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import Pm, is_pm, tree_map_pm
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> tuple of mesh axes to shard it over (jointly)."""
+
+    mapping: Dict[str, Tuple[str, ...]]
+    # shard each PARAM's largest still-replicated dim over these axes
+    # (ZeRO-3/FSDP); applied to parameter trees only, never activations.
+    fsdp_axes: Tuple[str, ...] = ()
+    name: str = "default"
+
+
+#: Baseline rules: DP over (pod, data), TP over model for vocab/heads/ffn/
+#: experts/recurrent width.  KV-cache seq replicated (variant shards it).
+DEFAULT_RULES = ShardingRules(mapping={
+    "batch":     ("pod", "data"),
+    "vocab":     ("model",),
+    "embed":     (),
+    "heads":     ("model",),
+    "kv_heads":  ("model",),
+    "ffn":       ("model",),
+    "experts":   ("model",),
+    "expert_ff": (),          # variant: shard expert FFN dim instead of E
+    "moe_groups": ("model",),  # picks up model when E is not divisible
+    "expert_cap": (),
+    "seq":       (),
+    "seq_saves": (),          # remat-save layout (variant sp_saves -> model)
+    "kv_seq":    (),          # decode cache sequence; variant -> ("model",)
+    "d_rnn":     ("model",),
+    "head_dim":  (),
+    "kv_lora":   (),
+    "layers":    (),
+    "frames":    (),
+    "window":    (),
+}, name="baseline")
+
+
+def axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def resolve_spec(logical: Tuple[Optional[str], ...],
+                 shape: Tuple[int, ...],
+                 mesh: Mesh,
+                 rules: ShardingRules,
+                 fsdp: bool = False) -> P:
+    """Logical axes -> PartitionSpec, sharding only divisible dims and never
+    reusing a mesh axis within one spec."""
+    used: set = set()
+    parts = []
+    for dim, lname in zip(shape, logical):
+        cand = rules.mapping.get(lname, ()) if lname else ()
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        # longest divisible prefix: ("pod","data","model") degrades to
+        # ("pod","data") etc. when the dim doesn't divide the joint size
+        placed = None
+        while cand:
+            size = axis_size(mesh, cand)
+            if size > 1 and dim % size == 0:
+                placed = cand
+                break
+            cand = cand[:-1]
+        if placed:
+            parts.append(placed if len(placed) > 1 else placed[0])
+            used.update(placed)
+        else:
+            parts.append(None)
+    if fsdp and rules.fsdp_axes:
+        fax = tuple(a for a in rules.fsdp_axes if a in mesh.shape and a not in used)
+        fsize = axis_size(mesh, fax)
+        if fax and fsize > 1:
+            # biggest still-replicated dim that divides
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if parts[i] is None and logical[i] != "layers" and shape[i] % fsize == 0:
+                    parts[i] = fax if len(fax) > 1 else fax[0]
+                    break
+    return P(*parts)
+
+
+def param_shardings(defs, mesh: Mesh, rules: ShardingRules):
+    """NamedSharding tree for a Pm tree (params or cache/state)."""
+    return tree_map_pm(
+        lambda p: NamedSharding(
+            mesh, resolve_spec(p.logical, p.shape, mesh, rules, fsdp=True)),
+        defs)
+
+
+def logical_spec(logical: Tuple[Optional[str], ...], shape, mesh, rules) -> P:
+    return resolve_spec(tuple(logical), tuple(shape), mesh, rules, fsdp=False)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: model code calls shard_act(x, logical_axes)
+# and the step builder installs (mesh, rules) once.
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def sharding_ctx(mesh: Mesh, rules: ShardingRules):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def shard_act(x, logical: Tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical axes; no-op outside a context."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = resolve_spec(tuple(logical), tuple(x.shape), _CTX.mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def ctx_divisible(lname: str, dim: int) -> bool:
+    """Inside a sharding ctx: would a dim of this size shard under logical
+    axis `lname`?  True outside any context (single-device smoke paths).
+    Model code uses this to pick sharding-compatible algorithm layouts
+    (e.g. the GQA head-fold vs expand-kv decision in attention.py)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return True
+    cand = _CTX.rules.mapping.get(lname, ())
+    cand = tuple(a for a in cand if a in _CTX.mesh.shape)
+    size = axis_size(_CTX.mesh, cand)
+    return size <= 1 or dim % size == 0
+
+
+# ---------------------------------------------------------------------------
+# Named rule variants (hillclimbing & ablation configs)
+# ---------------------------------------------------------------------------
+
+def make_variant(name: str) -> ShardingRules:
+    """Composable variants: "seqshard+fsdp", "kvseq", "dponly+fsdp", ...
+    Each '+'-separated part mutates the baseline rules."""
+    base = dict(DEFAULT_RULES.mapping)
+    fsdp_axes: Tuple[str, ...] = ()
+    parts = [p for p in name.split("+") if p]
+    for part in parts:
+        if part in ("baseline", "default"):
+            continue
+        elif part == "fsdp":
+            fsdp_axes = fsdp_axes or ("data",)
+        elif part == "kvseq":      # flash-decode style seq-sharded KV cache
+            base["kv_seq"] = ("model",)
+            base["kv_heads"] = ()
+        elif part == "seqshard":   # sequence parallelism for activations
+            base["seq"] = ("model",)
+        elif part == "sp_saves":   # shard ONLY remat saves over model: 16x
+            base["seq_saves"] = ("model",)  # smaller act memory for two extra
+            # all-gathers per layer (fwd + bwd recompute)
+        elif part == "expert_ff":  # shard expert FFN dim instead of E axis
+            base["experts"] = ()
+            base["expert_ff"] = ("model",)
+        elif part == "dponly":     # no tensor parallelism (small models)
+            for k in ("vocab", "heads", "kv_heads", "ffn", "experts",
+                      "d_rnn", "moe_groups"):
+                base[k] = ()
+            base["batch"] = ("pod", "data", "model")
+            if fsdp_axes:
+                fsdp_axes = ("data", "model")
+        elif part == "dponly_fsdp":
+            for k in ("vocab", "heads", "kv_heads", "ffn", "experts",
+                      "d_rnn", "moe_groups"):
+                base[k] = ()
+            base["batch"] = ("pod", "data", "model")
+            fsdp_axes = ("data", "model")
+        else:
+            raise KeyError(f"unknown sharding variant part {part!r}")
+    if "dponly" in parts and fsdp_axes:
+        fsdp_axes = ("data", "model")     # order-independent composition
+    return ShardingRules(mapping=base, fsdp_axes=fsdp_axes, name=name)

@@ -1,0 +1,122 @@
+"""Pallas TPU flash attention (forward): blocked online-softmax with
+explicit VMEM BlockSpecs, GQA via index-map head folding, optional local
+window (recurrentgemma), causal block skipping via @pl.when.
+
+TPU adaptation notes (DESIGN.md §6): tile sizes are MXU-aligned (128); the
+working set per grid step is q_tile(bq x hd) + k/v tiles (bk x hd) + the
+f32 accumulator (bq x hd) + softmax stats — chosen to sit comfortably in
+VMEM with double buffering.  A CUDA flash kernel parallelizes over warps
+within the tile; on TPU the MXU consumes whole (128,128) tiles and the
+sequential k-grid carries the online-softmax state in scratch.
+
+Layout: q (BH, Sq, hd); k, v (BKV, Sk, hd); grid (BH, nq, nk), k-minor
+(sequential) so scratch accumulators persist across the k sweep.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               window: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # skip fully-masked blocks (strictly above the diagonal / out of window)
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+        if window:
+            relevant = jnp.logical_and(
+                relevant, k_start + block_k - 1 > q_start - window)
+    else:
+        relevant = jnp.bool_(True)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            ok = kpos <= qpos
+            if window:
+                ok = jnp.logical_and(ok, kpos > qpos - window)
+            s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        scale: float | None = None,
+                        interpret: bool = False):
+    """q (BH, Sq, hd); k, v (BKV, Sk, hd), BH = BKV * G.  Returns (BH, Sq, hd)."""
+    bh, sq, hd = q.shape
+    bkv, sk, _ = k.shape
+    assert bh % bkv == 0, (bh, bkv)
+    g = bh // bkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    n_q = sq // block_q
+    n_k = sk // block_k
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki, g=g: (b // g, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki, g=g: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q (BH, Sq, hd); k, v (BKV, Sk, hd) with BH = BKV * G.
+    fp32 softmax, GQA via head-group folding."""
+    bh, sq, hd = q.shape
+    bkv, sk, _ = k.shape
+    g = bh // bkv
+    scale = hd ** -0.5 if scale is None else scale
+    qf = q.reshape(bkv, g, sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bgqd,bkd->bgqk", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        ok = kpos <= qpos
+        if window:
+            ok &= kpos > (qpos - window)
+        s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return o.reshape(bh, sq, hd).astype(q.dtype)
+
+
+def ref_rglru(a, x, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + x_t.
+    a, x (B, S, D) fp32; h0 (B, D).  Returns (h_seq (B,S,D), h_last)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    x0 = x.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(comb, (a, x0), axis=1)
+    return h, h[:, -1]
+
+
+def ref_quantize_int8(x, block: int = 256):
+    """x (N,) fp32 (N % block == 0) -> (q int8 (N//block, block), scales)."""
+    blocks = x.astype(jnp.float32).reshape(-1, block)
+    scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def ref_dequantize_int8(q, scales):
+    return (q.astype(jnp.float32) * scales[:, None]).reshape(-1)

@@ -1,0 +1,199 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k \
+      --mesh multipod --variant baseline --out results/dryrun
+
+Success criterion (deliverable e): .lower().compile() succeeds on the
+production meshes for every cell; the JSON written here feeds
+EXPERIMENTS.md §Dry-run and §Roofline and benchmarks/bench_roofline.py.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax-importing import: jax locks device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.distributed.sharding import make_variant, resolve_spec
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import active_param_ratio, count_params
+from repro.train.step import default_accum, dryrun_spec
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
+             accum: int | None, out_dir: Path, save_hlo: bool = False,
+             master_fp32: bool = False) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multipod"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "variant": variant, "status": "ok"}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    pod_size = chips // mesh.shape.get("pod", 1)
+    if variant == "auto":
+        # realistic defaults: ZeRO-3/FSDP for training (fp32 params+moments
+        # exceed HBM otherwise at 10B+), plain DP+TP for serving (bf16)
+        variant_eff = "fsdp" if shape.kind == "train" else "baseline"
+    else:
+        variant_eff = variant
+    rec["variant_effective"] = variant_eff
+    rules = make_variant(variant_eff)
+    accum_eff = default_accum(cfg, shape) if accum is None else accum
+    rec["accum_steps"] = accum_eff if shape.kind == "train" else 1
+    rec["chips"] = chips
+
+    rec["master_fp32"] = master_fp32
+    t0 = time.time()
+    fn, args, in_shardings, _ = dryrun_spec(cfg, shape, mesh, rules,
+                                            accum_steps=accum_eff,
+                                            master_fp32=master_fp32)
+
+    # output shardings
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        out_shardings = (in_shardings[0], rep)      # state', metrics
+        donate = (0,)
+    else:
+        logit_shape = (shape.global_batch, cfg.vocab_size)
+        lsh = NamedSharding(mesh, resolve_spec(("batch", "vocab"), logit_shape,
+                                               mesh, rules))
+        if shape.kind == "prefill":
+            from repro.distributed.sharding import param_shardings
+            from repro.models.params import abstract_params
+            from repro.models.registry import get_api
+            cd = get_api(cfg).cache_defs(cfg, shape.global_batch, shape.seq_len)
+            out_shardings = (lsh, param_shardings(cd, mesh, rules))
+            donate = ()
+        else:
+            out_shardings = (lsh, in_shardings[1])  # logits, cache'
+            donate = (1,)
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory_analysis"] = {
+        k: int(getattr(ma, k)) for k in
+        ("argument_size_in_bytes", "output_size_in_bytes",
+         "temp_size_in_bytes", "alias_size_in_bytes",
+         "generated_code_size_in_bytes") if hasattr(ma, k)}
+    live = (rec["memory_analysis"].get("argument_size_in_bytes", 0)
+            + rec["memory_analysis"].get("temp_size_in_bytes", 0)
+            + rec["memory_analysis"].get("output_size_in_bytes", 0)
+            - rec["memory_analysis"].get("alias_size_in_bytes", 0))
+    rec["bytes_per_device"] = int(live)
+    rec["fits_16g_hbm"] = bool(live < 16e9)
+
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis_raw"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+
+    text = compiled.as_text()
+    cost = ha.analyze(text, pod_size=pod_size)
+    terms = ha.roofline_terms(cost, chips)
+    rec["hlo"] = {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": cost.coll_bytes,
+        "collective_dcn_bytes_per_device": cost.coll_dcn_bytes,
+        "collective_by_kind": cost.coll_by_kind,
+        "collective_count": cost.coll_count,
+        "unresolved_whiles": cost.unresolved_whiles,
+    }
+    rec["roofline"] = terms
+
+    # MODEL_FLOPS: 6·N·D (train) or 2·N·tokens (serve), active params for MoE
+    n = count_params(cfg, shape.seq_len)
+    n_act = n * active_param_ratio(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_act * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_act * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * n_act * shape.global_batch
+    rec["n_params"] = int(n)
+    rec["model_flops_per_device"] = model_flops / chips
+    rec["useful_flops_ratio"] = (model_flops / chips) / max(cost.flops, 1.0)
+
+    if save_hlo:
+        (out_dir / "hlo").mkdir(parents=True, exist_ok=True)
+        (out_dir / "hlo" / f"{arch}__{shape_name}__{mesh_kind}__{variant}.txt"
+         ).write_text(text)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--master-fp32", action="store_true",
+                    help="bf16 params + sharded fp32 master (halves FSDP "
+                         "all-gather bytes)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf iterations)")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"__{args.tag}" if args.tag else ""
+    name = f"{args.arch}__{args.shape}__{args.mesh}__{args.variant}{tag}.json"
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.variant,
+                       args.accum, out_dir, save_hlo=args.save_hlo,
+                       master_fp32=args.master_fp32)
+    except Exception as e:  # recorded, not raised: sweep keeps going
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    (out_dir / name).write_text(json.dumps(rec, indent=2, default=float))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+                 f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                 f"fits={rec['fits_16g_hbm']} compile={rec['compile_s']}s")
+    elif status == "error":
+        extra = " " + rec["error"][:200]
+    print(f"[dryrun] {name}: {status}{extra}")
+    if status == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

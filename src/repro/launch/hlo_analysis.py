@@ -1,0 +1,462 @@
+"""Trip-count-aware roofline accounting over compiled HLO text.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE, so any scanned
+model (scan-over-layers, grad-accumulation, q-chunked attention) is
+under-reported by the trip count (verified empirically: a scan of 8 matmul
+layers reports ~1/8 of the unrolled flops).  This module parses
+``compiled.as_text()`` into computations, resolves while-loop trip counts
+from their condition computations, and accumulates:
+
+  * flops            dot ops: 2 * prod(result_dims) * prod(contract_dims);
+                     elementwise/reduce: prod(shape); conv: approximated
+  * bytes            materialization model: every top-level (non-fused)
+                     instruction reads its operands and writes its result;
+                     special-cased for dynamic-update-slice (in-place) and
+                     gather/scatter (rows touched, not whole table)
+  * collective bytes sum of operand sizes of all-reduce / all-gather /
+                     reduce-scatter / all-to-all / collective-permute
+                     (per-device program => per-device bytes), split into
+                     ICI vs DCN ("pod"-crossing) by replica group analysis
+
+All quantities are PER DEVICE (the SPMD module is one device's program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f4e2m1fn": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True)) + r")\[([0-9,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "compare", "select", "and",
+    "or", "xor", "not", "clamp", "atan2", "remainder", "cosine", "sine",
+    "logistic", "erf", "is-finite", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "convert", "bitcast-convert", "stochastic-convert",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ZERO_FLOP = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "copy",
+    "copy-start", "copy-done", "reshape", "transpose", "broadcast", "iota",
+    "slice", "concatenate", "pad", "reverse", "rev", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "after-all", "partition-id",
+    "replica-id", "rng", "rng-bit-generator", "rng-get-and-update-state",
+    "infeed", "outfeed", "send", "recv", "send-done", "recv-done",
+    "custom-call", "opt-barrier", "domain", "add-dependency", "sort",
+}
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def elem_count(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, Instr] = field(default_factory=dict)
+
+
+_INSTR_HEAD_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\)|[\w\[\]{},\/ ]+?))\s+"
+    r"([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr_line(line: str):
+    """(name, type, opcode, args_str, attrs) or None.  Args are matched with
+    paren balancing: metadata/op_name attrs contain parens, so a greedy
+    regex would swallow condition=/body=/calls= attributes."""
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name, tstr, opcode = m.groups()
+    i = m.end()          # index just past the opening '('
+    depth = 1
+    j = i
+    n = len(line)
+    while j < n and depth:
+        ch = line[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        j += 1
+    args = line[i:j - 1]
+    attrs = line[j:]
+    return name, tstr.strip(), opcode, args, attrs
+
+
+def _split_operands(args: str) -> List[str]:
+    """Operand NAMES from the call-args string (types may be inline)."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch == "(" or ch == "[" or ch == "{":
+            depth += 1
+        elif ch == ")" or ch == "]" or ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    names = []
+    for frag in out:
+        m = re.search(r"%([\w.\-]+)\s*$", frag.strip())
+        names.append(m.group(1) if m else "")
+    return names
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            s = line.strip()
+            if (s.endswith("{") and not s.startswith("HloModule")
+                    and (s.startswith("%") or s.startswith("ENTRY"))):
+                tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                name = tok.lstrip("%").split("(")[0]
+                cur = Computation(name)
+                if s.startswith("ENTRY"):
+                    entry = name
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            name, tstr, opcode, args, attrs = parsed
+            ins = Instr(name, tstr, opcode, _split_operands(args), attrs, line)
+            cur.instrs.append(ins)
+            cur.table[name] = ins
+    return comps, entry
+
+
+def _attr_named_comp(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip count from the condition computation: constant in the ROOT
+    compare.  Falls back to 1 (recorded by caller)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in reversed(cond.instrs):
+        if ins.opcode == "compare":
+            for op in ins.operands:
+                if op in consts and consts[op] > 0:
+                    return consts[op]
+    if consts:
+        pos = [v for v in consts.values() if v > 0]
+        if pos:
+            return max(pos)
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_dims = shape_dims(ins.type_str)
+    n_res = math.prod(res_dims) if res_dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+    contract = 1
+    if m and lhs is not None:
+        ldims = shape_dims(lhs.type_str)
+        idxs = [int(i) for i in m.group(1).split(",")] if m.group(1) else []
+        for i in idxs:
+            if i < len(ldims):
+                contract *= ldims[i]
+    return 2.0 * n_res * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    res = elem_count(ins.type_str)
+    ker = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    kelems = elem_count(ker.type_str) if ker is not None else 1
+    kdims = shape_dims(ker.type_str) if ker is not None else []
+    kout = kdims[-1] if kdims else 1
+    return 2.0 * res * max(kelems // max(kout, 1), 1)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_dcn_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: int = 0
+    unresolved_whiles: int = 0
+
+    def add(self, o: "Cost", k: float = 1.0):
+        self.flops += o.flops * k
+        self.bytes += o.bytes * k
+        self.coll_bytes += o.coll_bytes * k
+        self.coll_dcn_bytes += o.coll_dcn_bytes * k
+        for kk, v in o.coll_by_kind.items():
+            self.coll_by_kind[kk] = self.coll_by_kind.get(kk, 0.0) + v * k
+        self.coll_count += int(o.coll_count * k)
+        self.unresolved_whiles += o.unresolved_whiles
+
+
+def _crosses_pod(attrs: str, pod_size: int) -> bool:
+    """True if any replica group mixes devices from different pods.
+    Device order: id = pod*pod_size + rest (row-major mesh)."""
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", attrs)
+    if m:
+        for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            pods = {i // pod_size for i in ids}
+            if len(pods) > 1:
+                return True
+        return False
+    # iota form: replica_groups=[2,256]<=[512] or <=[...]T(...)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\(([0-9,]+)\))?",
+                  attrs)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(5).split(",")]
+                if m.group(5) else list(range(len(dims))))
+        import numpy as np
+        total = math.prod(dims)
+        ids = np.arange(total).reshape(dims).transpose(perm).reshape(ng, gs)
+        pods = ids // pod_size
+        return bool((pods != pods[:, :1]).any())
+    return False
+
+
+#: ops whose presence makes a fused computation truly materialize traffic
+#: on TPU; pure elementwise/layout chains fuse into producers/consumers
+#: (Mosaic/XLA-TPU), so their CPU-backend standalone appearance must not be
+#: billed as HBM bytes.
+_HEAVY = {"dot", "convolution", "reduce", "reduce-window", "scatter",
+          "gather", "dynamic-update-slice", "dynamic-slice", "concatenate",
+          "sort"}
+
+
+def analyze(text: str, pod_size: int = 10 ** 9) -> Cost:
+    comps, entry = parse_hlo(text)
+    memo: Dict[Tuple[str, bool], Cost] = {}
+    heavy_memo: Dict[str, bool] = {}
+
+    kinds_memo: Dict[str, frozenset] = {}
+
+    def heavy_kinds(name: str) -> frozenset:
+        if name in kinds_memo:
+            return kinds_memo[name]
+        kinds_memo[name] = frozenset()    # break recursion
+        comp = comps.get(name)
+        out = set()
+        if comp is not None:
+            for ins in comp.instrs:
+                if ins.opcode in _HEAVY:
+                    out.add(ins.opcode)
+                if ins.opcode == "fusion":
+                    called = _attr_named_comp(ins.attrs, "calls")
+                    if called:
+                        out |= heavy_kinds(called)
+        kinds_memo[name] = frozenset(out)
+        return kinds_memo[name]
+
+    def comp_is_heavy(name: str) -> bool:
+        return bool(heavy_kinds(name))
+
+    def cost_of(name: str, materializing: bool) -> Cost:
+        key = (name, materializing)
+        if key in memo:
+            return memo[key]
+        c = Cost()
+        memo[key] = c      # pre-insert to break accidental recursion
+        comp = comps.get(name)
+        if comp is None:
+            return c
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                body = _attr_named_comp(ins.attrs, "body")
+                cond = _attr_named_comp(ins.attrs, "condition")
+                trips = _trip_count(comps, cond) if cond else 1
+                if trips <= 1:
+                    c.unresolved_whiles += 1
+                    trips = max(trips, 1)
+                if body:
+                    c.add(cost_of(body, True), trips)
+                if cond:
+                    c.add(cost_of(cond, True), trips)
+                continue
+            if op == "fusion":
+                called = _attr_named_comp(ins.attrs, "calls")
+                if called:
+                    sub = cost_of(called, False)
+                    c.flops += sub.flops
+                    c.coll_bytes += sub.coll_bytes
+                if materializing and called and comp_is_heavy(called):
+                    kinds = heavy_kinds(called)
+                    res_b = type_bytes(ins.type_str)
+                    op_bs = [type_bytes(comp.table[o].type_str)
+                             for o in ins.operands if o in comp.table]
+                    if kinds and "dynamic-update-slice" in kinds and \
+                            kinds <= {"dynamic-update-slice", "dynamic-slice",
+                                      "gather"}:
+                        # scan-carry window write: bill the update window
+                        # (carry operand is aliased in place), not the stack
+                        big = max(op_bs) if op_bs else 0
+                        c.bytes += 2 * (sum(op_bs) - big)
+                    elif kinds and kinds <= {"dynamic-slice", "gather"}:
+                        # window read: bill the slice (result), not the stack
+                        c.bytes += 2 * res_b
+                    else:
+                        c.bytes += res_b + sum(op_bs)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                called = (_attr_named_comp(ins.attrs, "to_apply")
+                          or _attr_named_comp(ins.attrs, "calls")
+                          or _attr_named_comp(ins.attrs, "body"))
+                if called:
+                    c.add(cost_of(called, materializing), 1.0)
+                continue
+            if any(op.startswith(k) for k in _COLLECTIVES):
+                nbytes = 0
+                for o in ins.operands:
+                    t = comp.table.get(o)
+                    if t is not None:
+                        nbytes += type_bytes(t.type_str)
+                # XLA's all-reduce-promotion pass upcasts bf16 reductions to
+                # f32 on the host backend (to_apply=%..._promoted); TPU ICI
+                # reduces bf16 on the wire with on-chip f32 accumulation, so
+                # bill promoted reductions at the original dtype.
+                if "_promoted" in ins.attrs:
+                    nbytes *= 0.5
+                kind = next(k for k in _COLLECTIVES if op.startswith(k))
+                c.coll_bytes += nbytes
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + nbytes
+                c.coll_count += 1
+                if _crosses_pod(ins.attrs, pod_size):
+                    c.coll_dcn_bytes += nbytes
+                if materializing:
+                    c.bytes += type_bytes(ins.type_str) + nbytes
+                continue
+
+            # flops
+            if op == "dot":
+                c.flops += _dot_flops(ins, comp)
+            elif op == "convolution":
+                c.flops += _conv_flops(ins, comp)
+            elif op in ("reduce", "reduce-window"):
+                src = comp.table.get(ins.operands[0]) if ins.operands else None
+                c.flops += elem_count(src.type_str) if src is not None \
+                    else elem_count(ins.type_str)
+            elif op in _ELEMENTWISE:
+                c.flops += elem_count(ins.type_str)
+
+            # bytes (materialization model): heavy ops only — standalone
+            # elementwise/layout ops fuse on TPU and are not billed
+            if materializing:
+                if op == "dynamic-update-slice":
+                    upd = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+                    c.bytes += 2 * (type_bytes(upd.type_str) if upd is not None else 0)
+                elif op in ("gather", "dynamic-slice", "scatter"):
+                    c.bytes += 2 * type_bytes(ins.type_str)
+                elif op in _HEAVY or op == "copy":
+                    c.bytes += type_bytes(ins.type_str)
+                    for o in ins.operands:
+                        t = comp.table.get(o)
+                        if t is not None:
+                            c.bytes += type_bytes(t.type_str)
+        return c
+
+    if entry is None:
+        return Cost()
+    return cost_of(entry, True)
+
+
+# Hardware constants (TPU v5e, per chip) — from the assignment spec.
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+DCN_BW = 12.5e9            # bytes/s per chip (assumption, documented)
+
+
+def roofline_terms(cost: Cost, chips: int) -> Dict[str, float]:
+    """All terms in seconds, per the assignment formulas (per-device program
+    => the chips factor cancels)."""
+    t_compute = cost.flops / PEAK_FLOPS
+    t_memory = cost.bytes / HBM_BW
+    ici = cost.coll_bytes - cost.coll_dcn_bytes
+    t_coll = ici / ICI_BW + cost.coll_dcn_bytes / DCN_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"), (t_coll, "collective"))
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dom[1],
+        "bound_s": dom[0],
+        "roofline_frac_compute": t_compute / max(dom[0], 1e-30),
+    }

@@ -1,0 +1,25 @@
+"""Mesh construction.  Functions, not module-level constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _make(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model); "pod" crosses DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_local_mesh(n: int | None = None, model: int = 1):
+    """Mesh over locally visible devices (smoke tests, CPU examples)."""
+    n = n or len(jax.devices())
+    assert n % model == 0, (n, model)
+    return _make((n // model, model), ("data", "model"))

@@ -1,0 +1,79 @@
+"""Dry-run sweep: every (arch x shape x mesh) cell as a SUBPROCESS (each
+needs its own XLA_FLAGS device-count init), with resume-by-JSON caching.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.sweep --archs yi-9b --shapes train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES
+
+CELL_TIMEOUT_S = 3600
+
+
+def run_sweep(archs, shapes, meshes, variant: str, out: Path,
+              force: bool = False, accum: int | None = None) -> int:
+    out.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    todo = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    for i, (arch, shape, mesh) in enumerate(todo):
+        name = f"{arch}__{shape}__{mesh}__{variant}.json"
+        path = out / name
+        if path.exists() and not force:
+            rec = json.loads(path.read_text())
+            if rec.get("status") in ("ok", "skip"):
+                print(f"[{i+1}/{len(todo)}] {name}: cached ({rec['status']})")
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--variant", variant, "--out", str(out)]
+        if accum is not None:
+            cmd += ["--accum", str(accum)]
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, timeout=CELL_TIMEOUT_S,
+                               capture_output=True, text=True)
+            tail = (r.stdout.strip().splitlines() or [""])[-1]
+            print(f"[{i+1}/{len(todo)}] {tail}  ({time.time()-t0:.0f}s)")
+            if r.returncode != 0:
+                failures += 1
+                if not path.exists():
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "variant": variant, "status": "error",
+                        "error": (r.stderr or "")[-2000:]}))
+        except subprocess.TimeoutExpired:
+            failures += 1
+            path.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "variant": variant, "status": "error",
+                "error": f"timeout after {CELL_TIMEOUT_S}s"}))
+            print(f"[{i+1}/{len(todo)}] {name}: TIMEOUT")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=sorted(ARCHS))
+    ap.add_argument("--shapes", nargs="*", default=list(SHAPES))
+    ap.add_argument("--meshes", nargs="*", default=["pod", "multipod"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    n = run_sweep(args.archs, args.shapes, args.meshes, args.variant,
+                  Path(args.out), force=args.force, accum=args.accum)
+    print(f"sweep done; {n} failures")
+    raise SystemExit(1 if n else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Attention: GQA (full & local-window) for train/prefill, KV-cache decode,
+and Multi-head Latent Attention (DeepSeek-V2) incl. the absorbed decode path.
+
+Memory strategy: train/prefill attention is q-chunked (scores never
+materialize beyond (B, H, q_chunk, S)), which is what lets prefill_32k
+compile inside a v5e HBM budget without a kernel; the Pallas
+flash-attention kernel (repro.kernels) is an opt-in fast path on TPU.
+
+Decode KV caches carry logical axis "kv_seq": under the baseline rules the
+cache sequence dim is replicated across "model"; under the ``kvseq``
+variant it is sharded — the fp32 softmax max/sum and the probs@V
+contraction then partition into flash-decode-style partial-softmax merges
+(small all-reduces) emitted by the SPMD partitioner.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ctx_divisible, shard_act
+from repro.models.layers import (DEFAULT_POLICY, Pm, apply_rope, rms_head_norm,
+                                 rope_cos_sin, rope_qk)
+
+NEG_INF = -1e30
+
+#: "chunked" (pure-jnp, q-chunked; default) or "flash" (Pallas kernel —
+#: Mosaic on TPU, interpret-mode on CPU).  Falls back to chunked when the
+#: shapes don't meet the kernel's tiling contract.
+_BACKEND = "chunked"
+
+
+def set_attention_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("chunked", "flash"), name
+    _BACKEND = name
+
+
+def get_attention_backend() -> str:
+    return _BACKEND
+
+
+def _flash_ok(q, k, v, q_positions, causal) -> bool:
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if hd != v.shape[-1] or hd not in (64, 128, 256):
+        return False                      # MLA train path: hd_q != hd_v
+    if sq % 128 or sk % 128:
+        return False
+    if causal and sq != sk:
+        return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Param defs
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": Pm((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Pm((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Pm((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Pm((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = Pm((hd,), ("head_dim",), init="ones")
+        defs["k_norm"] = Pm((hd,), ("head_dim",), init="ones")
+    return defs
+
+
+def mla_defs(cfg: ArchConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": Pm((d, h, qk_dim), ("embed", "heads", "head_dim")),
+        "wkv_a": Pm((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                    ("embed", "kv_lora")),
+        "kv_norm": Pm((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "w_uk": Pm((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                   ("kv_lora", "heads", "head_dim")),
+        "w_uv": Pm((m.kv_lora_rank, h, m.v_head_dim),
+                   ("kv_lora", "heads", "head_dim")),
+        "wo": Pm((h, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# Core chunked softmax attention (GQA; causal or local window)
+# --------------------------------------------------------------------------
+
+def _fold_gqa(q, n_kv):
+    """(B,S,H,hd) -> (B,S,KV,G,hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _mask_bias(q_pos, k_pos, window: int):
+    """(Q,K) additive mask: causal, optionally local-window."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_attention(q, k, v, *, q_positions, k_positions, window: int = 0,
+                  q_chunk: int = 1024, causal: bool = True):
+    """q (B,Sq,H,hd); k,v (B,Sk,KV,hd).  fp32 softmax; q-chunked (default)
+    or the Pallas flash kernel when enabled + shape-compatible.
+
+    GQA layout choice (sharding-aware): folding H -> (KV, G) is only
+    TP-compatible when KV divides the model axis; otherwise the reshape
+    splits the sharded head dim and the partitioner all-gathers every
+    score tensor.  When q-heads shard but kv-heads don't, we instead
+    EXPAND k/v to H heads (a per-device-slice broadcast: each device
+    materializes only its own heads' copies) and keep scores H-major."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    if _BACKEND == "flash" and _flash_ok(q, k, v, q_positions, causal):
+        from repro.kernels import ops as kops
+        qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+        kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], hd)
+        vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], hd)
+        ot = kops.flash_attention(qt, kt, vt, causal, window)
+        return ot.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+    scale = hd ** -0.5
+    hd_v = v.shape[-1]
+    n_chunks = max(sq // q_chunk, 1)
+    expand = (kvh < h and not ctx_divisible("kv_heads", kvh)
+              and ctx_divisible("heads", h))
+
+    if expand:
+        g = h // kvh
+        ke = shard_act(jnp.repeat(k, g, axis=2), ("batch", None, "heads", None))
+        ve = shard_act(jnp.repeat(v, g, axis=2), ("batch", None, "heads", None))
+
+        def chunk_e(qc, qpos_c):
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, ke,
+                           preferred_element_type=jnp.float32) * scale
+            s = shard_act(s, ("batch", "heads", "seq", "kv_seq"))
+            if causal:
+                s += _mask_bias(qpos_c, k_positions, window)[None, None]
+            m = jnp.max(s, axis=-1, keepdims=True)
+            e = jnp.exp(s - jax.lax.stop_gradient(m))
+            p = e / jnp.sum(e, axis=-1, keepdims=True)
+            return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), ve)
+
+        if n_chunks == 1:
+            return chunk_e(q, q_positions)
+        qs = jnp.moveaxis(
+            q.reshape(b, n_chunks, sq // n_chunks, h, hd), 1, 0)
+        ps = q_positions.reshape(n_chunks, sq // n_chunks)
+        out = jax.lax.map(lambda args: chunk_e(*args), (qs, ps))
+        return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd_v)
+
+    qf = _fold_gqa(q, kvh)                            # (B,Sq,KV,G,hd)
+
+    def chunk(qc, qpos_c):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = shard_act(s, ("batch", "kv_heads", "heads", "seq", "kv_seq"))
+        if causal:
+            s += _mask_bias(qpos_c, k_positions, window)[None, None, None]
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - jax.lax.stop_gradient(m))
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v)
+        return o
+
+    if n_chunks == 1:
+        out = chunk(qf, q_positions)
+    else:
+        qs = qf.reshape(b, n_chunks, sq // n_chunks, kvh, h // kvh, hd)
+        qs = jnp.moveaxis(qs, 1, 0)                   # (C,B,qc,KV,G,hd)
+        ps = q_positions.reshape(n_chunks, sq // n_chunks)
+        out = jax.lax.map(lambda args: chunk(*args), (qs, ps))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, sq, kvh, h // kvh, hd_v)
+    return out.reshape(b, sq, h, hd_v)
+
+
+# --------------------------------------------------------------------------
+# Train / prefill
+# --------------------------------------------------------------------------
+
+def attn_forward(cfg: ArchConfig, p, x, positions, *, window: int = 0,
+                 policy=DEFAULT_POLICY, q_chunk: int = 1024,
+                 causal: bool = True):
+    """Self-attention over x (B,S,D) with per-token positions (B?,S)."""
+    c = policy.c
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, c(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, c(p["wv"]))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        rot = int(cfg.hd * cfg.rope_pct) // 2 * 2
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        q, k = rope_qk(q, k, pos2d, rot, cfg.rope_theta)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    out = gqa_attention(q, k, v, q_positions=pos1d, k_positions=pos1d,
+                        window=window, q_chunk=q_chunk, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+
+
+def cross_attn_forward(cfg: ArchConfig, p, x, mem, *, policy=DEFAULT_POLICY):
+    """Cross-attention (whisper decoder): queries from x, kv from mem."""
+    c = policy.c
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", mem, c(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", mem, c(p["wv"]))
+    sq, sk = x.shape[1], mem.shape[1]
+    out = gqa_attention(q, k, v,
+                        q_positions=jnp.arange(sq), k_positions=jnp.arange(sk),
+                        causal=False, q_chunk=min(1024, sq))
+    return jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+
+
+# --------------------------------------------------------------------------
+# Decode with KV cache
+# --------------------------------------------------------------------------
+
+def kv_cache_defs(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    s = min(max_seq, cfg.window) if cfg.window else max_seq
+    return {"k": Pm((batch, s, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                    init="zeros", dtype=dtype),
+            "v": Pm((batch, s, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                    init="zeros", dtype=dtype)}
+
+
+def _cache_update(cache, new, slot):
+    """cache (B,S,KV,hd) <- new (B,1,KV,hd) at per-batch slot (B,)."""
+    def upd(c_b, n_b, i_b):
+        return jax.lax.dynamic_update_slice(c_b, n_b, (i_b, 0, 0))
+    return jax.vmap(upd)(cache, new, slot)
+
+
+def attn_decode(cfg: ArchConfig, p, x, cache, pos, *, policy=DEFAULT_POLICY):
+    """One-token decode.  x (B,1,D); pos (B,) absolute position of the new
+    token; cache dict{k,v} (B,S(,window),KV,hd).  Returns (y, new_cache)."""
+    c = policy.c
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, c(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, c(p["wv"]))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        rot = int(cfg.hd * cfg.rope_pct) // 2 * 2
+        q, k = rope_qk(q, k, pos[:, None], rot, cfg.rope_theta)
+
+    s_cache = cache["k"].shape[1]
+    slot = jnp.mod(pos, s_cache) if cfg.window else pos      # ring buffer
+    ck = _cache_update(cache["k"], k.astype(cache["k"].dtype), slot)
+    cv = _cache_update(cache["v"], v.astype(cache["v"].dtype), slot)
+
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    idx = jnp.arange(s_cache)
+    if cfg.window:
+        valid = (idx[None] <= slot[:, None]) | (pos[:, None] >= s_cache)
+    else:
+        valid = idx[None] <= pos[:, None]                     # (B,S)
+
+    h = cfg.n_heads
+    expand = (kvh < h and not ctx_divisible("kv_heads", kvh)
+              and ctx_divisible("heads", h))
+    if expand:
+        g = h // kvh
+        cke = shard_act(jnp.repeat(ck, g, axis=2),
+                        ("batch", "kv_seq", "heads", None))
+        cve = shard_act(jnp.repeat(cv, g, axis=2),
+                        ("batch", "kv_seq", "heads", None))
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, cke,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        s = shard_act(s, ("batch", "heads", None, "kv_seq"))
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        pr = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pr, cve)
+    else:
+        qf = _fold_gqa(q, kvh)                                # (B,1,KV,G,hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, ck,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        s = shard_act(s, ("batch", "kv_heads", "heads", None, "kv_seq"))
+        s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        pr = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pr, cv)
+    o = o.reshape(x.shape[0], 1, cfg.n_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, c(p["wo"]))
+    return y, {"k": ck, "v": cv}
+
+
+def attn_prefill(cfg: ArchConfig, p, x, positions, max_cache: int, *,
+                 window: int = 0, policy=DEFAULT_POLICY, q_chunk: int = 1024):
+    """Full-sequence attention that also materializes the decode KV cache
+    (post-rope keys, ring-buffer slots for windowed layers)."""
+    c = policy.c
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, c(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, c(p["wv"]))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        rot = int(cfg.hd * cfg.rope_pct) // 2 * 2
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        q, k = rope_qk(q, k, pos2d, rot, cfg.rope_theta)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    out = gqa_attention(q, k, v, q_positions=pos1d, k_positions=pos1d,
+                        window=window, q_chunk=q_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+
+    b, s = x.shape[0], x.shape[1]
+    s_cache = min(max_cache, window) if window else max_cache
+    n_keep = min(s, s_cache)
+    slots = jnp.arange(s - n_keep, s) % s_cache
+    cache_dt = x.dtype                      # cache dtype == compute dtype
+    ck = jnp.zeros((b, s_cache) + k.shape[2:], cache_dt)
+    cv = jnp.zeros((b, s_cache) + v.shape[2:], cache_dt)
+    ck = ck.at[:, slots].set(k[:, s - n_keep:].astype(cache_dt))
+    cv = cv.at[:, slots].set(v[:, s - n_keep:].astype(cache_dt))
+    return y, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2): train/prefill expanded; decode absorbed over the
+# compressed cache (the MLA serving path -- cache is (B,S,r)+(B,S,rope)).
+# --------------------------------------------------------------------------
+
+def mla_cache_defs(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c_kv": Pm((batch, max_seq, m.kv_lora_rank),
+                       ("batch", "kv_seq", "kv_lora"), init="zeros", dtype=dtype),
+            "k_rope": Pm((batch, max_seq, m.qk_rope_head_dim),
+                         ("batch", "kv_seq", "head_dim"), init="zeros", dtype=dtype)}
+
+
+def _mla_qkv(cfg, p, x, positions, policy):
+    """Shared projections.  Returns q_nope,(B,S,H,dn) q_rope,(B,S,H,dr)
+    c_kv (B,S,r), k_rope (B,S,dr)."""
+    c = policy.c
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    kv_a = x @ c(p["wkv_a"])                                  # (B,S,r+dr)
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    ckf = c_kv.astype(jnp.float32)
+    var = jnp.mean(ckf * ckf, axis=-1, keepdims=True)
+    c_kv = (ckf * jax.lax.rsqrt(var + cfg.norm_eps) * p["kv_norm"]).astype(x.dtype)
+    pos2d = positions if positions.ndim == 2 else positions[None]
+    cos, sin = rope_cos_sin(pos2d, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None, :],
+                        sin[:, :, None, :])[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(cfg: ArchConfig, p, x, positions, *, policy=DEFAULT_POLICY,
+                q_chunk: int = 1024):
+    """Train/prefill: expand compressed kv to per-head k,v; standard MHA."""
+    c = policy.c
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions, policy)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, c(p["w_uk"]))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, c(p["w_uv"]))
+    h = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    out = gqa_attention(q, k, v, q_positions=pos1d, k_positions=pos1d,
+                        q_chunk=q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+
+
+def mla_prefill(cfg: ArchConfig, p, x, positions, max_cache: int, *,
+                policy=DEFAULT_POLICY, q_chunk: int = 1024):
+    """Full-sequence MLA that also fills the compressed decode cache."""
+    c = policy.c
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions, policy)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, c(p["w_uk"]))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, c(p["w_uv"]))
+    h = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    pos1d = positions[0] if positions.ndim == 2 else positions
+    out = gqa_attention(q, k, v, q_positions=pos1d, k_positions=pos1d,
+                        q_chunk=q_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+    b, s = x.shape[0], x.shape[1]
+    cache_dt = x.dtype
+    ckv = jnp.zeros((b, max_cache, m.kv_lora_rank), cache_dt)
+    ckr = jnp.zeros((b, max_cache, m.qk_rope_head_dim), cache_dt)
+    ckv = ckv.at[:, :s].set(c_kv.astype(cache_dt))
+    ckr = ckr.at[:, :s].set(k_rope.astype(cache_dt))
+    return y, {"c_kv": ckv, "k_rope": ckr}
+
+
+def mla_decode(cfg: ArchConfig, p, x, cache, pos, *, policy=DEFAULT_POLICY):
+    """Absorbed decode: score/combine directly in the r-dim latent space."""
+    c = policy.c
+    m = cfg.mla
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(cfg, p, x, pos[:, None], policy)
+
+    def upd(cb, nb, ib):
+        return jax.lax.dynamic_update_slice(cb, nb, (ib, 0))
+    ckv = jax.vmap(upd)(cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos)
+    ckr = jax.vmap(upd)(cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos)
+
+    # absorb: q' = q_nope @ w_uk  -> (B,1,H,r); scores vs compressed cache
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, c(p["w_uk"]))
+    s = jnp.einsum("bshr,btr->bhst", q_abs, ckv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshk,btk->bhst", q_rope, ckr,
+                    preferred_element_type=jnp.float32)
+    s *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = shard_act(s, ("batch", "heads", None, "kv_seq"))
+    valid = jnp.arange(ckv.shape[1])[None] <= pos[:, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    mmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - mmax)
+    pr = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", pr, ckv)               # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, c(p["w_uv"]))
+    y = jnp.einsum("bshk,hkd->bsd", out, c(p["wo"]))
+    return y, {"c_kv": ckv, "k_rope": ckr}

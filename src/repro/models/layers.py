@@ -1,0 +1,159 @@
+"""Shared neural-net layers (pure JAX, functional).
+
+Conventions:
+  * params stored fp32 (Pm.dtype), compute in ``policy.compute`` (bf16),
+    normalization/softmax statistics in fp32.
+  * all ops take/return (B, S, ...) activations.
+Biases are omitted framework-wide (<0.1% of params for every assigned
+arch; noted in DESIGN.md) except where structurally required.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.params import Pm
+
+
+@dataclass(frozen=True)
+class Policy:
+    compute: jnp.dtype = jnp.bfloat16
+    param: jnp.dtype = jnp.float32
+
+    def c(self, x):
+        return x.astype(self.compute)
+
+
+DEFAULT_POLICY = Policy()
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def norm_defs(cfg: ArchConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rms":
+        return {"scale": Pm((d,), ("embed",), init="ones")}
+    return {"scale": Pm((d,), ("embed",), init="ones"),
+            "bias": Pm((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] + p["bias"]
+    return y.astype(policy.compute)
+
+
+def rms_head_norm(x, scale, eps=1e-5):
+    """Per-head q/k norm (stablelm-2): normalize over head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings — computed on the fly from positions
+# (no table: long_500k positions would need a 0.5M-row table otherwise).
+# --------------------------------------------------------------------------
+
+def rope_cos_sin(positions, rot_dim: int, theta: float):
+    """positions (...,) int32 -> cos/sin (..., rot_dim//2) fp32."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd_rot); cos/sin broadcastable (..., S, 1, hd_rot//2).
+    NeoX-style half-split rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def rope_qk(q, k, positions, rot_dim, theta):
+    """Apply partial rotary to q,k given per-token positions (B,S)."""
+    cos, sin = rope_cos_sin(positions, rot_dim, theta)   # (B,S,half)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]    # broadcast heads
+    if rot_dim == q.shape[-1]:
+        return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    q_rot = apply_rope(q[..., :rot_dim], cos, sin)
+    k_rot = apply_rope(k[..., :rot_dim], cos, sin)
+    q = jnp.concatenate([q_rot, q[..., rot_dim:]], axis=-1)
+    k = jnp.concatenate([k_rot, k[..., rot_dim:]], axis=-1)
+    return q, k
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg: ArchConfig, d_ff: int | None = None, ff_axis: str = "ffn"):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wi": Pm((d, f), ("embed", ff_axis)),
+                "wg": Pm((d, f), ("embed", ff_axis)),
+                "wo": Pm((f, d), (ff_axis, "embed"))}
+    return {"wi": Pm((d, f), ("embed", ff_axis)),
+            "wo": Pm((f, d), (ff_axis, "embed"))}
+
+
+def _act(cfg: ArchConfig, x):
+    if cfg.act == "gelu" or cfg.mlp in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY):
+    c = policy.c
+    h = x @ c(p["wi"])
+    if cfg.mlp in ("swiglu", "geglu"):
+        h = _act(cfg, x @ c(p["wg"])) * h
+    else:
+        h = _act(cfg, h)
+    return h @ c(p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head
+# --------------------------------------------------------------------------
+
+def embed_defs(cfg: ArchConfig):
+    d = {"embedding": Pm((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                         scale=1.0)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = Pm((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(cfg, p, tokens, policy=DEFAULT_POLICY):
+    return policy.c(jnp.take(p["embedding"], tokens, axis=0))
+
+
+def lm_logits(cfg, p, x, policy=DEFAULT_POLICY):
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ policy.c(w)
+
+
+def sincos_table(n: int, d: int):
+    """Fixed sinusoidal embeddings (whisper encoder)."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)

@@ -1,0 +1,317 @@
+"""Generic LM composition: block-kind dispatch + scan-over-units stacking.
+
+Every non-enc-dec arch is expressed as
+    prefix blocks (list)  +  repeated unit (scanned, params stacked)  +  tail
+where a *unit* is a tuple of block kinds (e.g. ("rglru","rglru","local_attn")
+for recurrentgemma, ("mlstm",)*7+("slstm",) for xlstm, ("moe",) for the MoE
+archs, ("attn",) for dense).  Scanning units keeps the HLO O(unit), not
+O(layers) — this is what makes the 88-layer dry-runs compile fast.
+
+Params / cache trees:
+  {"embed":…, "pos"?:…, "prefix":[…], "units": stacked, "tail":[…], "final":…}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models import attention as att
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+from repro.models.layers import (DEFAULT_POLICY, Pm, apply_mlp, apply_norm,
+                                 embed_defs, embed_tokens, lm_logits,
+                                 mlp_defs, norm_defs)
+from repro.models.moe import apply_moe, moe_defs
+from repro.models.params import stack_defs, tree_map_pm
+
+
+# --------------------------------------------------------------------------
+# Stack plan
+# --------------------------------------------------------------------------
+
+def stack_plan(cfg: ArchConfig) -> Tuple[Tuple[str, ...], Tuple[str, ...], int,
+                                         Tuple[str, ...]]:
+    """(prefix_kinds, unit_kinds, n_units, tail_kinds)."""
+    if cfg.moe is not None:
+        k = cfg.moe.first_k_dense
+        return (("attn",) * k, ("moe",), cfg.n_layers - k, ())
+    if cfg.block_pattern:
+        unit = cfg.block_pattern
+        tail = cfg.pattern_tail
+        n = (cfg.n_layers - len(tail)) // len(unit)
+        return ((), unit, n, tail)
+    return ((), ("attn",), cfg.n_layers, ())
+
+
+# --------------------------------------------------------------------------
+# Block dispatch
+# --------------------------------------------------------------------------
+
+def _dense_ff(cfg):
+    if cfg.moe is not None and cfg.moe.dense_ff:
+        return cfg.moe.dense_ff
+    return cfg.d_ff
+
+
+def block_defs(cfg: ArchConfig, kind: str):
+    if kind in ("attn", "moe", "local_attn"):
+        adefs = att.mla_defs(cfg) if cfg.mla is not None else att.attn_defs(cfg)
+        ff = (moe_defs(cfg) if kind == "moe"
+              else mlp_defs(cfg, d_ff=_dense_ff(cfg)))
+        return {"ln1": norm_defs(cfg), "attn": adefs,
+                "ln2": norm_defs(cfg), "mlp": ff}
+    if kind == "rglru":
+        return rg.rglru_defs(cfg)
+    if kind == "mlstm":
+        return xl.mlstm_defs(cfg)
+    if kind == "slstm":
+        return xl.slstm_defs(cfg)
+    raise KeyError(kind)
+
+
+def apply_block(cfg, kind, p, x, positions, policy=DEFAULT_POLICY):
+    """Training/prefill-style full-sequence block.  Returns (x, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn", "moe", "local_attn"):
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.mla is not None:
+            a = att.mla_forward(cfg, p["attn"], h, positions, policy=policy)
+        else:
+            a = att.attn_forward(cfg, p["attn"], h, positions, window=window,
+                                 policy=policy)
+        x = x + a
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        if kind == "moe":
+            m, aux = apply_moe(cfg, p["mlp"], h, policy)
+        else:
+            m = apply_mlp(cfg, p["mlp"], h, policy)
+        x = x + m
+    elif kind == "rglru":
+        x, cache = rg.rglru_apply(cfg, p, x, policy)
+    elif kind == "mlstm":
+        x, cache = xl.mlstm_apply(cfg, p, x, policy)
+    elif kind == "slstm":
+        x, cache = xl.slstm_apply(cfg, p, x, policy)
+    else:
+        raise KeyError(kind)
+    x = shard_act(x, ("batch", "seq", "embed"))
+    return x, aux, cache
+
+
+def block_cache_defs(cfg, kind, batch: int, max_seq: int):
+    if kind in ("attn", "moe"):
+        return (att.mla_cache_defs(cfg, batch, max_seq) if cfg.mla is not None
+                else att.kv_cache_defs(cfg, batch, max_seq))
+    if kind == "local_attn":
+        return att.kv_cache_defs(cfg, batch, max_seq)   # window-clipped inside
+    if kind == "rglru":
+        return rg.rglru_state_defs(cfg, batch)
+    if kind == "mlstm":
+        return xl.mlstm_state_defs(cfg, batch)
+    if kind == "slstm":
+        return xl.slstm_state_defs(cfg, batch)
+    raise KeyError(kind)
+
+
+def decode_block(cfg, kind, p, x, cache, pos, policy=DEFAULT_POLICY):
+    """One-token decode.  Returns (x, new_cache)."""
+    if kind in ("attn", "moe", "local_attn"):
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        if cfg.mla is not None:
+            a, cache = att.mla_decode(cfg, p["attn"], h, cache, pos,
+                                      policy=policy)
+        else:
+            a, cache = att.attn_decode(cfg, p["attn"], h, cache, pos,
+                                       policy=policy)
+        x = x + a
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        if kind == "moe":
+            m, _ = apply_moe(cfg, p["mlp"], h, policy)
+        else:
+            m = apply_mlp(cfg, p["mlp"], h, policy)
+        return x + m, cache
+    if kind == "rglru":
+        return rg.rglru_decode(cfg, p, x, cache, policy)
+    if kind == "mlstm":
+        return xl.mlstm_decode(cfg, p, x, cache, policy)
+    if kind == "slstm":
+        return xl.slstm_decode(cfg, p, x, cache, policy)
+    raise KeyError(kind)
+
+
+def prefill_block(cfg, kind, p, x, positions, max_cache: int,
+                  policy=DEFAULT_POLICY):
+    """Full-sequence block that also materializes its decode cache."""
+    if kind in ("attn", "moe", "local_attn"):
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        window = cfg.window if kind == "local_attn" else 0
+        if cfg.mla is not None:
+            a, cache = att.mla_prefill(cfg, p["attn"], h, positions, max_cache,
+                                       policy=policy)
+        else:
+            a, cache = att.attn_prefill(cfg, p["attn"], h, positions, max_cache,
+                                        window=window, policy=policy)
+        x = x + a
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        m = apply_moe(cfg, p["mlp"], h, policy)[0] if kind == "moe" \
+            else apply_mlp(cfg, p["mlp"], h, policy)
+        return x + m, cache
+    # recurrent kinds: full apply already returns carry state = decode cache
+    x, _, cache = apply_block(cfg, kind, p, x, positions, policy)
+    return x, cache
+
+
+# --------------------------------------------------------------------------
+# Whole-model param / cache defs
+# --------------------------------------------------------------------------
+
+def lm_param_defs(cfg: ArchConfig, max_seq: int):
+    prefix, unit, n_units, tail = stack_plan(cfg)
+    defs = {"embed": embed_defs(cfg)}
+    if cfg.pos_emb == "learned":
+        defs["pos"] = Pm((max_seq, cfg.d_model), ("seq", "embed"), scale=0.02)
+    defs["prefix"] = [block_defs(cfg, k) for k in prefix]
+    unit_defs = {f"b{i}": block_defs(cfg, k) for i, k in enumerate(unit)}
+    defs["units"] = stack_defs(unit_defs, n_units)
+    defs["tail"] = [block_defs(cfg, k) for k in tail]
+    defs["final"] = norm_defs(cfg)
+    return defs
+
+
+def lm_cache_defs(cfg: ArchConfig, batch: int, max_seq: int):
+    prefix, unit, n_units, tail = stack_plan(cfg)
+    cd = {"prefix": [block_cache_defs(cfg, k, batch, max_seq) for k in prefix],
+          "units": stack_defs({f"b{i}": block_cache_defs(cfg, k, batch, max_seq)
+                               for i, k in enumerate(unit)}, n_units),
+          "tail": [block_cache_defs(cfg, k, batch, max_seq) for k in tail]}
+    return cd
+
+
+# --------------------------------------------------------------------------
+# Forward / prefill / decode
+# --------------------------------------------------------------------------
+
+def _embed_in(cfg, params, tokens, extras, policy):
+    x = embed_tokens(cfg, params["embed"], tokens, policy)
+    if cfg.family == "vlm" and extras and "vision_embeds" in extras:
+        v = policy.c(extras["vision_embeds"])
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    if cfg.pos_emb == "learned":
+        x = x + policy.c(params["pos"][:tokens.shape[1]])
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def lm_forward(cfg: ArchConfig, params, batch, policy=DEFAULT_POLICY,
+               remat: bool = True):
+    """batch: tokens (B,S) [+ vision_embeds].  Returns (logits, aux)."""
+    prefix, unit, n_units, tail = stack_plan(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _embed_in(cfg, params, tokens, batch, policy)
+    aux = jnp.zeros((), jnp.float32)
+
+    for k, p in zip(prefix, params["prefix"]):
+        x, a, _ = apply_block(cfg, k, p, x, positions, policy)
+        aux = aux + a
+
+    def unit_body(x, unit_p):
+        a_tot = jnp.zeros((), jnp.float32)
+        for i, k in enumerate(unit):
+            x, a, _ = apply_block(cfg, k, unit_p[f"b{i}"], x, positions, policy)
+            a_tot = a_tot + a
+        return x, a_tot
+
+    body = jax.checkpoint(unit_body, prevent_cse=False) if remat else unit_body
+
+    def scan_body(carry, unit_p):
+        x, aux = carry
+        # the scan carry IS the remat save: under the sp_saves variant it is
+        # stored seq-sharded (16x smaller) and re-gathered inside the body
+        x = shard_act(x, ("batch", "seq_saves", "embed"))
+        x, a = body(x, unit_p)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, aux), params["units"])
+
+    for k, p in zip(tail, params["tail"]):
+        x, a, _ = apply_block(cfg, k, p, x, positions, policy)
+        aux = aux + a
+
+    x = apply_norm(cfg, params["final"], x, policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)
+    logits = shard_act(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens, extras, max_cache: int,
+               policy=DEFAULT_POLICY):
+    """Prompt pass.  Returns (last-token logits (B,V), cache)."""
+    prefix, unit, n_units, tail = stack_plan(cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _embed_in(cfg, params, tokens, extras, policy)
+
+    pc = []
+    for k, p in zip(prefix, params["prefix"]):
+        x, cache = prefill_block(cfg, k, p, x, positions, max_cache, policy)
+        pc.append(cache)
+
+    def scan_body(x, unit_p):
+        caches = {}
+        for i, k in enumerate(unit):
+            x, caches[f"b{i}"] = prefill_block(cfg, k, unit_p[f"b{i}"], x,
+                                               positions, max_cache, policy)
+        return x, caches
+
+    x, unit_caches = jax.lax.scan(scan_body, x, params["units"])
+
+    tc = []
+    for k, p in zip(tail, params["tail"]):
+        x, cache = prefill_block(cfg, k, p, x, positions, max_cache, policy)
+        tc.append(cache)
+
+    x = apply_norm(cfg, params["final"], x[:, -1:], policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)[:, 0]
+    return logits, {"prefix": pc, "units": unit_caches, "tail": tc}
+
+
+def lm_decode(cfg: ArchConfig, params, cache, token, pos,
+              policy=DEFAULT_POLICY):
+    """One-token step.  token (B,1) int32, pos (B,) absolute positions.
+    Returns (logits (B,V), new_cache)."""
+    prefix, unit, n_units, tail = stack_plan(cfg)
+    x = embed_tokens(cfg, params["embed"], token, policy)
+    if cfg.pos_emb == "learned":
+        x = x + policy.c(jnp.take(params["pos"], pos, axis=0))[:, None]
+
+    new_prefix = []
+    for k, p, c0 in zip(prefix, params["prefix"], cache["prefix"]):
+        x, c1 = decode_block(cfg, k, p, x, c0, pos, policy)
+        new_prefix.append(c1)
+
+    def scan_body(x, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for i, k in enumerate(unit):
+            x, new_c[f"b{i}"] = decode_block(cfg, k, unit_p[f"b{i}"], x,
+                                             unit_c[f"b{i}"], pos, policy)
+        return x, new_c
+
+    x, new_units = jax.lax.scan(scan_body, x, (params["units"], cache["units"]))
+
+    new_tail = []
+    for k, p, c0 in zip(tail, params["tail"], cache["tail"]):
+        x, c1 = decode_block(cfg, k, p, x, c0, pos, policy)
+        new_tail.append(c1)
+
+    x = apply_norm(cfg, params["final"], x, policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)[:, 0]
+    return logits, {"prefix": new_prefix, "units": new_units, "tail": new_tail}

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: routed experts with grouped capacity-based
+dispatch (GShard/Mesh-TF style) + optional shared experts.
+
+Memory discipline: tokens are split into GROUPS of ``GROUP_SIZE`` along the
+sequence; capacity is per-group, so the dispatch/combine tensors are
+(B, n_g, G_s, E, C_g) with C_g ~ G_s*top_k/E — never the naive
+(B, S, K, E, C) blow-up.  The top-k dimension is summed into per-expert
+gates BEFORE any capacity expansion, so K never multiplies ExC.
+
+Sharding: expert dim carries logical axis "experts" (EP over "model" when
+divisible, e.g. deepseek's 64); when E is not divisible (qwen's 60) the
+group dim "moe_groups" picks up the model axis instead, turning expert
+compute into sequence-sharded data parallelism — resolved automatically by
+the divisibility-guarded rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models.layers import DEFAULT_POLICY, Pm, mlp_defs, apply_mlp, _act
+
+GROUP_SIZE = 256
+
+
+def moe_defs(cfg: ArchConfig):
+    e = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": Pm((d, e.n_routed), ("embed", "experts"), scale=0.1),
+        "wi": Pm((e.n_routed, d, e.d_expert), ("experts", "embed", "expert_ff")),
+        "wg": Pm((e.n_routed, d, e.d_expert), ("experts", "embed", "expert_ff")),
+        "wo": Pm((e.n_routed, e.d_expert, d), ("experts", "expert_ff", "embed")),
+    }
+    if e.n_shared:
+        defs["shared"] = mlp_defs(cfg, d_ff=e.n_shared * e.d_expert)
+        if e.shared_gate:
+            defs["shared_gate"] = Pm((d, 1), ("embed", None), scale=0.1)
+    return defs
+
+
+def _group_capacity(gs: int, e) -> int:
+    cap = int(gs * e.top_k * e.capacity_factor / e.n_routed) + 1
+    return max(min(cap, gs), 1)
+
+
+def apply_moe(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY):
+    """x (B,S,D) -> (y (B,S,D), aux_loss fp32 scalar)."""
+    e = cfg.moe
+    c = policy.c
+    b, s, d = x.shape
+    gs = min(GROUP_SIZE, s)
+    ng = s // gs
+    assert ng * gs == s, (s, gs)
+    cap = _group_capacity(gs, e)
+    xg = x.reshape(b, ng, gs, d)
+
+    logits = (xg @ c(p["router"])).astype(jnp.float32)         # (B,n,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, e.top_k)      # (B,n,G,K)
+
+    # fold K away first: per-expert gate + 0/1 dispatch mask  (B,n,G,E)
+    onehot = jax.nn.one_hot(expert_idx, e.n_routed, dtype=jnp.float32)
+    mask = jnp.sum(onehot, axis=3)                             # 0/1 (B,n,G,E)
+    gates_e = jnp.sum(onehot * gate_vals[..., None], axis=3)   # (B,n,G,E)
+    mask = shard_act(mask, ("batch", "moe_groups", None, "experts"))
+
+    # position-in-expert within the group (token-order priority)
+    pos = jnp.cumsum(mask, axis=2) - 1.0                       # (B,n,G,E)
+    keep = mask * (pos < cap)
+    posi = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+
+    combine = (jax.nn.one_hot(posi, cap, dtype=policy.compute)
+               * (keep * gates_e).astype(policy.compute)[..., None])
+    combine = shard_act(combine,
+                        ("batch", "moe_groups", None, "experts", "expert_cap"))
+    dispatch = (jax.nn.one_hot(posi, cap, dtype=policy.compute)
+                * keep.astype(policy.compute)[..., None])      # (B,n,G,E,C)
+
+    xin = jnp.einsum("bngec,bngd->bnecd", dispatch, xg)        # (B,n,E,C,D)
+    xin = shard_act(xin, ("batch", "moe_groups", "experts", None, "embed"))
+    h = jnp.einsum("bnecd,edf->bnecf", xin, c(p["wi"]))
+    g = jnp.einsum("bnecd,edf->bnecf", xin, c(p["wg"]))
+    h = _act(cfg, g) * h
+    out = jnp.einsum("bnecf,efd->bnecd", h, c(p["wo"]))
+    out = shard_act(out, ("batch", "moe_groups", "experts", None, "embed"))
+    y = jnp.einsum("bngec,bnecd->bngd", combine, out).reshape(b, s, d)
+
+    if e.n_shared:
+        sh = apply_mlp(cfg, p["shared"], x, policy)
+        if e.shared_gate:
+            sh = sh * jax.nn.sigmoid((x @ c(p["shared_gate"])).astype(jnp.float32)
+                                     ).astype(sh.dtype)
+        y = y + sh
+
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    f = jnp.mean(mask, axis=(0, 1, 2))
+    pmean = jnp.mean(probs, axis=(0, 1, 2))
+    aux = e.aux_coef * e.n_routed * jnp.sum(f * pmean)
+    return y, aux

@@ -1,0 +1,85 @@
+"""Declarative parameter system.
+
+A model declares each parameter once as a ``Pm`` (shape + *logical* axis
+names + init).  From that single declaration we derive:
+
+  * real initialized arrays          (smoke tests, real training)
+  * abstract ShapeDtypeStructs       (dry-run lowering; zero allocation)
+  * NamedShardings                   (via repro.distributed.sharding rules)
+
+Layer stacks are built with ``stack_defs`` (prepends an L dim with logical
+axis "layers", which is never sharded), matching scan-over-layers apply.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Pm:
+    """One parameter (or state tensor) declaration."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | lecun
+    dtype: Any = jnp.float32
+    scale: float = 1.0          # multiplier on the init std
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pm(x) -> bool:
+    return isinstance(x, Pm)
+
+
+def tree_map_pm(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=is_pm)
+
+
+def stack_defs(defs, n: int):
+    """Prepend a stacked-layers dim (scanned over; never sharded)."""
+    return tree_map_pm(
+        lambda p: Pm((n,) + p.shape, ("layers",) + p.logical, p.init,
+                     p.dtype, p.scale),
+        defs)
+
+
+def abstract_params(defs, dtype_override=None):
+    """ShapeDtypeStruct tree — dry-run stand-ins, no allocation."""
+    return tree_map_pm(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype_override or p.dtype),
+        defs)
+
+
+def init_params(defs, rng):
+    """Real arrays for smoke tests / real training."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pm)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+
+    def one(p: Pm, key):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)
+
+    return jax.tree.unflatten(treedef, [one(p, k) for p, k in zip(leaves, keys)])
+
+
+def param_bytes(defs) -> int:
+    tot = 0
+    for p in jax.tree.leaves(defs, is_leaf=is_pm):
+        tot += int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+    return tot
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(defs, is_leaf=is_pm))

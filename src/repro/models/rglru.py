@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Layer = pre-norm recurrent mixer (causal conv + gated linear recurrence)
++ pre-norm GeGLU MLP, both residual.  Training/prefill uses
+jax.lax.associative_scan (log-depth parallel recurrence; the Pallas
+``rglru`` kernel is the TPU fast path for the same contraction); decode is
+the O(1) update.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t),
+a_t = exp(-c * softplus(L) * r_t),  r/i = sigmoid(linear(u_t)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (DEFAULT_POLICY, Pm, apply_mlp, apply_norm,
+                                 mlp_defs, norm_defs)
+from repro.models.xlstm import _causal_conv
+
+RG_C = 8.0
+
+
+def _dr(cfg):
+    return cfg.d_rnn or cfg.d_model
+
+
+def rglru_defs(cfg: ArchConfig):
+    d, dr, cw = cfg.d_model, _dr(cfg), cfg.conv_width
+    return {
+        "norm": norm_defs(cfg),
+        "wx": Pm((d, dr), ("embed", "d_rnn")),
+        "wg": Pm((d, dr), ("embed", "d_rnn")),
+        "wconv": Pm((cw, dr), ("window", "d_rnn")),
+        "w_r": Pm((dr, dr), (None, "d_rnn"), scale=0.5),
+        "w_i": Pm((dr, dr), (None, "d_rnn"), scale=0.5),
+        "lam": Pm((dr,), ("d_rnn",), init="ones"),
+        "wo": Pm((dr, d), ("d_rnn", "embed")),
+        "norm2": norm_defs(cfg),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def _gates(cfg, p, u, policy):
+    """u (B,S,dr) conv output -> log_a (fp32), scaled input."""
+    r = jax.nn.sigmoid((u @ policy.c(p["w_r"])).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ policy.c(p["w_i"])).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return log_a, b
+
+
+def rglru_apply(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY, state=None):
+    """Full-sequence block.  Returns (y, new_state)."""
+    c = policy.c
+    xi = apply_norm(cfg, p["norm"], x, policy)
+    u0 = xi @ c(p["wx"])
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u0, c(p["wconv"]), conv_state)
+    log_a, bterm = _gates(cfg, p, u, policy)
+    a = jnp.exp(log_a)
+    if state is not None:
+        # fold carried h into the first step via a virtual leading element
+        bterm = bterm.at[:, 0].add(a[:, 0] * state["h"])
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(comb, (a, bterm), axis=1)
+    gate = jax.nn.gelu(xi @ c(p["wg"]))
+    y = (h.astype(policy.compute) * gate) @ c(p["wo"])
+    x = x + y
+    xj = apply_norm(cfg, p["norm2"], x, policy)
+    x = x + apply_mlp(cfg, p["mlp"], xj, policy)
+    new_state = {"conv": new_conv, "h": h[:, -1]}
+    return x, new_state
+
+
+def rglru_decode(cfg: ArchConfig, p, x, state, policy=DEFAULT_POLICY):
+    """x (B,1,D) one-token update."""
+    c = policy.c
+    xi = apply_norm(cfg, p["norm"], x, policy)
+    u0 = xi @ c(p["wx"])
+    u, new_conv = _causal_conv(u0, c(p["wconv"]), state["conv"])
+    log_a, bterm = _gates(cfg, p, u, policy)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + bterm[:, 0]      # (B,dr)
+    gate = jax.nn.gelu(xi @ c(p["wg"]))
+    y = (h[:, None].astype(policy.compute) * gate) @ c(p["wo"])
+    x = x + y
+    xj = apply_norm(cfg, p["norm2"], x, policy)
+    x = x + apply_mlp(cfg, p["mlp"], xj, policy)
+    return x, {"conv": new_conv, "h": h}
+
+
+def rglru_state_defs(cfg: ArchConfig, batch: int):
+    dr, cw = _dr(cfg), cfg.conv_width
+    return {
+        "conv": Pm((batch, cw - 1, dr), ("batch", None, "d_rnn"),
+                   init="zeros", dtype=jnp.bfloat16),
+        "h": Pm((batch, dr), ("batch", "d_rnn"), init="zeros",
+                dtype=jnp.float32),
+    }

@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: ``frames``
+(B, n_frames, d_model) precomputed embeddings arrive as inputs.  The
+encoder adds fixed sinusoidal positions and runs non-causal blocks; the
+decoder runs causal self-attn + cross-attn blocks with learned positions.
+Shapes interpret seq_len as the decoder length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models import attention as att
+from repro.models.layers import (DEFAULT_POLICY, Pm, apply_mlp, apply_norm,
+                                 embed_defs, embed_tokens, lm_logits,
+                                 mlp_defs, norm_defs, sincos_table)
+from repro.models.params import stack_defs
+
+
+def _enc_block_defs(cfg):
+    return {"ln1": norm_defs(cfg), "attn": att.attn_defs(cfg),
+            "ln2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+
+
+def _dec_block_defs(cfg):
+    return {"ln1": norm_defs(cfg), "self_attn": att.attn_defs(cfg),
+            "lnx": norm_defs(cfg), "cross_attn": att.attn_defs(cfg),
+            "ln2": norm_defs(cfg), "mlp": mlp_defs(cfg)}
+
+
+def whisper_param_defs(cfg: ArchConfig, max_seq: int):
+    return {
+        "embed": embed_defs(cfg),
+        "pos": Pm((max_seq, cfg.d_model), ("seq", "embed"), scale=0.02),
+        "enc_blocks": stack_defs(_enc_block_defs(cfg), cfg.encoder.n_layers),
+        "enc_final": norm_defs(cfg),
+        "dec_blocks": stack_defs(_dec_block_defs(cfg), cfg.n_layers),
+        "final": norm_defs(cfg),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames, policy=DEFAULT_POLICY):
+    """frames (B,F,D) stub embeddings -> encoder memory (B,F,D)."""
+    f = frames.shape[1]
+    x = policy.c(frames) + policy.c(sincos_table(f, cfg.d_model))
+    x = shard_act(x, ("batch", "frames", "embed"))
+    positions = jnp.arange(f, dtype=jnp.int32)
+
+    def body(x, p):
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        x = x + att.attn_forward(cfg, p["attn"], h, positions, policy=policy,
+                                 causal=False, q_chunk=min(1024, f))
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        x = x + apply_mlp(cfg, p["mlp"], h, policy)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_final"], x, policy)
+
+
+def _dec_block(cfg, p, x, positions, mem, policy):
+    h = apply_norm(cfg, p["ln1"], x, policy)
+    x = x + att.attn_forward(cfg, p["self_attn"], h, positions, policy=policy)
+    h = apply_norm(cfg, p["lnx"], x, policy)
+    x = x + att.cross_attn_forward(cfg, p["cross_attn"], h, mem, policy=policy)
+    h = apply_norm(cfg, p["ln2"], x, policy)
+    return x + apply_mlp(cfg, p["mlp"], h, policy)
+
+
+def whisper_forward(cfg: ArchConfig, params, batch, policy=DEFAULT_POLICY,
+                    remat: bool = True):
+    """batch: frames (B,F,D), tokens (B,S).  Returns (logits, aux=0)."""
+    mem = encode(cfg, params, batch["frames"], policy)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens, policy)
+    x = x + policy.c(params["pos"][:s])
+
+    def body(x, p):
+        return _dec_block(cfg, p, x, positions, mem, policy), None
+
+    fn = jax.checkpoint(lambda x, p: body(x, p)[0], prevent_cse=False) \
+        if remat else (lambda x, p: body(x, p)[0])
+    x, _ = jax.lax.scan(lambda c, p: (fn(c, p), None), x, params["dec_blocks"])
+    x = apply_norm(cfg, params["final"], x, policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)
+    return shard_act(logits, ("batch", "seq", "vocab")), jnp.zeros((), jnp.float32)
+
+
+def whisper_cache_defs(cfg: ArchConfig, batch: int, max_seq: int):
+    kv, hd, f = cfg.n_kv_heads, cfg.hd, cfg.encoder.n_frames
+    self_kv = att.kv_cache_defs(cfg, batch, max_seq)
+    cross = {
+        "k": Pm((batch, f, kv, hd), ("batch", "frames", "kv_heads", "head_dim"),
+                init="zeros", dtype=jnp.bfloat16),
+        "v": Pm((batch, f, kv, hd), ("batch", "frames", "kv_heads", "head_dim"),
+                init="zeros", dtype=jnp.bfloat16),
+    }
+    return {"dec": stack_defs({"self": self_kv, "cross": cross}, cfg.n_layers)}
+
+
+def whisper_prefill(cfg: ArchConfig, params, tokens, extras, max_cache: int,
+                    policy=DEFAULT_POLICY):
+    mem = encode(cfg, params, extras["frames"], policy)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens, policy)
+    x = x + policy.c(params["pos"][:s])
+    c = policy.c
+
+    def body(x, p):
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        a, self_cache = att.attn_prefill(cfg, p["self_attn"], h, positions,
+                                         max_cache, policy=policy)
+        x = x + a
+        h = apply_norm(cfg, p["lnx"], x, policy)
+        x = x + att.cross_attn_forward(cfg, p["cross_attn"], h, mem,
+                                       policy=policy)
+        ck = jnp.einsum("bfd,dhk->bfhk", mem, c(p["cross_attn"]["wk"]))
+        cv = jnp.einsum("bfd,dhk->bfhk", mem, c(p["cross_attn"]["wv"]))
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        x = x + apply_mlp(cfg, p["mlp"], h, policy)
+        return x, {"self": self_cache,
+                   "cross": {"k": ck.astype(x.dtype),
+                             "v": cv.astype(x.dtype)}}
+
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(cfg, params["final"], x[:, -1:], policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)[:, 0]
+    return logits, {"dec": caches}
+
+
+def _cross_decode(cfg, p, x, cross, policy):
+    """Read-only cross-attention for one query token."""
+    c = policy.c
+    q = jnp.einsum("bsd,dhk->bshk", x, c(p["wq"]))
+    qf = att._fold_gqa(q, cfg.n_kv_heads)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, cross["k"],
+                   preferred_element_type=jnp.float32) * (cfg.hd ** -0.5)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr, cross["v"])
+    o = o.reshape(x.shape[0], 1, cfg.n_heads, cfg.hd)
+    return jnp.einsum("bshk,hkd->bsd", o, c(p["wo"]))
+
+
+def whisper_decode(cfg: ArchConfig, params, cache, token, pos,
+                   policy=DEFAULT_POLICY):
+    x = embed_tokens(cfg, params["embed"], token, policy)
+    x = x + policy.c(jnp.take(params["pos"], pos, axis=0))[:, None]
+
+    def body(x, xs):
+        p, cc = xs
+        h = apply_norm(cfg, p["ln1"], x, policy)
+        a, self_new = att.attn_decode(cfg, p["self_attn"], h, cc["self"], pos,
+                                      policy=policy)
+        x = x + a
+        h = apply_norm(cfg, p["lnx"], x, policy)
+        x = x + _cross_decode(cfg, p["cross_attn"], h, cc["cross"], policy)
+        h = apply_norm(cfg, p["ln2"], x, policy)
+        x = x + apply_mlp(cfg, p["mlp"], h, policy)
+        return x, {"self": self_new, "cross": cc["cross"]}
+
+    x, new_dec = jax.lax.scan(body, x, (params["dec_blocks"], cache["dec"]))
+    x = apply_norm(cfg, params["final"], x, policy)
+    logits = lm_logits(cfg, params["embed"], x, policy)[:, 0]
+    return logits, {"dec": new_dec}

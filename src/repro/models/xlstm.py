@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel training form) and
+sLSTM (scalar memory, recurrent scan) — arXiv:2405.04517.
+
+Both blocks are self-contained (carry their own up/down projections;
+assignment sets d_ff=0).  Training uses the stabilized chunkwise-parallel
+mLSTM formulation (intra-chunk attention-like einsums + inter-chunk carried
+state), scanned over chunks; decode is the O(1) recurrent update.
+
+State shapes (per layer):
+  mlstm: conv (B,cw-1,di)  C (B,H,hd,hd)  n (B,H,hd)  m (B,H)
+  slstm: c,n,h (B,H,hd)    m (B,H)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import DEFAULT_POLICY, Pm, apply_norm, norm_defs
+
+CHUNK = 256
+
+
+def _di(cfg):          # mLSTM inner width
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def _hd(cfg):          # per-head inner dim
+    return _di(cfg) // cfg.n_heads
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ArchConfig):
+    d, di, h = cfg.d_model, _di(cfg), cfg.n_heads
+    cw = cfg.conv_width
+    return {
+        "norm": norm_defs(cfg),
+        "wup": Pm((d, 2 * di), ("embed", "ffn")),
+        "wconv": Pm((cw, di), ("window", "ffn")),
+        # block-diagonal per-head qkv (official xlstm style; a dense (di,di)
+        # projection would put the 1.3B config at ~3.6B params)
+        "wq": Pm((h, _hd(cfg), _hd(cfg)), ("heads", None, None)),
+        "wk": Pm((h, _hd(cfg), _hd(cfg)), ("heads", None, None)),
+        "wv": Pm((h, _hd(cfg), _hd(cfg)), ("heads", None, None)),
+        "wgate": Pm((di, 2 * h), ("ffn", "heads"), scale=0.1),
+        "hnorm": Pm((di,), ("ffn",), init="ones"),
+        "wdown": Pm((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv. u (B,S,F), w (cw,F). state (B,cw-1,F) or None."""
+    cw = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    return out, up[:, -(cw - 1):]                    # (B,S,F), new state
+
+
+def _heads(x, h):
+    b, s, di = x.shape
+    return x.reshape(b, s, h, di // h)
+
+
+def _mlstm_gates(cfg, p, xc, policy):
+    g = (xc @ policy.c(p["wgate"])).astype(jnp.float32)     # (B,S,2H)
+    h = cfg.n_heads
+    logi, logf = g[..., :h], jax.nn.log_sigmoid(g[..., h:])
+    return logi, logf
+
+
+def mlstm_apply(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY, state=None):
+    """Full-sequence mLSTM block.  Returns (y, new_state)."""
+    c = policy.c
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, _hd(cfg)
+    xi = apply_norm(cfg, p["norm"], x, policy)
+    up = xi @ c(p["wup"])
+    xm, z = up[..., :_di(cfg)], up[..., _di(cfg):]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xm, c(p["wconv"]), conv_state)
+    xc = jax.nn.silu(xc)
+    xch, xmh = _heads(xc, h), _heads(xm, h)
+    q = jnp.einsum("bshd,hde->bshe", xch, c(p["wq"])) * (hd ** -0.5)
+    k = jnp.einsum("bshd,hde->bshe", xch, c(p["wk"]))
+    v = jnp.einsum("bshd,hde->bshe", xmh, c(p["wv"]))
+    logi, logf = _mlstm_gates(cfg, p, xc, policy)           # (B,S,H)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    L = min(CHUNK, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    def resh(t, extra=()):                                   # (B,S,H,...) -> (nc,B,L,H,...)
+        return jnp.moveaxis(t.reshape((b, nc, L) + t.shape[2:]), 1, 0)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lis, lfs = resh(logi), resh(logf)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, li, lf = xs                              # (B,L,H,hd)/(B,L,H)
+        F = jnp.cumsum(lf, axis=1)                           # inclusive (B,L,H)
+        # decay of (k_j,v_j) arriving at i:  F_i - F_j + li_j   (j<=i)
+        Dij = (F[:, :, None] - F[:, None, :] + li[:, None, :])   # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        Dij = jnp.where(causal[None, :, :, None], Dij, -jnp.inf)
+        m_intra = jnp.max(Dij, axis=2)                       # (B,L,H)
+        m_inter = F + m[:, None]                             # (B,L,H)
+        mi = jnp.maximum(m_intra, m_inter)
+        sc = jnp.einsum("blhd,bjhd->bljh", qc, kc,
+                        preferred_element_type=jnp.float32)
+        w = sc * jnp.exp(jnp.where(jnp.isfinite(Dij), Dij, -1e30)
+                         - mi[:, :, None])                   # (B,L,L,H)
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        inter_scale = jnp.exp(m_inter - mi)                  # (B,L,H)
+        h_intra = jnp.einsum("bljh,bjhd->blhd", w, vc.astype(jnp.float32))
+        h_inter = jnp.einsum("blhd,bhdk->blhk", qc.astype(jnp.float32), C) \
+            * inter_scale[..., None]
+        norm_intra = jnp.sum(w, axis=2)                      # (B,L,H)
+        norm_inter = jnp.einsum("blhd,bhd->blh", qc.astype(jnp.float32), n) \
+            * inter_scale
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter), jnp.exp(-mi))
+        hout = (h_intra + h_inter) / denom[..., None]        # (B,L,H,hd)
+        # carry to next chunk
+        Ftot = F[:, -1]                                      # (B,H)
+        m_next = jnp.maximum(Ftot + m, jnp.max(Ftot[:, None] - F + li, axis=1))
+        scale_old = jnp.exp(Ftot + m - m_next)               # (B,H)
+        wj = jnp.exp(Ftot[:, None] - F + li - m_next[:, None])  # (B,L,H)
+        C_new = C * scale_old[..., None, None] + jnp.einsum(
+            "bjhd,bjhk->bhdk", (kc.astype(jnp.float32) * wj[..., None]),
+            vc.astype(jnp.float32))
+        n_new = n * scale_old[..., None] + jnp.einsum(
+            "bjhd,bjh->bhd", kc.astype(jnp.float32), wj)
+        return (C_new, n_new, m_next), hout
+
+    (C1, n1, m1), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qs, ks, vs, lis, lfs))
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, h * hd).astype(policy.compute)
+    hn = hseq.astype(jnp.float32)
+    var = jnp.mean(hn * hn, axis=-1, keepdims=True)
+    hseq = (hn * jax.lax.rsqrt(var + cfg.norm_eps) * p["hnorm"]).astype(policy.compute)
+    y = (hseq * jax.nn.silu(z)) @ c(p["wdown"])
+    new_state = {"conv": new_conv, "C": C1, "n": n1, "m": m1}
+    return x + y, new_state
+
+
+def mlstm_decode(cfg: ArchConfig, p, x, state, policy=DEFAULT_POLICY):
+    """One-token recurrent update; x (B,1,D)."""
+    c = policy.c
+    b = x.shape[0]
+    h, hd = cfg.n_heads, _hd(cfg)
+    xi = apply_norm(cfg, p["norm"], x, policy)
+    up = xi @ c(p["wup"])
+    xm, z = up[..., :_di(cfg)], up[..., _di(cfg):]
+    xc, new_conv = _causal_conv(xm, c(p["wconv"]), state["conv"])
+    xc = jax.nn.silu(xc)
+    xch, xmh = _heads(xc, h), _heads(xm, h)
+    q = jnp.einsum("bshd,hde->bshe", xch, c(p["wq"]))[:, 0] * (hd ** -0.5)
+    k = jnp.einsum("bshd,hde->bshe", xch, c(p["wk"]))[:, 0]
+    v = jnp.einsum("bshd,hde->bshe", xmh, c(p["wv"]))[:, 0]
+    logi, logf = _mlstm_gates(cfg, p, xc, policy)
+    li, lf = logi[:, 0], logf[:, 0]                          # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)[..., None]
+    ip = jnp.exp(li - m_new)[..., None]
+    kf, vf, qf = (k.astype(jnp.float32), v.astype(jnp.float32),
+                  q.astype(jnp.float32))
+    C1 = C * fp[..., None] + ip[..., None] * kf[..., None] * vf[:, :, None, :]
+    n1 = n * fp + ip * kf
+    num = jnp.einsum("bhd,bhdk->bhk", qf, C1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n1)),
+                      jnp.exp(-m_new))
+    hout = (num / den[..., None]).reshape(b, 1, h * hd).astype(policy.compute)
+    hn = hout.astype(jnp.float32)
+    var = jnp.mean(hn * hn, axis=-1, keepdims=True)
+    hout = (hn * jax.lax.rsqrt(var + cfg.norm_eps) * p["hnorm"]).astype(policy.compute)
+    y = (hout * jax.nn.silu(z)) @ c(p["wdown"])
+    return x + y, {"conv": new_conv, "C": C1, "n": n1, "m": m_new}
+
+
+def mlstm_state_defs(cfg: ArchConfig, batch: int):
+    di, h, hd, cw = _di(cfg), cfg.n_heads, _hd(cfg), cfg.conv_width
+    return {
+        "conv": Pm((batch, cw - 1, di), ("batch", None, "ffn"),
+                   init="zeros", dtype=jnp.bfloat16),
+        "C": Pm((batch, h, hd, hd), ("batch", "heads", None, None),
+                init="zeros", dtype=jnp.float32),
+        "n": Pm((batch, h, hd), ("batch", "heads", None),
+                init="zeros", dtype=jnp.float32),
+        "m": Pm((batch, h), ("batch", "heads"), init="zeros", dtype=jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_defs(cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    f = int(d * 4 / 3) // 2 * 2
+    return {
+        "norm": norm_defs(cfg),
+        "wx": Pm((d, 4 * d), ("embed", "ffn")),
+        "r": Pm((4, h, hd, hd), (None, "heads", None, None), scale=0.5),
+        "hnorm": Pm((d,), ("embed",), init="ones"),
+        "norm2": norm_defs(cfg),
+        "ffn_wi": Pm((d, f), ("embed", "ffn")),
+        "ffn_wg": Pm((d, f), ("embed", "ffn")),
+        "ffn_wo": Pm((f, d), ("ffn", "embed")),
+    }
+
+
+def _slstm_cell(gx, state, r):
+    """gx (B,4,H,hd) precomputed input gates; state dict; r (4,H,hd,hd)."""
+    cs, ns, hs, ms = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,ghde->bghe", hs, r)               # (B,4,H,hd)
+    g = (gx + rec).astype(jnp.float32)
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + ms, gi)
+    ip = jnp.exp(gi - m_new)
+    fp = jnp.exp(logf + ms - m_new)
+    c_new = fp * cs + ip * jnp.tanh(gz)
+    n_new = jnp.maximum(fp * ns + ip, 1e-6)
+    h_new = jax.nn.sigmoid(go) * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(cfg: ArchConfig, p, x, policy=DEFAULT_POLICY, state=None):
+    c = policy.c
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xi = apply_norm(cfg, p["norm"], x, policy)
+    gx = (xi @ c(p["wx"])).reshape(b, s, 4, h, hd)
+    if state is None:
+        z = jnp.zeros((b, h, hd), jnp.float32)
+        state = {"c": z, "n": z + 1e-6, "h": z,
+                 "m": jnp.full((b, h, hd), -1e30, jnp.float32)}
+    rf = p["r"].astype(jnp.float32)
+
+    def step(st, gx_t):
+        st2 = _slstm_cell(gx_t.astype(jnp.float32), st, rf)
+        return st2, st2["h"]
+
+    state2, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    hn = hseq * jax.lax.rsqrt(
+        jnp.mean(hseq * hseq, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = x + (hn * p["hnorm"]).astype(policy.compute)
+    # gated FFN (4/3)
+    xj = apply_norm(cfg, p["norm2"], y, policy)
+    ff = (jax.nn.gelu(xj @ c(p["ffn_wg"])) * (xj @ c(p["ffn_wi"]))) @ c(p["ffn_wo"])
+    return y + ff, state2
+
+
+def slstm_decode(cfg: ArchConfig, p, x, state, policy=DEFAULT_POLICY):
+    y, st = slstm_apply(cfg, p, x, policy, state)
+    return y, st
+
+
+def slstm_state_defs(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    mk = lambda init: Pm((batch, h, hd), ("batch", "heads", None),
+                         init=init, dtype=jnp.float32)
+    return {"c": mk("zeros"), "n": mk("ones"), "h": mk("zeros"), "m": mk("zeros")}

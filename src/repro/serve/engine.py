@@ -1,0 +1,116 @@
+"""Batched serving engine: compiled prefill + decode with KV cache, greedy
+sampling, slot-based batching, and — because the checkpoint boundary is a
+pure pytree here too — CHECKPOINTABLE inference state (cache + positions +
+generated tokens), restorable onto a different mesh.  That is the paper's
+story applied to serving: an inference service can be drained, snapshotted
+and moved across "implementations" (meshes/hosts) mid-generation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingRules, sharding_ctx
+from repro.models.layers import DEFAULT_POLICY, Policy
+from repro.models.registry import get_api
+
+
+@dataclass
+class GenResult:
+    tokens: np.ndarray              # (B, n_new)
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, mesh, rules: ShardingRules,
+                 *, max_seq: int, policy: Policy = DEFAULT_POLICY):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        self.max_seq = max_seq
+        self.policy = policy
+        self.api = get_api(cfg)
+
+        def prefill(params, tokens, extras):
+            with sharding_ctx(mesh, rules):
+                return self.api.prefill(cfg, params, tokens, extras, max_seq,
+                                        )
+        def decode(params, cache, token, pos):
+            with sharding_ctx(mesh, rules):
+                return self.api.decode(cfg, params, cache, token, pos)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self.cache = None
+        self.pos = None
+        self.generated: List[np.ndarray] = []
+
+    # ------------------------------------------------------------- generate
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extras: Optional[dict] = None) -> GenResult:
+        """prompts (B, P) equal-length token batch; greedy decode n_new."""
+        b, p = prompts.shape
+        assert p + n_new <= self.max_seq, (p, n_new, self.max_seq)
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      extras or {})
+        # pad prefill cache (built at prompt length) up to max_seq buffers
+        cache = self._pad_cache(cache, p)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+
+        t0 = time.time()
+        pos = jnp.full((b,), p, jnp.int32)
+        out = [np.asarray(tok)]
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos = pos + 1
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        self.cache, self.pos = cache, pos + 1
+        toks = np.concatenate(out, axis=1)
+        self.generated.append(toks)
+        return GenResult(tokens=toks, prefill_s=t_prefill, decode_s=t_decode,
+                         tokens_per_s=b * max(n_new - 1, 1) / max(t_decode, 1e-9))
+
+    def _pad_cache(self, cache, p: int):
+        """Grow seq-dim buffers from prompt length to max_seq (zero fill).
+        Target defs are built with batch=1; dims of size 1 in the target
+        take the runtime batch, larger target dims are zero-padded."""
+        from repro.models.params import is_pm
+        target = self.api.cache_defs(self.cfg, 1, self.max_seq)
+
+        def pad(x, tdef):
+            tshape = [sx if st == 1 else max(sx, st)
+                      for sx, st in zip(x.shape, tdef.shape)]
+            pads = [(0, t - s) for s, t in zip(x.shape, tshape)]
+            return jnp.pad(x, pads) if any(pp[1] for pp in pads) else x
+
+        flat_t = jax.tree.leaves(target, is_leaf=is_pm)
+        flat_x, treedef = jax.tree.flatten(cache)
+        assert len(flat_t) == len(flat_x), (len(flat_t), len(flat_x))
+        return jax.tree.unflatten(treedef,
+                                  [pad(x, t) for x, t in zip(flat_x, flat_t)])
+
+    # ----------------------------------------------------------- checkpoint
+    def snapshot_service(self, mgr: CheckpointManager, step: int) -> None:
+        """Drain (block) + snapshot serving state — paper FSM for serving."""
+        payload = {"cache": self.cache,
+                   "pos": self.pos,
+                   "generated": np.concatenate(self.generated, axis=1)
+                   if self.generated else np.zeros((0, 0), np.int32)}
+        mgr.save(step, payload, meta={"kind": "serve", "arch": self.cfg.name})
+        mgr.wait()

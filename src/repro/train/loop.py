@@ -1,0 +1,112 @@
+"""Fault-tolerant training loop: the paper's FSM at the jit-step level.
+
+RUN -> (every ckpt_every steps) QUIESCE/DRAIN -> SNAPSHOT -> RESUME
+
+  drain    = block_until_ready(state) + wait for previous async write +
+             drain (or cache) the data-prefetch queue
+  snapshot = TrainState pytree + pipeline cursor + rng; nothing else exists
+             to save — the functional step makes the proxy boundary
+             structural (DESIGN.md §2)
+  restore  = newest valid checkpoint, auto-resumed, resharded onto the
+             current mesh (elastic).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.sharding import ShardingRules
+from repro.models.layers import Policy
+from repro.train.state import make_train_state, state_shardings
+from repro.train.step import make_train_step
+
+
+@dataclass
+class TrainResult:
+    losses: List[float] = field(default_factory=list)
+    steps_run: int = 0
+    resumed_from: Optional[int] = None
+    ckpt_stats: dict = field(default_factory=dict)
+    wall_s: float = 0.0
+
+
+def train(cfg: ArchConfig, mesh, rules: ShardingRules, *,
+          n_steps: int,
+          global_batch: int,
+          seq_len: int,
+          ckpt_root: Optional[str | Path] = None,
+          ckpt_every: int = 50,
+          keep: int = 3,
+          base_lr: float = 3e-4,
+          warmup: int = 20,
+          accum_steps: int = 1,
+          policy: Policy = Policy(),
+          seed: int = 0,
+          fail_at_step: Optional[int] = None,
+          log_every: int = 10,
+          remat: bool = True) -> TrainResult:
+    """Run (or resume) training.  ``fail_at_step`` injects a crash for the
+    fault-tolerance tests: the process raises AFTER that step completes but
+    BEFORE the next checkpoint — a rerun must recover from the last one."""
+    t_start = time.time()
+    step_fn, st_shard = make_train_step(
+        cfg, mesh, rules, accum_steps=accum_steps, base_lr=base_lr,
+        warmup=warmup, policy=policy, max_seq=seq_len, total_steps=n_steps,
+        remat=remat)
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    result = TrainResult()
+    mgr = None
+    state = None
+    pipe = None
+    if ckpt_root is not None:
+        mgr = CheckpointManager(ckpt_root, keep=keep)
+        template = jax.eval_shape(
+            lambda: make_train_state(cfg, jax.random.PRNGKey(seed), seq_len))
+        template = {"train": template,
+                    "data": {"seed": np.int64(0), "cursor": np.int64(0)}}
+        restored, meta = mgr.restore(template, None)
+        if restored is not None:
+            state = jax.tree.map(jax.numpy.asarray, restored["train"])
+            pipe = TokenPipeline(cfg.vocab_size, global_batch, seq_len,
+                                 seed=int(restored["data"]["seed"]))
+            pipe.cursor = int(restored["data"]["cursor"])
+            result.resumed_from = int(meta.get("step", -1))
+    if state is None:
+        state = make_train_state(cfg, jax.random.PRNGKey(seed), seq_len)
+        pipe = TokenPipeline(cfg.vocab_size, global_batch, seq_len, seed=seed)
+
+    start_step = int(state["step"])
+    for step in range(start_step, n_steps):
+        batch = pipe.next_batch()
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        state, metrics = jit_step(state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            loss = float(metrics["loss"])
+            result.losses.append(loss)
+        result.steps_run += 1
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            payload = {"train": state,
+                       "data": {"seed": np.int64(pipe.seed),
+                                "cursor": np.int64(pipe.cursor)}}
+            mgr.save(step + 1, payload, meta={"step": step + 1,
+                                              "arch": cfg.name,
+                                              "rules": rules.name,
+                                              "mesh": dict(mesh.shape)})
+        if fail_at_step is not None and step + 1 >= fail_at_step:
+            if mgr is not None:
+                mgr.wait()
+            raise RuntimeError(f"injected failure after step {step + 1}")
+    if mgr is not None:
+        mgr.wait()
+        result.ckpt_stats = dict(mgr.stats)
+    result.wall_s = time.time() - t_start
+    return result

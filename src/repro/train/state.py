@@ -1,0 +1,76 @@
+"""TrainState: the COMPLETE application-side checkpoint payload.
+
+This pytree is the paper's checkpoint boundary made explicit: everything
+needed to resume is here (params, optimizer moments, step counter, RNG key,
+data-pipeline cursor), and nothing implementation-specific (no device
+layouts, no compiled executables, no collective state) ever enters it —
+see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import abstract_params, init_params
+from repro.models.registry import get_api
+from repro.optim.adamw import init_opt_state
+
+
+def make_train_state(cfg, rng, max_seq: int, master_fp32: bool = False):
+    """Real, initialized state (smoke tests / real training).
+
+    master_fp32=True: params stored bf16 (what FSDP all-gathers — half the
+    gather bytes), with the fp32 master copy sharded inside opt state."""
+    defs = get_api(cfg).param_defs(cfg, max_seq)
+    params = init_params(defs, rng)
+    opt = init_opt_state(params)
+    if master_fp32:
+        opt["master"] = params
+        params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    return {
+        "params": params,
+        "opt": opt,
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.PRNGKey(0),
+        "data_cursor": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_train_state(cfg, max_seq: int, master_fp32: bool = False):
+    """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
+    defs = get_api(cfg).param_defs(cfg, max_seq)
+    params = abstract_params(defs)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = {"m": jax.tree.map(f32, params),
+           "v": jax.tree.map(f32, params),
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if master_fp32:
+        opt["master"] = jax.tree.map(f32, params)
+        params = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16), params)
+    return {
+        "params": params,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        "data_cursor": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_shardings(cfg, max_seq: int, mesh, rules, master_fp32: bool = False):
+    """NamedSharding tree matching {abstract_,make_}train_state."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.sharding import param_shardings
+    defs = get_api(cfg).param_defs(cfg, max_seq)
+    pshard = param_shardings(defs, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    opt = {"m": pshard, "v": pshard, "count": rep}
+    if master_fp32:
+        opt["master"] = pshard
+    return {
+        "params": pshard,
+        "opt": opt,
+        "step": rep,
+        "rng": rep,
+        "data_cursor": rep,
+    }

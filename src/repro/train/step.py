@@ -1,0 +1,197 @@
+"""train_step / serve_step builders: the jit boundary.
+
+The returned step functions are pure (state, batch) -> (state, metrics) /
+(cache, token) -> (logits, cache) pytree maps — the single "ephemeral
+channel" of the paper's proxy boundary.  All sharding is attached here via
+in_shardings/out_shardings derived from the logical rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed.sharding import (ShardingRules, param_shardings,
+                                        resolve_spec, shard_act, sharding_ctx)
+from repro.models.layers import DEFAULT_POLICY, Policy
+from repro.models.params import abstract_params
+from repro.models.registry import (batch_logical_axes, batch_specs, get_api)
+from repro.optim.adamw import AdamWCfg, adamw_update, cosine_schedule
+from repro.train.state import abstract_train_state, state_shardings
+
+
+def softmax_xent(logits, targets):
+    """fp32 cross-entropy, mean over tokens.  logits (B,S,V) targets (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def default_accum(cfg: ArchConfig, shape: ShapeCfg) -> int:
+    """Microbatching heuristic: bound activation memory for big models."""
+    if shape.kind != "train":
+        return 1
+    n = cfg.n_params()
+    if n > 2e10:
+        return 8
+    if n > 5e9:
+        return 4
+    if n > 5e8:
+        return 2
+    return 1
+
+
+def make_train_step(cfg: ArchConfig, mesh, rules: ShardingRules, *,
+                    accum_steps: int = 1,
+                    policy: Policy = DEFAULT_POLICY,
+                    base_lr: float = 3e-4,
+                    warmup: int = 100,
+                    total_steps: int = 10000,
+                    adamw: AdamWCfg = AdamWCfg(),
+                    remat: bool = True,
+                    master_fp32: bool = False,
+                    max_seq: int = 4096):
+    """Returns (step_fn, state_shardings_tree).
+
+    master_fp32: params live in bf16 (halving FSDP all-gather traffic and
+    removing per-use fp32->bf16 converts); AdamW updates the sharded fp32
+    master in opt state and re-casts."""
+    api = get_api(cfg)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, mb):
+        logits, aux = api.forward(cfg, params, mb, policy, remat)
+        loss = softmax_xent(logits, mb["targets"])
+        return loss + aux, (loss, aux)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def micro_grads(mb):
+            (tot, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            return grads, loss, aux
+
+        if accum_steps == 1:
+            grads, loss, aux = micro_grads(batch)
+        else:
+            def resh(x):
+                a = accum_steps
+                y = x.reshape((a, x.shape[0] // a) + x.shape[1:])
+                # microbatch dim replicated; batch stays on ("pod","data")
+                mb_spec = resolve_spec((None, "batch") + (None,) * (x.ndim - 1),
+                                       y.shape, mesh, rules)
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, mb_spec))
+
+            mbs = jax.tree.map(resh, batch)
+
+            def body(carry, mb):
+                gsum, lsum, asum = carry
+                g, l, a = micro_grads(mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l, asum + a), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss, aux = lsum / accum_steps, asum / accum_steps
+
+        lr = lr_fn(state["step"])
+        if master_fp32:
+            opt = dict(state["opt"])
+            master = opt.pop("master")
+            new_master, new_opt, om = adamw_update(master, grads, opt, lr,
+                                                   adamw)
+            new_opt["master"] = new_master
+            new_params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16), new_master)
+        else:
+            new_params, new_opt, om = adamw_update(params, grads,
+                                                   state["opt"], lr, adamw)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1,
+                         data_cursor=state["data_cursor"] + 1)
+        metrics = {"loss": loss, "aux_loss": aux, "lr": lr, **om}
+        return new_state, metrics
+
+    st_shard = state_shardings(cfg, max_seq, mesh, rules,
+                               master_fp32=master_fp32)
+
+    def wrapped(state, batch):
+        with sharding_ctx(mesh, rules):
+            return train_step(state, batch)
+
+    return wrapped, st_shard
+
+
+def make_serve_fns(cfg: ArchConfig, mesh, rules: ShardingRules, *,
+                   policy: Policy = DEFAULT_POLICY, max_cache: int = 0):
+    """Returns (prefill_fn, decode_fn) closures with sharding ctx installed."""
+    api = get_api(cfg)
+
+    def prefill(params, batch):
+        with sharding_ctx(mesh, rules):
+            tokens = batch["tokens"]
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            return api.prefill(cfg, params, tokens, extras,
+                               max_cache or tokens.shape[1])
+
+    def decode(params, cache, token, pos):
+        with sharding_ctx(mesh, rules):
+            return api.decode(cfg, params, cache, token, pos)
+
+    return prefill, decode
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs + shardings for the dry-run (every arch x shape x mesh)
+# --------------------------------------------------------------------------
+
+def dryrun_spec(cfg: ArchConfig, shape: ShapeCfg, mesh, rules: ShardingRules,
+                accum_steps: Optional[int] = None,
+                master_fp32: bool = False):
+    """Returns (fn, args_abstract, in_shardings, out_shardings_hint|None).
+
+    train:   fn(state, batch)
+    prefill: fn(params_bf16, batch)
+    decode:  fn(params_bf16, cache, token, pos)
+    """
+    api = get_api(cfg)
+    accum = default_accum(cfg, shape) if accum_steps is None else accum_steps
+    b_ax = batch_logical_axes(cfg, shape)
+    bspec = batch_specs(cfg, shape)
+    bshard = {k: NamedSharding(mesh, resolve_spec(b_ax[k], v.shape, mesh, rules))
+              for k, v in bspec.items()}
+
+    if shape.kind == "train":
+        step, st_shard = make_train_step(
+            cfg, mesh, rules, accum_steps=accum, max_seq=shape.seq_len,
+            master_fp32=master_fp32)
+        state = abstract_train_state(cfg, shape.seq_len,
+                                     master_fp32=master_fp32)
+        return step, (state, bspec), (st_shard, bshard), None
+
+    defs = api.param_defs(cfg, shape.seq_len)
+    params = abstract_params(defs, dtype_override=jnp.bfloat16)
+    pshard = param_shardings(defs, mesh, rules)
+    prefill, decode = make_serve_fns(cfg, mesh, rules, max_cache=shape.seq_len)
+
+    if shape.kind == "prefill":
+        return prefill, (params, bspec), (pshard, bshard), None
+
+    cache_defs = api.cache_defs(cfg, shape.global_batch, shape.seq_len)
+    cache = abstract_params(cache_defs)
+    cshard = param_shardings(cache_defs, mesh, rules)
+    return (decode,
+            (params, cache, bspec["token"], bspec["pos"]),
+            (pshard, cshard, bshard["token"], bshard["pos"]),
+            None)

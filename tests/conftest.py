@@ -1,0 +1,13 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device; only launch/dryrun.py (its own subprocess) forces 512."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-second integration tests")

@@ -1,0 +1,152 @@
+"""Checkpoint manager + serialization + data pipeline + train-loop C/R."""
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint import serialization as ser
+from repro.data.pipeline import TokenPipeline
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (32, 16)),
+                   "b": jnp.zeros((16,), jnp.bfloat16)},
+        "step": jnp.int32(7),
+        "nested": [jnp.arange(5), {"x": jnp.float32(1.5)}],
+    }
+
+
+def test_save_restore_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    st = _state()
+    mgr.save(10, st)
+    mgr.wait()
+    out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert meta["step"] == 10
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "bitwise restore"
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_async_write_is_donation_safe(tmp_path):
+    """The host snapshot is copied BEFORE save() returns; mutating (or
+    donating) the arrays afterwards must not corrupt the checkpoint."""
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=True)
+    x = np.arange(1000, dtype=np.float32)
+    st = {"x": jnp.asarray(x)}
+    mgr.save(1, st)
+    st["x"] = st["x"] * 0 - 99     # simulate donation/reuse immediately
+    mgr.wait()
+    out, _ = mgr.restore({"x": jax.ShapeDtypeStruct((1000,), jnp.float32)})
+    assert np.array_equal(np.asarray(out["x"]), x)
+
+
+def test_corruption_detected_and_skipped(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _state(1)); mgr.wait()
+    mgr.save(2, _state(2)); mgr.wait()
+    # corrupt the newest checkpoint's first shard
+    newest = tmp_path / "step_0000000002"
+    victim = sorted(newest.glob("leaf*"))[0]
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    assert not ser.validate(newest)
+    assert mgr.latest_valid().name == "step_0000000001"
+    out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert meta["step"] == 1
+
+
+def test_missing_manifest_is_invalid(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, _state()); mgr.wait()
+    (tmp_path / "step_0000000003" / "MANIFEST.json").unlink()
+    assert mgr.latest_valid() is None
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+        mgr.wait()
+    steps = mgr.list_steps()
+    assert steps == [3, 4]
+    assert mgr.stats["gc_removed"] == 2
+
+
+def test_write_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    mgr = CheckpointManager(tmp_path)
+    monkeypatch.setattr(ser, "save_shards",
+                        lambda *a, **k: (_ for _ in ()).throw(IOError("disk")))
+    mgr.save(1, _state())
+    with pytest.raises(RuntimeError):
+        mgr.wait()
+
+
+# ------------------------------------------------------------ data pipeline
+
+def test_pipeline_deterministic_and_resumable():
+    p1 = TokenPipeline(1000, 4, 16, seed=3)
+    batches = [p1.next_batch() for _ in range(5)]
+    snap = p1.snapshot()
+    more = [p1.next_batch() for _ in range(3)]
+    p2 = TokenPipeline.restore(snap)
+    again = [p2.next_batch() for _ in range(3)]
+    for a, b in zip(more, again):
+        assert np.array_equal(a["tokens"], b["tokens"])
+        assert np.array_equal(a["targets"], b["targets"])
+    # batch k is identical regardless of production time/order
+    p3 = TokenPipeline(1000, 4, 16, seed=3)
+    assert np.array_equal(p3._gen(2)["tokens"], batches[2]["tokens"])
+
+
+def test_pipeline_prefetch_and_inflight_cache():
+    p = TokenPipeline(1000, 2, 8, seed=1, prefetch=3)
+    p.start()
+    first = [p.next_batch() for _ in range(2)]
+    time.sleep(0.05)                       # let the producer fill the queue
+    snap = p.snapshot(cache_inflight=True)  # paper-faithful drain-to-cache
+    p.stop()
+    assert len(snap.get("inflight", [])) >= 1
+    p2 = TokenPipeline.restore(snap)
+    p2.start()
+    nxt = p2.next_batch()
+    p2.stop()
+    ref = TokenPipeline(1000, 2, 8, seed=1)._gen(2)
+    assert np.array_equal(nxt["tokens"], ref["tokens"])
+
+
+def test_pipeline_targets_are_shifted_tokens():
+    p = TokenPipeline(50, 2, 8, seed=0)
+    b = p.next_batch()
+    assert b["tokens"].shape == (2, 8) and b["targets"].shape == (2, 8)
+    assert not np.array_equal(b["tokens"], b["targets"])
+
+
+# --------------------------------------------------------- train-loop C / R
+
+@pytest.mark.slow
+def test_train_crash_resume_loss_continuity(tmp_path):
+    from repro.configs import ARCHS, reduce_for_smoke
+    from repro.distributed.sharding import make_variant
+    from repro.launch.mesh import make_local_mesh
+    from repro.train.loop import train
+
+    cfg = reduce_for_smoke(ARCHS["smollm-135m"])
+    mesh = make_local_mesh()
+    rules = make_variant("baseline")
+    kw = dict(n_steps=10, global_batch=4, seq_len=32, log_every=1, seed=5)
+    ref = train(cfg, mesh, rules, ckpt_root=None, **kw)
+    with pytest.raises(RuntimeError):
+        train(cfg, mesh, rules, ckpt_root=tmp_path, ckpt_every=4,
+              fail_at_step=7, **kw)
+    res = train(cfg, mesh, rules, ckpt_root=tmp_path, ckpt_every=4, **kw)
+    assert res.resumed_from == 4          # last ckpt before the injected crash
+    assert abs(res.losses[-1] - ref.losses[-1]) < 1e-6

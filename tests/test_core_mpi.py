@@ -1,0 +1,200 @@
+"""Semantics of the passive MPI stub: the paper's supported API (§5) plus
+the future-work calls, all through the proxy channel."""
+import numpy as np
+import pytest
+
+from repro.core import ANY_SOURCE, ANY_TAG, COMM_WORLD, MPIJob, Status
+from repro.core.messages import DATATYPES
+
+
+def run_app(n, step_fn, init_fn=lambda mpi: {}, steps=1, transport="shm"):
+    job = MPIJob(n, step_fn, init_fn, transport=transport)
+    try:
+        return job.run(steps, timeout=60)
+    finally:
+        job.stop()
+
+
+# ---------------------------------------------------------------- paper API
+
+def test_init_size_rank_type_size():
+    def step(mpi, st, k):
+        assert mpi.Comm_size() == 3
+        assert mpi.Comm_rank() == mpi.rank
+        assert mpi.Type_size("MPI_INT") == 4
+        assert mpi.Type_size("MPI_DOUBLE") == 8
+        return st
+    run_app(3, step)
+
+
+def test_send_recv_basic_and_order():
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            for i in range(5):
+                mpi.Send(np.array([i], np.int32), dest=1, tag=7)
+        elif mpi.rank == 1:
+            for i in range(5):
+                v = mpi.Recv(source=0, tag=7)
+                assert v[0] == i, "per-(src,tag) order must be preserved"
+        return st
+    run_app(2, step)
+
+
+def test_recv_any_source_any_tag():
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            got = set()
+            for _ in range(2):
+                status = Status()
+                v = mpi.Recv(source=ANY_SOURCE, tag=ANY_TAG,
+                             _status_out=status)
+                got.add((status.source, status.tag, int(v)))
+            assert got == {(1, 5, 100), (2, 9, 200)}
+        elif mpi.rank == 1:
+            mpi.Send(100, dest=0, tag=5)
+        else:
+            mpi.Send(200, dest=0, tag=9)
+        return st
+    run_app(3, step)
+
+
+def test_probe_iprobe_get_count():
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            mpi.Send(np.zeros(10, np.float64), dest=1, tag=3)
+        else:
+            status = mpi.Probe(source=0, tag=3)
+            assert mpi.Get_count(status, "MPI_DOUBLE") == 10
+            flag, st2 = mpi.Iprobe(source=0, tag=3)
+            assert flag and st2.count == 10
+            v = mpi.Recv(source=0, tag=3)       # cache-first consumption
+            assert v.shape == (10,)
+            flag, _ = mpi.Iprobe(source=0, tag=3)
+            assert not flag
+        return st
+    run_app(2, step)
+
+
+def test_get_count_byte_conversion():
+    s = Status(count=16, dtype="MPI_BYTE")
+    assert s.get_count("MPI_INT") == 4
+    assert s.get_count("MPI_DOUBLE") == 2
+    for dt, size in DATATYPES.items():
+        assert Status(count=size, dtype="MPI_BYTE").get_count(dt) == 1
+
+
+# ------------------------------------------------------------- non-blocking
+
+def test_isend_irecv_test_wait():
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            req = mpi.Isend(np.arange(4), dest=1, tag=1)
+            done, _ = mpi.Test(req)
+            assert done                      # buffered semantics
+        else:
+            req = mpi.Irecv(source=0, tag=1)
+            v = mpi.Wait(req)
+            assert np.array_equal(v, np.arange(4))
+        return st
+    run_app(2, step)
+
+
+# -------------------------------------------------------------- collectives
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+def test_barrier_and_bcast(n):
+    def step(mpi, st, k):
+        mpi.Barrier()
+        v = mpi.Bcast(np.arange(6) if mpi.Comm_rank() == 0 else None, root=0)
+        assert np.array_equal(v, np.arange(6))
+        v2 = mpi.Bcast("hello" if mpi.Comm_rank() == 2 % n else None,
+                       root=2 % n)
+        assert v2 == "hello"
+        return st
+    run_app(n, step)
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_scatter_gather_allgather(n):
+    def step(mpi, st, k):
+        me = mpi.Comm_rank()
+        mine = mpi.Scatter([10 * i for i in range(n)] if me == 0 else None)
+        assert mine == 10 * me
+        out = mpi.Gather(me * me, root=1)
+        if me == 1:
+            assert out == [i * i for i in range(n)]
+        else:
+            assert out is None
+        ag = mpi.Allgather(me + 1)
+        assert ag == [i + 1 for i in range(n)]
+        return st
+    run_app(n, step)
+
+
+@pytest.mark.parametrize("n,op,expect", [
+    (3, "sum", 0 + 1 + 2), (3, "max", 2), (4, "min", 0), (3, "prod", 0),
+])
+def test_reduce_ops(n, op, expect):
+    def step(mpi, st, k):
+        me = mpi.Comm_rank()
+        out = mpi.Reduce(np.float64(me), op=op, root=0)
+        if me == 0:
+            assert out == expect
+        return st
+    run_app(n, step)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_allreduce_ring_matches_numpy(n):
+    def step(mpi, st, k):
+        me = mpi.Comm_rank()
+        x = np.arange(17, dtype=np.float64) * (me + 1)     # size % n != 0
+        out = mpi.Allreduce(x, "sum")
+        expect = np.arange(17, dtype=np.float64) * sum(range(1, n + 1))
+        assert np.allclose(out, expect)
+        return st
+    run_app(n, step)
+
+
+# ---------------------------------------------------- communicators / groups
+
+def test_comm_split_subcommunication():
+    def step(mpi, st, k):
+        me = mpi.Comm_rank()
+        sub = mpi.Comm_split(color=me % 2, key=me)
+        assert mpi.Comm_size(sub) == 2
+        tot = mpi.Allreduce(np.float64(me), "sum", comm=sub)
+        # evens: 0+2; odds: 1+3
+        assert tot == (0 + 2 if me % 2 == 0 else 1 + 3)
+        mpi.Comm_free(sub)
+        return st
+    run_app(4, step)
+
+
+def test_group_incl_comm_create_group():
+    def step(mpi, st, k):
+        g = mpi.Comm_group()
+        sub_g = mpi.Group_incl(g, [0, 2])
+        sub = mpi.Comm_create_group(sub_g)
+        if mpi.rank in (0, 2):
+            assert sub is not None
+            assert mpi.Comm_size(sub) == 2
+            v = mpi.Bcast(42 if mpi.Comm_rank(sub) == 0 else None, root=0,
+                          comm=sub)
+            assert v == 42
+        else:
+            assert sub is None
+        mpi.Group_free(sub_g)
+        return st
+    run_app(3, step)
+
+
+def test_tcp_transport_same_semantics():
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            mpi.Send(np.arange(3), dest=1, tag=2)
+        else:
+            assert np.array_equal(mpi.Recv(source=0, tag=2), np.arange(3))
+        assert mpi.Allgather(mpi.rank) == [0, 1]
+        return st
+    run_app(2, step, transport="tcp")

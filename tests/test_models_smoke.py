@@ -1,0 +1,152 @@
+"""Per-arch REDUCED smoke tests (assignment requirement): every family
+instantiates, runs forward + one train step on CPU, and its decode path
+matches the full forward.  FULL configs are exercised only via the
+dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, reduce_for_smoke, shape_applicable
+from repro.distributed.sharding import make_variant
+from repro.launch.mesh import make_local_mesh
+from repro.models.layers import Policy
+from repro.models.params import init_params
+from repro.models.registry import count_params, get_api
+from repro.train.state import make_train_state
+from repro.train.step import make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+FP32 = Policy(compute=jnp.float32)
+
+
+def _batch(cfg, b, s, rng_seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(rng_seed), (b, s), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = jnp.ones((b, cfg.encoder.n_frames, cfg.d_model),
+                                    jnp.float32) * 0.1
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jnp.ones((b, cfg.n_vision_tokens,
+                                            cfg.d_model), jnp.float32) * 0.1
+    batch.update(extras)
+    return batch, extras
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_no_nan(name):
+    cfg = reduce_for_smoke(ARCHS[name])
+    api = get_api(cfg)
+    B, S = 2, 32
+    params = init_params(api.param_defs(cfg, S), jax.random.PRNGKey(0))
+    batch, _ = _batch(cfg, B, S)
+    logits, aux = api.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_runs_and_updates(name):
+    cfg = reduce_for_smoke(ARCHS[name])
+    mesh = make_local_mesh()
+    rules = make_variant("baseline")
+    B, S = 2, 32
+    step, _ = make_train_step(cfg, mesh, rules, max_seq=S, base_lr=1e-3,
+                              warmup=1)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), S)
+    batch, _ = _batch(cfg, B, S)
+    p0 = jax.tree.leaves(state["params"])[0].copy()
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+    assert not np.array_equal(np.asarray(jax.tree.leaves(state["params"])[0]),
+                              np.asarray(p0)), "params must update"
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_matches_forward(name):
+    cfg = reduce_for_smoke(ARCHS[name])
+    api = get_api(cfg)
+    B, S, P = 2, 32, 24
+    params = init_params(api.param_defs(cfg, S), jax.random.PRNGKey(0))
+    batch, extras = _batch(cfg, B, S)
+    full, _ = api.forward(cfg, params, batch, FP32)
+    lg, cache = api.prefill(cfg, params, batch["tokens"][:, :P], extras, S,
+                            FP32)
+    errs = [float(np.max(np.abs(np.asarray(lg) - np.asarray(full[:, P - 1]))))]
+    for t in range(P, S):
+        lg, cache = api.decode(cfg, params, cache, batch["tokens"][:, t:t + 1],
+                               jnp.full((B,), t, jnp.int32), FP32)
+        errs.append(float(np.max(np.abs(np.asarray(lg)
+                                        - np.asarray(full[:, t])))))
+    # MoE archs: capacity-based dispatch may drop tokens in the competitive
+    # full/prefill pass but never in decode (C=1 per token) — a real
+    # property of capacity dispatch, bounded here (DESIGN.md §5)
+    tol = 0.5 if cfg.moe is not None else 2e-3
+    assert max(errs) < tol, (name, max(errs))
+
+
+def test_accum_steps_equivalence():
+    """Grad accumulation must match the single-batch step (same global
+    batch)."""
+    cfg = reduce_for_smoke(ARCHS["smollm-135m"])
+    mesh = make_local_mesh()
+    rules = make_variant("baseline")
+    B, S = 4, 32
+    batch, _ = _batch(cfg, B, S)
+    outs = {}
+    for accum in (1, 2, 4):
+        step, _ = make_train_step(cfg, mesh, rules, max_seq=S,
+                                  accum_steps=accum, policy=FP32,
+                                  base_lr=1e-3, warmup=1)
+        state = make_train_state(cfg, jax.random.PRNGKey(0), S)
+        state, m = jax.jit(step)(state, batch)
+        outs[accum] = (float(m["loss"]),
+                       np.asarray(jax.tree.leaves(state["params"])[0]))
+    assert abs(outs[1][0] - outs[2][0]) < 1e-5
+    assert np.allclose(outs[1][1], outs[4][1], atol=1e-5)
+
+
+def test_count_params_full_configs():
+    """Analytic parameter counts of the FULL configs are in the right
+    ballpark for their names (no allocation — Pm metadata only)."""
+    expect = {
+        "smollm-135m": (0.10e9, 0.18e9),
+        "granite-34b": (30e9, 38e9),
+        "yi-9b": (8e9, 10e9),
+        "stablelm-12b": (10.5e9, 13.5e9),
+        "xlstm-1.3b": (1.5e9, 2.3e9),  # see DESIGN.md §5 note
+        "llava-next-34b": (30e9, 38e9),
+        "deepseek-v2-lite-16b": (14e9, 18e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        "whisper-tiny": (25e6, 45e6),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = count_params(get_arch(name), max_seq=4096)
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_long_500k_applicability():
+    for name in ALL_ARCHS:
+        cfg = get_arch(name)
+        ok, why = shape_applicable(cfg, SHAPES["long_500k"])
+        assert ok == cfg.subquadratic
+        assert ok == (name in ("xlstm-1.3b", "recurrentgemma-9b"))
+        if not ok:
+            assert "quadratic" in why
+
+
+def test_layer_kind_plans():
+    from repro.models.model import stack_plan
+    for name in ALL_ARCHS:
+        cfg = get_arch(name)
+        if cfg.family == "audio":
+            continue
+        prefix, unit, n_units, tail = stack_plan(cfg)
+        assert len(prefix) + len(unit) * n_units + len(tail) == cfg.n_layers
