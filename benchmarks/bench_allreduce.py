@@ -1,20 +1,88 @@
-"""Ring allreduce through the proxies: bandwidth vs message size, fp32 vs
-int8-compressed (error-feedback) — the gradient path of the DP trainer."""
+"""Collectives through the proxies.
+
+Two claims measured:
+  * RANK SCALING — ring Allreduce vs a naive root-gather/bcast allreduce.
+    The structural metric is MAX BYTES THROUGH ANY ONE ENDPOINT: the ring
+    moves ~2*S per rank regardless of n (sub-linear, saturating), while the
+    naive loop funnels 2*(n-1)*S through the root (linear in n).  Wall time
+    is reported too, but note all ranks share one GIL here, so wall time
+    tracks TOTAL serialization work — which is ~equal for both algorithms —
+    not the per-endpoint bottleneck a real cluster sees.
+  * SIZE SCALING — ring bandwidth vs message size, fp32 vs int8-compressed
+    (error-feedback) — the gradient path of the DP trainer.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke_scale
 from repro.core import MPIJob
 from repro.distributed.compression import ErrorFeedback
 from repro.distributed.proxy_grad import allreduce_grads
 
 
+def naive_allreduce(mpi, x: np.ndarray) -> np.ndarray:
+    """The pre-refactor 'linear loop' shape: everyone sends to root, root
+    reduces, root sends everyone the result.  O(n) time and O(n*S) root
+    traffic — the baseline the ring is judged against."""
+    n, me = mpi.Comm_size(), mpi.Comm_rank()
+    if me == 0:
+        acc = x.copy()
+        for r in range(1, n):
+            acc = acc + mpi.Recv(source=r, tag=71)
+        for r in range(1, n):
+            mpi.Send(acc, r, tag=72)
+        return acc
+    mpi.Send(x, 0, tag=71)
+    return mpi.Recv(source=0, tag=72)
+
+
 def run() -> None:
+    # ---- rank scaling: ring vs naive at a fixed payload -------------------
+    size = smoke_scale(1 << 16, 1 << 12)
+    reps = smoke_scale(4, 2)
+    for n in dict.fromkeys((2, 4, smoke_scale(8, 4))):
+        results = {}
+
+        def step_fn(mpi, st, k, n=n):
+            x = np.ones(size, np.float32) * (mpi.rank + 1)
+            def tree(v):
+                return mpi.Bcast(mpi.Reduce(v, "sum", 0), 0)
+
+            for algo, fn in (("ring",
+                              lambda v: mpi.Allreduce(v, "sum", algo="ring")),
+                             ("tree", tree),
+                             ("naive", lambda v: naive_allreduce(mpi, v))):
+                b0 = mpi.bytes_sent + mpi.bytes_received
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    out = fn(x.copy())
+                    ts.append(time.perf_counter() - t0)
+                assert abs(out[0] - n * (n + 1) / 2) < 1e-3
+                endpoint_mb = (mpi.bytes_sent + mpi.bytes_received
+                               - b0) / reps / 1e6
+                st.setdefault(algo, []).append(endpoint_mb)
+                if mpi.rank == 0:
+                    results[algo] = sorted(ts)[len(ts) // 2]
+            return st
+
+        job = MPIJob(n, step_fn, lambda mpi: {})
+        endpoints = job.run(1, timeout=300)
+        job.stop()
+        ring_max = max(e["ring"][0] for e in endpoints)
+        naive_max = max(e["naive"][0] for e in endpoints)
+        emit(f"allreduce/ring/n={n}", results["ring"] * 1e6,
+             f"tree_us={results['tree'] * 1e6:.0f};"
+             f"naive_us={results['naive'] * 1e6:.0f};"
+             f"max_endpoint_MB ring={ring_max:.2f} naive={naive_max:.2f} "
+             f"({naive_max / ring_max:.1f}x)")
+
+    # ---- size scaling: fp32 vs int8-compressed ring ------------------------
     n = 4
-    for size in (1 << 12, 1 << 16, 1 << 20):
+    for size in dict.fromkeys((1 << 12, 1 << 16, smoke_scale(1 << 20, 1 << 16))):
         results = {}
 
         def init_fn(mpi):

@@ -3,9 +3,19 @@ CSV contract used by benchmarks.run."""
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Tuple, TypeVar
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# set by ``benchmarks.run --smoke``: CI-sized problem shapes
+SMOKE = False
+
+_T = TypeVar("_T")
+
+
+def smoke_scale(full: _T, smoke: _T) -> _T:
+    """Pick the CI-sized variant of a benchmark parameter under --smoke."""
+    return smoke if SMOKE else full
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -2,14 +2,18 @@
 the roofline table from the dry-run.  Prints ``name,us_per_call,derived``
 CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run drain roofline
+  PYTHONPATH=src python -m benchmarks.run                  # all, full size
+  PYTHONPATH=src python -m benchmarks.run drain roofline   # a subset
+  PYTHONPATH=src python -m benchmarks.run --smoke          # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --json out.json proxy_overhead
 """
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_drain,
                         bench_proxy_overhead, bench_restart, bench_roofline)
@@ -26,7 +30,19 @@ SUITES = {
 
 
 def main() -> None:
-    picked = sys.argv[1:] or list(SUITES)
+    args = sys.argv[1:]
+    json_path = None
+    if "--smoke" in args:
+        args.remove("--smoke")
+        common.SMOKE = True
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args) or args[i + 1].startswith("--"):
+            raise SystemExit("usage: benchmarks.run [--smoke] "
+                             "[--json PATH] [suite ...]")
+        json_path = args[i + 1]
+        del args[i:i + 2]
+    picked = args or list(SUITES)
     print("name,us_per_call,derived")
     failures = 0
     for name in picked:
@@ -36,6 +52,11 @@ def main() -> None:
             failures += 1
             print(f"{name},nan,FAILED")
             traceback.print_exc()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"smoke": common.SMOKE,
+                       "rows": [{"name": n, "us_per_call": v, "derived": d}
+                                for n, v, d in common.ROWS]}, f, indent=1)
     if failures:
         raise SystemExit(1)
 

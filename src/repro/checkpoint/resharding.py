@@ -29,7 +29,8 @@ def restore_resharded(ckpt_dir: Path, template, shardings=None,
                     if shardings is not None else [None] * len(keys))
     vals = []
     for k, sh in zip(keys, shard_leaves):
-        host = load_leaf(ckpt_dir, man["leaves"][k], verify)
+        host = load_leaf(ckpt_dir, man["leaves"][k], verify,
+                         codec=man.get("codec", "zstd"))
         vals.append(jax.device_put(host, sh) if sh is not None
                     else jax.device_put(host))
     treedef = jax.tree_util.tree_structure(template)

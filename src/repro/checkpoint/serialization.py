@@ -18,10 +18,38 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
 
-_CCTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+try:                                    # zstandard is optional: fall back to
+    import zstandard                    # zlib so the core C/R path has no
+    HAVE_ZSTD = True                    # dependency beyond the stdlib
+except ImportError:                     # pragma: no cover - env dependent
+    zstandard = None
+    HAVE_ZSTD = False
+
+
+class _ZlibCompressor:
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, 6)
+
+
+class _ZlibDecompressor:
+    def decompress(self, blob: bytes) -> bytes:
+        return zlib.decompress(blob)
+
+
+def _codec_pair(codec: str):
+    """(compressor, decompressor) for a manifest codec name."""
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "checkpoint written with zstd but zstandard is not installed")
+        return zstandard.ZstdCompressor(level=3), zstandard.ZstdDecompressor()
+    if codec == "zlib":
+        return _ZlibCompressor(), _ZlibDecompressor()
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+DEFAULT_CODEC = "zstd" if HAVE_ZSTD else "zlib"
 
 
 class HostArray:
@@ -73,12 +101,17 @@ def _atomic_write(path: Path, data: bytes) -> None:
     os.replace(tmp, path)
 
 
-def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None) -> dict:
+def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None,
+                codec: Optional[str] = None) -> dict:
     """Write every addressable shard of every leaf.  Returns the manifest
     (already committed to disk, LAST, for atomicity)."""
+    codec = codec or DEFAULT_CODEC
+    cctx, _ = _codec_pair(codec)
+    ext = "zst" if codec == "zstd" else "zz"
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     leaves = _leaf_paths(state)
-    manifest: Dict[str, Any] = {"version": 1, "leaves": {}, "meta": meta or {}}
+    manifest: Dict[str, Any] = {"version": 1, "codec": codec, "leaves": {},
+                                "meta": meta or {}}
     for i, (key, leaf) in enumerate(leaves):
         arr = leaf
         entry: Dict[str, Any] = {}
@@ -93,8 +126,8 @@ def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None) -> dict:
             for idx, data, dev in arr.shards:
                 uniq_src.setdefault(json.dumps(idx), (idx, data, dev))
             for idx, data, dev in uniq_src.values():
-                blob = _CCTX.compress(data.tobytes())
-                fname = f"leaf{i:05d}_shard{dev:04d}.zst"
+                blob = cctx.compress(data.tobytes())
+                fname = f"leaf{i:05d}_shard{dev:04d}.{ext}"
                 _atomic_write(ckpt_dir / fname, blob)
                 shards.append({"file": fname, "index": idx,
                                "crc32": zlib.crc32(blob), "device": dev})
@@ -103,8 +136,8 @@ def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None) -> dict:
             data = np.asarray(arr)
             entry["shape"] = list(data.shape)
             entry["dtype"] = str(data.dtype)
-            blob = _CCTX.compress(data.tobytes())
-            fname = f"leaf{i:05d}_full.zst"
+            blob = cctx.compress(data.tobytes())
+            fname = f"leaf{i:05d}_full.{ext}"
             _atomic_write(ckpt_dir / fname, blob)
             entry["shards"] = [{"file": fname,
                                 "index": [[0, d] for d in data.shape],
@@ -119,8 +152,16 @@ def load_manifest(ckpt_dir: Path) -> dict:
     return json.loads((ckpt_dir / "MANIFEST.json").read_text())
 
 
-def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True) -> np.ndarray:
-    """Reassemble one logical array from its shard chunks."""
+def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True,
+              codec: Optional[str] = None) -> np.ndarray:
+    """Reassemble one logical array from its shard chunks.  `codec` must be
+    the manifest's — pass ``manifest.get("codec", "zstd")`` (pre-codec
+    manifests were always zstd); guessing here would decompress with the
+    wrong codec."""
+    if codec is None:
+        raise ValueError(
+            'pass the manifest codec: manifest.get("codec", "zstd")')
+    _, dctx = _codec_pair(codec)
     shape = tuple(entry["shape"])
     dtype = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" else None
     # bfloat16 round-trips through jnp below; read raw bytes as uint16
@@ -131,7 +172,7 @@ def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True) -> np.ndarray:
         blob = (ckpt_dir / s["file"]).read_bytes()
         if verify and zlib.crc32(blob) != s["crc32"]:
             raise IOError(f"{s['file']}: crc mismatch")
-        raw = _DCTX.decompress(blob)
+        raw = dctx.decompress(blob)
         idx = tuple(slice(a, b) for a, b in s["index"])
         window = out[idx].shape if idx else ()
         chunk = np.frombuffer(raw, dtype=jdt).reshape(window or shape)
@@ -150,7 +191,9 @@ def restore_tree(ckpt_dir: Path, template, verify: bool = True):
     missing = [k for k in keys if k not in man["leaves"]]
     if missing:
         raise KeyError(f"checkpoint missing leaves: {missing[:5]}")
-    vals = [load_leaf(ckpt_dir, man["leaves"][k], verify) for k in keys]
+    codec = man.get("codec", "zstd")
+    vals = [load_leaf(ckpt_dir, man["leaves"][k], verify, codec=codec)
+            for k in keys]
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, vals)
 

@@ -6,11 +6,18 @@ Comm_rank / Type_size / Send / Recv / Probe / Iprobe / Get_count — plus its
 (Bcast, Barrier, Scatter, Gather, Allgather, Reduce, Allreduce) built on
 Send/Recv plumbing, and communicator/group management with virtualized ids.
 
-Checkpoint-relevant rules implemented here (paper §4):
+Checkpoint-relevant rules implemented here (paper §4, updated for the
+batched wire protocol — DESIGN.md §3/§5):
   * every Recv/Probe/Iprobe consults the drained-message CACHE FIRST;
   * administrative calls are LOGGED for replay;
-  * sent/received counters are maintained for the coordinator's drain
-    heuristic;
+  * Send/Isend are FIRE-AND-FORGET through the channel's async path; every
+    blocking call piggybacks (and therefore flushes) buffered sends, and
+    the runtime flushes at step and checkpoint boundaries;
+  * sent/received counters feed the coordinator's drain heuristic in
+    EPOCHS: during PHASE_RUN they are flushed every REPORT_EPOCH ops (the
+    coordinator never reads them in that phase), and EXACTLY whenever the
+    checkpoint FSM is active — which is the only time drain_complete()
+    evaluates them, so the heuristic still holds (proof in DESIGN.md §5);
   * a blocked Recv participates in checkpoint agreement via non-blocking
     proposals (the pending-call re-issue of paper challenge 2 reduces to
     cache-first matching after restart).
@@ -22,16 +29,33 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.coordinator import Coordinator, PHASE_PENDING
+from repro.core.coordinator import Coordinator, PHASE_PENDING, PHASE_RUN
 from repro.core.drain import MessageCache
 from repro.core.messages import (ANY_SOURCE, ANY_TAG, COLL_TAG_BASE, DATATYPES,
                                  Status, pack, unpack)
-from repro.core.proxy import (CMD_POLL, CMD_REGISTER_COMM, CMD_REGISTER_RANK,
-                              CMD_SEND, CMD_UNREGISTER_COMM, ProxyChannel)
+from repro.core.proxy import (CMD_POLL_ALL, CMD_POLL_WAIT, CMD_REGISTER_COMM,
+                              CMD_REGISTER_RANK, CMD_SEND,
+                              CMD_UNREGISTER_COMM, ProxyChannel)
 from repro.core.replay import AdminLog
 from repro.core.virtualization import WORLD_VID, VirtualIds
 
 COMM_WORLD = WORLD_VID
+
+# counter-report epoch: during PHASE_RUN, sent/received counters are pushed
+# to the coordinator at most once per this many operations
+REPORT_EPOCH = 32
+
+# Allreduce algorithm crossover: payloads at least this large use the ring
+# (bandwidth-optimal), smaller ones the binomial tree (latency-optimal).
+# All ranks share one GIL here so serialization is effectively a shared
+# resource; real clusters would set this far lower.
+RING_MIN_BYTES = 1 << 23
+
+# blocking-call wait policy: one CMD_POLL_WAIT round trip parks the proxy
+# on the transport for up to this long; the plugin thread sleeps on the
+# response queue meanwhile.  Bounded so a blocked Recv still participates
+# in checkpoint agreement every few milliseconds.
+_POLL_WAIT_S = 0.005
 
 _OPS: dict = {
     "sum": lambda a, b: a + b,
@@ -57,10 +81,13 @@ class MPI:
         self.admin = AdminLog()
         self.sent = 0
         self.received = 0
+        self.bytes_sent = 0
+        self.bytes_received = 0
         self.coll_seq: dict = {COMM_WORLD: 0}
         self.step_idx = 0                 # maintained by the runtime
         self._proposed_gen = -1
         self._initialized = False
+        self._ops_since_report = 0
 
     # ------------------------------------------------------------------ admin
     def Init(self) -> None:
@@ -69,6 +96,7 @@ class MPI:
         self._initialized = True
 
     def Finalize(self) -> None:
+        self.flush()
         self.admin.append("finalize", ())
         self._initialized = False
 
@@ -87,7 +115,30 @@ class MPI:
         return self.vids.comms[comm].world_rank(dest)
 
     def _report(self) -> None:
+        """Exact counter push (always used when the checkpoint FSM runs)."""
+        self._ops_since_report = 0
         self.coord.report_counters(self.rank, self.sent, self.received)
+
+    def _maybe_report(self) -> None:
+        """Epoch-based flush: exact whenever phase != RUN (the only time the
+        coordinator evaluates the drain heuristic), else every REPORT_EPOCH
+        operations."""
+        self._ops_since_report += 1
+        if (self.coord.phase != PHASE_RUN
+                or self._ops_since_report >= REPORT_EPOCH):
+            self._report()
+
+    def flush(self) -> None:
+        """Blocking: every buffered/queued async command has executed on the
+        proxy; raises any deferred send error.  Called by the runtime at
+        checkpoint boundaries and at end-of-run."""
+        self.channel.flush()
+        self._report()
+
+    def flush_async(self) -> None:
+        """Non-blocking: push buffered sends to the proxy (step-boundary
+        liveness — peers polling the transport will see them)."""
+        self.channel.flush_async()
 
     def Send(self, value: Any, dest: int, tag: int = 0,
              comm: int = COMM_WORLD) -> None:
@@ -95,20 +146,34 @@ class MPI:
         self._send_raw(value, dest, tag, comm)
 
     def _send_raw(self, value: Any, dest: int, tag: int, comm: int) -> None:
+        """Fire-and-forget: buffered into the channel's current batch; no
+        round trip.  Errors surface at the next blocking call or flush()."""
         payload, dtype, count = pack(value)
-        self.channel.call(CMD_SEND, self._world_dst(dest, comm), tag, comm,
-                          payload, dtype, count)
+        self.channel.send_async(CMD_SEND, self._world_dst(dest, comm), tag,
+                                comm, payload, dtype, count)
         self.sent += 1
-        self._report()
+        self.bytes_sent += len(payload)
+        self._maybe_report()
 
-    def _pump_once(self) -> bool:
-        env = self.channel.call(CMD_POLL)
-        if env is None:
-            return False
-        self.cache.put(env)
-        self.received += 1
-        self._report()
-        return True
+    def _pump_all(self) -> int:
+        """ONE round trip drains every available envelope into the cache
+        (bulk poll).  Buffered sends piggyback on the same batch."""
+        return self._absorb(self.channel.call(CMD_POLL_ALL))
+
+    def _pump_wait(self) -> int:
+        """Blocking bulk poll: the proxy parks on the transport up to
+        _POLL_WAIT_S and replies with everything that arrived.  Buffered
+        sends piggyback first, so this also flushes."""
+        return self._absorb(self.channel.call(CMD_POLL_WAIT, _POLL_WAIT_S))
+
+    def _absorb(self, envs: list) -> int:
+        if not envs:
+            return 0
+        self.cache.put_many(envs)
+        self.received += len(envs)
+        self.bytes_received += sum(len(e.payload) for e in envs)
+        self._maybe_report()
+        return len(envs)
 
     def _participate_if_pending(self) -> None:
         """Inside a blocked call: keep checkpoint agreement deadlock-free."""
@@ -132,31 +197,33 @@ class MPI:
                     _status_out.count = env.count
                     _status_out.dtype = env.dtype
                 return unpack(env)
-            if not self._pump_once():
+            if not self._pump_wait():
                 self._participate_if_pending()
                 if time.time() > deadline:
                     raise TimeoutError(
                         f"rank {self.rank}: Recv(src={source}, tag={tag}) "
                         f"timed out")
-                time.sleep(0.0002)
 
     def Probe(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
               comm: int = COMM_WORLD, timeout: float = 120.0) -> Status:
+        src_world = (source if source == ANY_SOURCE
+                     else self.vids.comms[comm].world_rank(source))
         deadline = time.time() + timeout
         while True:
-            flag, status = self.Iprobe(source, tag, comm)
-            if flag:
-                return status
-            self._participate_if_pending()
-            if time.time() > deadline:
-                raise TimeoutError("Probe timeout")
-            time.sleep(0.0002)
+            env = self.cache.match(src_world, tag, comm, remove=False)
+            if env is not None:
+                return Status(source=env.src, tag=env.tag, count=env.count,
+                              dtype=env.dtype)
+            if not self._pump_wait():
+                self._participate_if_pending()
+                if time.time() > deadline:
+                    raise TimeoutError("Probe timeout")
 
     def Iprobe(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
                comm: int = COMM_WORLD) -> Tuple[bool, Optional[Status]]:
         src_world = (source if source == ANY_SOURCE
                      else self.vids.comms[comm].world_rank(source))
-        self._pump_once()
+        self._pump_all()
         env = self.cache.match(src_world, tag, comm, remove=False)
         if env is None:
             return False, None
@@ -189,7 +256,7 @@ class MPI:
         req = self.vids.requests[request]
         if req.done:
             return True, req.value
-        self._pump_once()
+        self._pump_all()
         env = self.cache.match(req.src, req.tag, req.comm_vid)
         if env is None:
             return False, None
@@ -209,7 +276,7 @@ class MPI:
             self._participate_if_pending()
             if time.time() > deadline:
                 raise TimeoutError("Wait timeout")
-            time.sleep(0.0002)
+            self._pump_wait()
 
     # ------------------------------------------------------------ collectives
     def _ctag(self, comm: int, op_code: int) -> int:
@@ -218,13 +285,31 @@ class MPI:
         return COLL_TAG_BASE + (seq << 4) + op_code
 
     def Barrier(self, comm: int = COMM_WORLD) -> None:
+        """Binomial-tree barrier rooted at comm-rank 0: fold-in up the tree,
+        release wave back down — 2·log2(n) critical-path hops, every token
+        send fire-and-forget through the batched channel."""
         info = self.vids.comms[comm]
         n, me = info.size(), info.rank_of(self.rank)
-        tag = self._ctag(comm, 0)
+        if n == 1:
+            return
+        tag_in = self._ctag(comm, 0)
+        tag_out = self._ctag(comm, 11)
         k = 1
-        while k < n:
-            self._send_raw(b"", (me + k) % n, tag, comm)
-            self.Recv(source=(me - k) % n, tag=tag, comm=comm)
+        while k < n:                      # fold-in (tree reduce of a token)
+            if me % (2 * k) == 0:
+                if me + k < n:
+                    self.Recv(source=me + k, tag=tag_in, comm=comm)
+            else:                         # me % (2*k) == k
+                self._send_raw(b"", me - k, tag_in, comm)
+                break
+            k *= 2
+        k = 1
+        while k < n:                      # release (tree broadcast)
+            if me < k:
+                if me + k < n:
+                    self._send_raw(b"", me + k, tag_out, comm)
+            elif me < 2 * k:
+                self.Recv(source=me - k, tag=tag_out, comm=comm)
             k *= 2
 
     def Bcast(self, value: Any, root: int = 0, comm: int = COMM_WORLD) -> Any:
@@ -311,17 +396,37 @@ class MPI:
         return acc if rel == 0 else None
 
     def Allreduce(self, value: Any, op: str = "sum",
-                  comm: int = COMM_WORLD) -> Any:
-        """Ring reduce-scatter + ring allgather for ndarrays (the real HPC
-        algorithm — also the data-parallel gradient path in
-        distributed/proxy_grad.py); tree reduce + bcast otherwise."""
+                  comm: int = COMM_WORLD,
+                  algo: Optional[str] = None) -> Any:
+        """Algorithm selection: ring reduce-scatter + allgather (the real
+        HPC algorithm — constant per-endpoint traffic) for large ndarrays;
+        binomial tree reduce + bcast (2·log2(n) hops) for everything else,
+        where hop latency dominates.  RING_MIN_BYTES is tuned for this
+        GIL-bound substrate — a real multi-host fabric crosses over far
+        earlier.  `algo` pins "ring" or "tree" explicitly (must agree
+        across ranks); None auto-selects by payload size."""
+        if algo not in (None, "ring", "tree"):
+            raise ValueError(f"unknown allreduce algo {algo!r}")
         info = self.vids.comms[comm]
-        n, me = info.size(), info.rank_of(self.rank)
+        n = info.size()
         if n == 1:
             return value
-        if not isinstance(value, np.ndarray) or value.size < n:
-            acc = self.Reduce(value, op, 0, comm)
-            return self.Bcast(acc, 0, comm)
+        ringable = isinstance(value, np.ndarray) and value.size >= n
+        use_ring = (ringable if algo == "ring"
+                    else ringable and algo is None
+                    and value.nbytes >= RING_MIN_BYTES)
+        if use_ring:
+            return self._ring_allreduce(value, op, comm)
+        acc = self.Reduce(value, op, 0, comm)
+        return self.Bcast(acc, 0, comm)
+
+    def _ring_allreduce(self, value: np.ndarray, op: str = "sum",
+                        comm: int = COMM_WORLD) -> np.ndarray:
+        """Ring reduce-scatter + ring allgather: 2·(n-1) steps of S/n-sized
+        chunks, ~2·S bytes through every endpoint regardless of n — also
+        the data-parallel gradient path in distributed/proxy_grad.py."""
+        info = self.vids.comms[comm]
+        n, me = info.size(), info.rank_of(self.rank)
         tag_rs = self._ctag(comm, 6)
         tag_ag = self._ctag(comm, 7)
         fn = _OPS[op]
@@ -448,6 +553,8 @@ class MPI:
             "admin": self.admin.snapshot(),
             "sent": self.sent,
             "received": self.received,
+            "bytes_sent": self.bytes_sent,
+            "bytes_received": self.bytes_received,
             "coll_seq": dict(self.coll_seq),
         }
 
@@ -462,6 +569,8 @@ class MPI:
         self.vids.restore(snap["vids"], self.n)
         self.sent = snap["sent"]
         self.received = snap["received"]
+        self.bytes_sent = snap.get("bytes_sent", 0)
+        self.bytes_received = snap.get("bytes_received", 0)
         self.coll_seq = dict(snap["coll_seq"])
         self._initialized = True
         self._report()

@@ -40,7 +40,8 @@ class Coordinator:
         self._barrier_count = 0
         self._finished: set = set()
         self.stats = {"drain_rounds": 0, "drain_wall_s": 0.0,
-                      "drained_messages": 0, "checkpoints": 0}
+                      "drained_messages": 0, "checkpoints": 0,
+                      "counter_reports": 0, "empty_channel_snapshots": 0}
 
     def mark_finished(self, rank: int) -> None:
         with self._lock:
@@ -56,7 +57,14 @@ class Coordinator:
         with self._lock:
             c = self._counters[rank]
             c.sent, c.received = sent, received
+            self.stats["counter_reports"] += 1
             self._lock.notify_all()
+
+    def note_empty_channel(self, rank: int) -> None:
+        """Rank verified its proxy channel empty right before snapshotting
+        (the drain invariant, asserted — not just claimed — each ckpt)."""
+        with self._lock:
+            self.stats["empty_channel_snapshots"] += 1
 
     def network_empty(self) -> bool:
         with self._lock:

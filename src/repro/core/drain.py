@@ -21,6 +21,10 @@ class MessageCache:
     def put(self, env: Envelope) -> None:
         self.envelopes.append(env)
 
+    def put_many(self, envs: List[Envelope]) -> None:
+        """Bulk-poll landing zone: one extend per drained batch."""
+        self.envelopes.extend(envs)
+
     def match(self, src: int, tag: int, comm_vid: int,
               remove: bool = True) -> Optional[Envelope]:
         """First matching envelope in arrival order (MPI matching rules:

@@ -1,10 +1,25 @@
 """The MPI proxy — owner of the ACTIVE transport (paper §3).
 
 Each rank's plugin talks to its proxy exclusively through a ProxyChannel
-(two queues = the paper's "single, ephemeral interface").  The proxy thread
-pumps commands; it holds transport handles, per-destination sequence
-numbers and comm-addressing tables — ALL of which are rebuilt from the
-admin log on restart and are NEVER serialized into a checkpoint.  The
+(two queues = the paper's "single, ephemeral interface").  Since the batched
+protocol rewrite the interface is a real versioned wire protocol (see
+DESIGN.md §3) rather than ad-hoc tuples:
+
+  * every queue item is a BATCH ``(version, [(cmd, args), ...], want_reply)``
+    — one cross-thread hop carries many commands;
+  * sends are FIRE-AND-FORGET: the plugin buffers them and pushes batches
+    without waiting for a reply; errors land in a deferred-error slot on the
+    proxy and are raised at the next replied call (every blocking call and
+    every checkpoint boundary replies);
+  * ``CMD_POLL_ALL`` drains every available envelope in ONE round trip;
+  * ``CMD_FLUSH`` is the sync barrier: when its reply arrives, every
+    previously queued command has executed and any deferred error has been
+    surfaced — this is what makes the channel *verifiably empty* at
+    snapshot time.
+
+The proxy thread pumps batches; it holds transport handles, per-destination
+sequence numbers and comm-addressing tables — ALL of which are rebuilt from
+the admin log on restart and are NEVER serialized into a checkpoint.  The
 assertion of the architecture: ``grep`` finds no transport reference in
 api.py, ckpt_protocol.py or runtime.py rank images.
 """
@@ -12,37 +27,101 @@ from __future__ import annotations
 
 import queue
 import threading
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.messages import Envelope
 from repro.core.transport import Transport
 
+PROTOCOL_VERSION = 2
+
 CMD_SEND = "send"
 CMD_POLL = "poll"
+CMD_POLL_ALL = "poll_all"
+CMD_POLL_WAIT = "poll_wait"
+CMD_FLUSH = "flush"
 CMD_REGISTER_RANK = "register_rank"
 CMD_REGISTER_COMM = "register_comm"
 CMD_UNREGISTER_COMM = "unregister_comm"
 CMD_STOP = "stop"
 
+# fire-and-forget buffer auto-pushes past this many commands so a long
+# send burst cannot grow the plugin-side buffer without bound
+MAX_BATCH = 64
 
-@dataclass
+
+class ProtocolError(RuntimeError):
+    """Channel and proxy disagree on the wire-protocol version."""
+
+
 class ProxyChannel:
     """The checkpoint-boundary interface.  At checkpoint time this must be
-    EMPTY (the drain protocol guarantees it); nothing here is serialized."""
-    requests: "queue.SimpleQueue" = None
-    responses: "queue.SimpleQueue" = None
+    EMPTY (``flush()`` then ``is_empty()`` — asserted by the runtime before
+    every snapshot); nothing here is serialized.
 
-    def __post_init__(self):
-        self.requests = queue.SimpleQueue()
-        self.responses = queue.SimpleQueue()
+    Threading contract: exactly ONE plugin thread issues commands and
+    exactly ONE proxy thread serves them, so at most one reply is ever
+    outstanding and the response queue needs no correlation ids.
+    """
 
+    def __init__(self) -> None:
+        self.requests: "queue.SimpleQueue" = queue.SimpleQueue()
+        self.responses: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._pending: List[Tuple[str, tuple]] = []
+        self.closed = False          # set by the proxy thread on exit
+        self.stats = {"round_trips": 0, "async_batches": 0, "commands": 0}
+
+    # ---- fire-and-forget path ---------------------------------------------
+    def send_async(self, cmd: str, *args) -> None:
+        """Queue a command with no reply.  Errors surface at the next
+        replied call (deferred-error slot on the proxy)."""
+        self._pending.append((cmd, args))
+        if len(self._pending) >= MAX_BATCH:
+            self.flush_async()
+
+    def flush_async(self) -> None:
+        """Push buffered commands as one fire-and-forget batch (no wait)."""
+        if not self._pending:
+            return
+        batch, self._pending = self._pending, []
+        self.stats["async_batches"] += 1
+        self.stats["commands"] += len(batch)
+        self.requests.put((PROTOCOL_VERSION, batch, False))
+
+    # ---- replied path ------------------------------------------------------
     def call(self, cmd: str, *args) -> Any:
-        self.requests.put((cmd, args))
-        ok, val = self.responses.get()
+        """One round trip.  Buffered fire-and-forget commands piggyback on
+        the same batch (executed first, in order), so a blocking call also
+        flushes — and surfaces any deferred error."""
+        if self.closed:
+            raise RuntimeError("proxy channel closed")
+        batch = self._pending + [(cmd, args)]
+        self._pending = []
+        self.stats["round_trips"] += 1
+        self.stats["commands"] += len(batch)
+        self.requests.put((PROTOCOL_VERSION, batch, True))
+        while True:
+            try:
+                ok, val = self.responses.get(timeout=1.0)
+                break
+            except queue.Empty:
+                # a caller abandoned mid-call when the proxy shut down must
+                # not block forever (leak-free teardown, DESIGN.md §6)
+                if self.closed:
+                    raise RuntimeError("proxy channel closed") from None
         if not ok:
             raise val
         return val
+
+    def flush(self) -> None:
+        """Blocking sync barrier: returns once every queued command has
+        executed; raises the deferred error if any async command failed."""
+        self.call(CMD_FLUSH)
+
+    def is_empty(self) -> bool:
+        """True iff no command is buffered, queued, or awaiting pickup —
+        the channel-empty-at-snapshot invariant (DESIGN.md §5)."""
+        return (not self._pending and self.requests.empty()
+                and self.responses.empty())
 
 
 class MPIProxy(threading.Thread):
@@ -57,6 +136,7 @@ class MPIProxy(threading.Thread):
         self._seq: Dict[int, int] = {}          # dst -> next seq
         self._comms: Dict[int, Tuple[int, ...]] = {}
         self._registered = False
+        self._deferred_error: Optional[Exception] = None
 
     # ---- command handlers (executed on the proxy thread) -------------------
     def register_rank(self, rank: int, n_ranks: int) -> None:
@@ -68,39 +148,101 @@ class MPIProxy(threading.Thread):
     def unregister_comm(self, vid: int) -> None:
         self._comms.pop(vid, None)
 
-    def _do_send(self, dst: int, tag: int, comm_vid: int, payload: bytes,
-                 dtype: str, count: int) -> None:
+    def _make_envelope(self, dst: int, tag: int, comm_vid: int, payload: bytes,
+                       dtype: str, count: int) -> Envelope:
         seq = self._seq.get(dst, 0)
         self._seq[dst] = seq + 1
-        env = Envelope(src=self.rank, dst=dst, tag=tag, comm_vid=comm_vid,
-                       seq=seq, payload=payload, dtype=dtype, count=count)
-        self.transport.send(env)
+        return Envelope(src=self.rank, dst=dst, tag=tag, comm_vid=comm_vid,
+                        seq=seq, payload=payload, dtype=dtype, count=count)
 
     def _do_poll(self) -> Optional[Envelope]:
         return self.transport.poll(self.rank)
 
+    def _do_poll_all(self) -> List[Envelope]:
+        return self.transport.poll_all(self.rank)
+
     # ---- pump ---------------------------------------------------------------
+    def _execute_batch(self, cmds: List[Tuple[str, tuple]]) -> Any:
+        """Run a batch in order; consecutive sends coalesce into ONE
+        transport.send_many call (the writev-style fast path).  Returns the
+        last command's value; raises on the first failing command."""
+        result: Any = None
+        sends: List[Envelope] = []
+        for cmd, args in cmds:
+            if cmd == CMD_SEND:
+                sends.append(self._make_envelope(*args))
+                continue
+            if sends:
+                self.transport.send_many(sends)
+                sends = []
+            if cmd == CMD_POLL:
+                result = self._do_poll()
+            elif cmd == CMD_POLL_ALL:
+                result = self._do_poll_all()
+            elif cmd == CMD_POLL_WAIT:
+                # the PROXY blocks on the transport (real OS wait); the
+                # plugin thread meanwhile sleeps on the response queue —
+                # nobody spins, nobody steals GIL time from busy ranks
+                result = self.transport.poll_wait(self.rank, *args)
+            elif cmd == CMD_FLUSH:
+                result = None
+            elif cmd == CMD_REGISTER_RANK:
+                result = self.register_rank(*args)
+            elif cmd == CMD_REGISTER_COMM:
+                result = self.register_comm(*args)
+            elif cmd == CMD_UNREGISTER_COMM:
+                result = self.unregister_comm(*args)
+            else:
+                raise ValueError(f"unknown proxy command {cmd!r}")
+        if sends:
+            self.transport.send_many(sends)
+        return result
+
     def run(self) -> None:
+        try:
+            self._serve()
+        finally:
+            self.channel.closed = True
+
+    def _serve(self) -> None:
         while True:
-            cmd, args = self.channel.requests.get()
-            try:
-                if cmd == CMD_STOP:
-                    self.channel.responses.put((True, None))
-                    return
-                if cmd == CMD_SEND:
-                    self.channel.responses.put((True, self._do_send(*args)))
-                elif cmd == CMD_POLL:
-                    self.channel.responses.put((True, self._do_poll()))
-                elif cmd == CMD_REGISTER_RANK:
-                    self.channel.responses.put((True, self.register_rank(*args)))
-                elif cmd == CMD_REGISTER_COMM:
-                    self.channel.responses.put((True, self.register_comm(*args)))
-                elif cmd == CMD_UNREGISTER_COMM:
-                    self.channel.responses.put((True, self.unregister_comm(*args)))
+            version, cmds, want_reply = self.channel.requests.get()
+            if version != PROTOCOL_VERSION:
+                err: Exception = ProtocolError(
+                    f"channel speaks v{version}, proxy v{PROTOCOL_VERSION}")
+                if want_reply:
+                    self.channel.responses.put((False, err))
                 else:
-                    raise ValueError(f"unknown proxy command {cmd!r}")
-            except Exception as e:  # surfaced to the caller
-                self.channel.responses.put((False, e))
+                    self._deferred_error = self._deferred_error or err
+                continue
+            stop = any(c == CMD_STOP for c, _ in cmds)
+            if stop:
+                cmds = [c for c in cmds if c[0] != CMD_STOP]
+            if want_reply and self._deferred_error is not None:
+                # fail fast: an earlier fire-and-forget command died; the
+                # plugin learns at its next replied call, commands dropped
+                err, self._deferred_error = self._deferred_error, None
+                self.channel.responses.put((False, err))
+                if stop:
+                    return
+                continue
+            try:
+                result = self._execute_batch(cmds)
+                if want_reply:
+                    self.channel.responses.put((True, result))
+            except Exception as e:  # surfaced now or at the next reply
+                if want_reply:
+                    self.channel.responses.put((False, e))
+                else:
+                    self._deferred_error = self._deferred_error or e
+            if stop:
+                return
 
     def stop(self) -> None:
-        self.channel.call(CMD_STOP)
+        """Fire-and-forget shutdown: replied STOP would race with a rank
+        thread mid-call (two waiters on one response queue steal each
+        other's replies).  The runtime joins the thread instead; any caller
+        still blocked unparks via the channel's `closed` flag.  No flush
+        here — `_pending` belongs to the plugin thread and touching it from
+        the stopping thread would race `send_async`."""
+        self.channel.requests.put((PROTOCOL_VERSION, [(CMD_STOP, ())], False))

@@ -82,10 +82,15 @@ class MPIJob:
             while step < end:
                 mpi.step_idx = step
                 trig = self._trigger
-                if (trig is not None and rank == 0 and step >= trig[0]
+                if (trig is not None and step >= trig[0]
                         and self.coord.phase == PHASE_RUN):
-                    self._trigger = None
-                    self.checkpoint(trig[1], resume=trig[2])
+                    # first rank to reach the trigger step fires it (a
+                    # rank-0-only trigger lets other ranks race past the
+                    # boundary before the request ever goes out)
+                    with self._ckpt_lock:
+                        trig, self._trigger = self._trigger, None
+                    if trig is not None:
+                        self.checkpoint(trig[1], resume=trig[2])
                 phase = self.coord.phase
                 if phase in (PHASE_PENDING, PHASE_DRAIN):
                     agreed = self.coord.propose_ckpt_step(rank, step)
@@ -103,9 +108,13 @@ class MPIJob:
                         continue
                 t_step = time.time()
                 state = self.step_fn(mpi, state, step)
+                # step-boundary liveness: push buffered fire-and-forget
+                # sends so peers blocked in Recv can see them (no round trip)
+                mpi.flush_async()
                 self.heartbeat.ping(rank)
                 self.stragglers.record(rank, time.time() - t_step)
                 step += 1
+            mpi.flush()      # surface deferred send errors; empty the channel
             self.states[rank] = state
             self.results[rank] = state
             # keep serving the checkpoint FSM until every rank is done —
@@ -128,14 +137,23 @@ class MPIJob:
 
     def _do_checkpoint(self, rank: int, mpi: MPI, state: Any,
                        step: int) -> bool:
-        """Drain -> snapshot -> resume/exit.  Returns True if job exits."""
+        """Flush -> drain -> snapshot -> resume/exit.  True if job exits."""
         coord = self.coord
+        # flush in-flight batches FIRST: every fire-and-forget send this
+        # rank issued is on the transport and its exact counters are at the
+        # coordinator before the rank acks drained (DESIGN.md §5)
+        mpi.flush()
         while coord.phase == PHASE_DRAIN:
-            pumped = mpi._pump_once()
+            pumped = mpi._pump_all()
             coord.ack_drained(rank)
             coord.drain_complete()
             if not pumped:
                 time.sleep(0.0002)
+        # the channel-empty-at-snapshot invariant: nothing buffered in the
+        # plugin, nothing queued to or from the proxy
+        assert mpi.channel.is_empty(), \
+            f"rank {rank}: proxy channel not empty at snapshot"
+        coord.note_empty_channel(rank)
         # messages that crossed the checkpoint boundary (restored from cache)
         coord.stats["drained_messages"] += len(mpi.cache)
         # SNAPSHOT
@@ -201,11 +219,17 @@ class MPIJob:
         raise TimeoutError("checkpoint did not complete")
 
     def stop(self) -> None:
+        """Deterministic, leak-free teardown: stop every proxy (a
+        fire-and-forget STOP — see MPIProxy.stop for why it must not be
+        replied), JOIN the proxy threads, then stop the transport (which
+        joins its own reader/switchboard threads)."""
         for p in self.proxies:
             try:
                 p.stop()
             except Exception:
                 pass
+        for p in self.proxies:
+            p.join(timeout=5.0)
         self.transport.stop()
 
     # --------------------------------------------------------------- restart

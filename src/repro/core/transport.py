@@ -7,6 +7,14 @@ Two deliberately different mechanisms prove implementation-agnosticism
   * TcpTransport — real localhost sockets through a switchboard daemon
     (the "socket MPI"); frames are length-prefixed pickled Envelopes.
 
+Both speak the batched fabric API: ``send_many`` ships a whole proxy batch
+in one operation (one writev-style socket write for TCP) and ``poll_all``
+drains every envelope available to a rank in one call — the transport half
+of the proxy wire protocol (DESIGN.md §4).
+
+Transports self-register into the ``TRANSPORTS`` registry via
+``register_transport``; out-of-tree backends can plug in the same way.
+
 The checkpoint NEVER serializes a transport: at restart the runtime builds
 a FRESH transport (possibly of the other kind) and replays the admin log.
 A checkpoint written under one transport restarting under the other is the
@@ -20,7 +28,7 @@ import socket
 import struct
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Type
 
 from repro.core.messages import Envelope
 
@@ -43,7 +51,59 @@ class Transport:
         """Non-blocking: next envelope destined to `rank`, else None."""
         raise NotImplementedError
 
+    # ---- batched fabric API (generic fallbacks; backends override) ---------
+    def send_many(self, envs: Sequence[Envelope]) -> None:
+        """Ship a batch.  Per-(src,dst) order within the batch is preserved."""
+        for env in envs:
+            self.send(env)
 
+    def poll_all(self, rank: int) -> List[Envelope]:
+        """Non-blocking: EVERY envelope currently available to `rank`."""
+        out: List[Envelope] = []
+        while True:
+            env = self.poll(rank)
+            if env is None:
+                return out
+            out.append(env)
+
+    def poll_wait(self, rank: int, timeout: float) -> List[Envelope]:
+        """Bulk poll that BLOCKS up to `timeout` seconds for the first
+        envelope (then drains the rest).  Backends override with a real
+        blocking wait so idle receivers burn no CPU."""
+        deadline = time.monotonic() + timeout
+        while True:
+            out = self.poll_all(rank)
+            if out or time.monotonic() >= deadline:
+                return out
+            time.sleep(0.0002)
+
+
+# --------------------------------------------------------------- registry
+TRANSPORTS: Dict[str, Type[Transport]] = {}
+
+
+def register_transport(cls: Type[Transport]) -> Type[Transport]:
+    """Class decorator/registration hook: ``TRANSPORTS[cls.name] = cls``."""
+    if not (isinstance(getattr(cls, "name", None), str)
+            and cls.name and cls.name != "abstract"):
+        raise ValueError(f"{cls!r} needs a concrete `name` to register")
+    TRANSPORTS[cls.name] = cls
+    return cls
+
+
+def available_transports() -> List[str]:
+    return sorted(TRANSPORTS)
+
+
+def make_transport(name: str) -> Transport:
+    try:
+        return TRANSPORTS[name]()
+    except KeyError:
+        raise ValueError(f"unknown transport {name!r}; "
+                         f"available: {available_transports()}") from None
+
+
+@register_transport
 class ShmTransport(Transport):
     name = "shm"
 
@@ -57,15 +117,46 @@ class ShmTransport(Transport):
     def send(self, env: Envelope) -> None:
         self._queues[env.dst].put(env)
 
+    def send_many(self, envs: Sequence[Envelope]) -> None:
+        qs = self._queues
+        for env in envs:
+            qs[env.dst].put(env)
+
     def poll(self, rank: int) -> Optional[Envelope]:
         try:
             return self._queues[rank].get_nowait()
         except queue.Empty:
             return None
 
+    def poll_all(self, rank: int) -> List[Envelope]:
+        q = self._queues[rank]
+        out: List[Envelope] = []
+        while True:
+            try:
+                out.append(q.get_nowait())
+            except queue.Empty:
+                return out
+
+    def poll_wait(self, rank: int, timeout: float) -> List[Envelope]:
+        q = self._queues[rank]
+        try:
+            out = [q.get(timeout=timeout)]    # real OS wait, no spinning
+        except queue.Empty:
+            return []
+        while True:
+            try:
+                out.append(q.get_nowait())
+            except queue.Empty:
+                return out
+
 
 class _Switchboard(threading.Thread):
-    """Routing daemon: accepts one connection per rank, forwards frames."""
+    """Routing daemon: accepts one connection per rank, forwards frames.
+
+    Shutdown is deterministic: ``accept()`` runs with a short timeout and
+    re-checks the stop flag, so ``shutdown()`` unblocks the thread even if
+    fewer than `n` ranks ever connect; reader threads are joined by
+    ``shutdown()`` (they exit once their sockets close)."""
 
     def __init__(self, n_ranks: int):
         super().__init__(daemon=True, name="mpi-switchboard")
@@ -74,27 +165,35 @@ class _Switchboard(threading.Thread):
         self.srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self.srv.bind(("127.0.0.1", 0))
         self.srv.listen(n_ranks)
+        self.srv.settimeout(0.2)
         self.port = self.srv.getsockname()[1]
         self.conns: Dict[int, socket.socket] = {}
         self.lock = threading.Lock()
-        self._stop = threading.Event()
+        self._halt = threading.Event()
+        self._readers: List[threading.Thread] = []
 
     def run(self) -> None:
-        readers = []
-        while len(self.conns) < self.n and not self._stop.is_set():
-            conn, _ = self.srv.accept()
-            rank = struct.unpack("!i", self._read_exact(conn, 4))[0]
+        while len(self.conns) < self.n and not self._halt.is_set():
+            try:
+                conn, _ = self.srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:          # server socket closed by shutdown()
+                return
+            hdr = self._read_exact(conn, 4)
+            if hdr is None:
+                conn.close()
+                continue
+            rank = struct.unpack("!i", hdr)[0]
             with self.lock:
                 self.conns[rank] = conn
             t = threading.Thread(target=self._pump, args=(conn,), daemon=True)
             t.start()
-            readers.append(t)
-        for t in readers:
-            t.join()
+            self._readers.append(t)
 
     def _pump(self, conn: socket.socket) -> None:
         try:
-            while not self._stop.is_set():
+            while not self._halt.is_set():
                 hdr = self._read_exact(conn, 8)
                 if hdr is None:
                     return
@@ -118,6 +217,8 @@ class _Switchboard(threading.Thread):
         while len(buf) < n:
             try:
                 chunk = conn.recv(n - len(buf))
+            except socket.timeout:
+                continue
             except (OSError, ConnectionError):
                 return None
             if not chunk:
@@ -125,20 +226,29 @@ class _Switchboard(threading.Thread):
             buf += chunk
         return buf
 
-    def shutdown(self) -> None:
-        self._stop.set()
+    def shutdown(self, join_timeout: float = 5.0) -> None:
+        self._halt.set()
         try:
             self.srv.close()
         except OSError:
             pass
         with self.lock:
-            for c in self.conns.values():
-                try:
-                    c.close()
-                except OSError:
-                    pass
+            conns = list(self.conns.values())
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        self.join(join_timeout)
+        for t in self._readers:
+            t.join(join_timeout)
 
 
+@register_transport
 class TcpTransport(Transport):
     name = "tcp"
 
@@ -151,7 +261,7 @@ class TcpTransport(Transport):
                                                 for _ in range(n_ranks)]
         self._send_locks = [threading.Lock() for _ in range(n_ranks)]
         self._readers = []
-        self._stop = threading.Event()
+        self._halt = threading.Event()
         for r in range(n_ranks):
             s = socket.create_connection(("127.0.0.1", self.board.port))
             s.sendall(struct.pack("!i", r))
@@ -159,9 +269,20 @@ class TcpTransport(Transport):
             t = threading.Thread(target=self._reader, args=(r, s), daemon=True)
             t.start()
             self._readers.append(t)
+        # the switchboard registers connections asynchronously; a frame for
+        # an unregistered rank would be DROPPED, so don't hand the transport
+        # over until every rank's connection is routable
+        deadline = time.monotonic() + 10.0
+        while True:
+            with self.board.lock:
+                if len(self.board.conns) == n_ranks:
+                    break
+            if time.monotonic() > deadline:
+                raise TimeoutError("switchboard did not register all ranks")
+            time.sleep(0.001)
 
     def _reader(self, rank: int, s: socket.socket) -> None:
-        while not self._stop.is_set():
+        while not self._halt.is_set():
             hdr = _Switchboard._read_exact(s, 8)
             if hdr is None:
                 return
@@ -172,19 +293,43 @@ class TcpTransport(Transport):
             self._inbox[rank].put(Envelope.from_bytes(body))
 
     def stop(self) -> None:
-        self._stop.set()
+        self._halt.set()
         for s in self._socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 s.close()
             except OSError:
                 pass
         self.board.shutdown()
+        for t in self._readers:
+            t.join(5.0)
+
+    @staticmethod
+    def _frame(env: Envelope) -> bytes:
+        body = env.to_bytes()
+        return struct.pack("!q", len(body)) + body
 
     def send(self, env: Envelope) -> None:
-        body = env.to_bytes()
-        frame = struct.pack("!q", len(body)) + body
+        frame = self._frame(env)
         with self._send_locks[env.src]:
             self._socks[env.src].sendall(frame)
+
+    def send_many(self, envs: Sequence[Envelope]) -> None:
+        """One writev-style write per source socket: frames for a whole
+        batch are concatenated and shipped with a single sendall under a
+        single lock acquisition."""
+        if not envs:
+            return
+        by_src: Dict[int, List[bytes]] = {}
+        for env in envs:
+            by_src.setdefault(env.src, []).append(self._frame(env))
+        for src, frames in by_src.items():
+            blob = b"".join(frames)
+            with self._send_locks[src]:
+                self._socks[src].sendall(blob)
 
     def poll(self, rank: int) -> Optional[Envelope]:
         try:
@@ -192,9 +337,23 @@ class TcpTransport(Transport):
         except queue.Empty:
             return None
 
+    def poll_all(self, rank: int) -> List[Envelope]:
+        q = self._inbox[rank]
+        out: List[Envelope] = []
+        while True:
+            try:
+                out.append(q.get_nowait())
+            except queue.Empty:
+                return out
 
-TRANSPORTS = {"shm": ShmTransport, "tcp": TcpTransport}
-
-
-def make_transport(name: str) -> Transport:
-    return TRANSPORTS[name]()
+    def poll_wait(self, rank: int, timeout: float) -> List[Envelope]:
+        q = self._inbox[rank]
+        try:
+            out = [q.get(timeout=timeout)]
+        except queue.Empty:
+            return []
+        while True:
+            try:
+                out.append(q.get_nowait())
+            except queue.Empty:
+                return out

@@ -83,7 +83,9 @@ def allreduce_grads(mpi: MPI, grads: Dict[str, np.ndarray],
                 acc += dequantize_int8(qi, si, shape)
             out[name] = acc / n
         else:
-            out[name] = mpi.Allreduce(g, "sum") / n
+            # pinned to the ring so the documented checkpoint-mid-ring
+            # drain path is what training actually exercises
+            out[name] = mpi.Allreduce(g, "sum", algo="ring") / n
     return out
 
 

@@ -1,0 +1,23 @@
+"""Import shim: property tests run under hypothesis when it is installed
+and are skipped (not collection-errored) when it is not.  Import
+``given, settings, st`` from here instead of from hypothesis directly."""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

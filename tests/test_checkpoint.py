@@ -35,6 +35,22 @@ def test_save_restore_roundtrip_exact(tmp_path):
         assert np.asarray(a).dtype == np.asarray(b).dtype
 
 
+@pytest.mark.parametrize("codec", ["zlib", "zstd"])
+def test_shard_codec_roundtrip(tmp_path, codec):
+    """Both shard codecs round-trip bitwise; the manifest records which one
+    wrote the checkpoint so the reader never has to guess."""
+    if codec == "zstd" and not ser.HAVE_ZSTD:
+        pytest.skip("zstandard not installed")
+    st = _state()
+    ser.save_shards(tmp_path, st, codec=codec)
+    man = ser.load_manifest(tmp_path)
+    assert man["codec"] == codec
+    assert ser.validate(tmp_path)
+    out = ser.restore_tree(tmp_path, jax.eval_shape(lambda: _state()))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_async_write_is_donation_safe(tmp_path):
     """The host snapshot is copied BEFORE save() returns; mutating (or
     donating) the arrays afterwards must not corrupt the checkpoint."""

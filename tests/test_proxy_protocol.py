@@ -1,0 +1,325 @@
+"""The batched proxy wire protocol (DESIGN.md §3/§4): fire-and-forget send
+ordering, command batching, bulk poll, deferred-error surfacing, the
+channel-empty-at-snapshot invariant, transport registry + batch fabric API,
+and deterministic teardown."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import MPIJob, make_transport
+from repro.core.messages import Envelope
+from repro.core.proxy import (CMD_FLUSH, CMD_POLL_ALL, CMD_SEND,
+                              MAX_BATCH, PROTOCOL_VERSION, MPIProxy,
+                              ProtocolError, ProxyChannel)
+from repro.core.transport import (TRANSPORTS, ShmTransport, TcpTransport,
+                                  Transport, _Switchboard,
+                                  available_transports, register_transport)
+
+
+def run_app(n, step_fn, init_fn=lambda mpi: {}, steps=1, transport="shm"):
+    job = MPIJob(n, step_fn, init_fn, transport=transport)
+    try:
+        return job.run(steps, timeout=120), job
+    finally:
+        job.stop()
+
+
+# ------------------------------------------------------- ordering & batching
+
+@pytest.mark.parametrize("transport", ["shm", "tcp"])
+def test_batched_send_ordering_per_src_dst(transport):
+    """A burst of fire-and-forget sends (several auto-flushed batches plus a
+    piggybacked tail) arrives in issue order per (src, dst)."""
+    m = 3 * MAX_BATCH + 7          # forces auto-flush mid-burst
+
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            for i in range(m):
+                mpi.Isend(np.int64(i), dest=1, tag=5)
+        elif mpi.rank == 1:
+            for i in range(m):
+                v = mpi.Recv(source=0, tag=5)
+                assert int(v) == i, "batched sends must preserve order"
+        return st
+
+    run_app(2, step, transport=transport)
+
+
+def test_bulk_poll_amortizes_round_trips():
+    """The receiver drains a burst with FAR fewer channel round trips than
+    messages — the point of CMD_POLL_ALL/CMD_POLL_WAIT."""
+    m = 100
+    stats = {}
+
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            for i in range(m):
+                mpi.Isend(np.int64(i), dest=1, tag=1)
+            mpi.flush()
+        else:
+            time.sleep(0.05)       # let the burst land on the transport
+            t0 = mpi.channel.stats["round_trips"]
+            for i in range(m):
+                mpi.Recv(source=0, tag=1)
+            stats["rt"] = mpi.channel.stats["round_trips"] - t0
+        return st
+
+    run_app(2, step)
+    assert stats["rt"] <= 10, \
+        f"{stats['rt']} round trips for {m} messages (bulk poll broken?)"
+
+
+def test_sender_side_batching_round_trips():
+    """The sender's burst costs ~m/MAX_BATCH queue hops and zero waiting
+    round trips until the flush barrier."""
+    m = 4 * MAX_BATCH
+    stats = {}
+
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            rt0 = mpi.channel.stats["round_trips"]
+            ab0 = mpi.channel.stats["async_batches"]
+            for i in range(m):
+                mpi.Isend(b"x", dest=1, tag=1)
+            stats["rt"] = mpi.channel.stats["round_trips"] - rt0
+            stats["ab"] = mpi.channel.stats["async_batches"] - ab0
+        else:
+            for i in range(m):
+                mpi.Recv(source=0, tag=1)
+        return st
+
+    run_app(2, step)
+    assert stats["rt"] == 0, "fire-and-forget sends must not round-trip"
+    assert stats["ab"] == m // MAX_BATCH
+
+
+# --------------------------------------------------------- deferred errors
+
+class _FailingSendTransport(ShmTransport):
+    name = "failing-send"
+
+    def send_many(self, envs):
+        raise RuntimeError("wire torn")
+
+    send = send_many
+
+
+def _proxy_pair(transport):
+    transport.start(2)
+    ch = ProxyChannel()
+    proxy = MPIProxy(0, transport, ch)
+    proxy.start()
+    return ch, proxy
+
+
+def test_deferred_error_surfaces_on_next_blocking_call():
+    ch, proxy = _proxy_pair(_FailingSendTransport())
+    ch.send_async(CMD_SEND, 1, 0, 0, b"payload", "MPI_BYTE", 7)
+    ch.flush_async()               # fire-and-forget: no error HERE
+    time.sleep(0.05)
+    with pytest.raises(RuntimeError, match="wire torn"):
+        ch.call(CMD_POLL_ALL)      # ...but the next replied call raises it
+    ch.call(CMD_FLUSH)             # slot cleared: channel usable again
+    proxy.stop()
+    proxy.join(5.0)
+
+
+def test_deferred_error_surfaces_on_flush():
+    ch, proxy = _proxy_pair(_FailingSendTransport())
+    ch.send_async(CMD_SEND, 1, 0, 0, b"payload", "MPI_BYTE", 7)
+    with pytest.raises(RuntimeError, match="wire torn"):
+        ch.flush()                 # blocking barrier surfaces it directly
+    proxy.stop()
+    proxy.join(5.0)
+
+
+def test_protocol_version_mismatch_rejected():
+    ch, proxy = _proxy_pair(ShmTransport())
+    ch.requests.put((PROTOCOL_VERSION + 1, [(CMD_FLUSH, ())], True))
+    ok, err = ch.responses.get(timeout=5)
+    assert not ok and isinstance(err, ProtocolError)
+    proxy.stop()
+    proxy.join(5.0)
+
+
+# ------------------------------------------------- epoch-based counter flush
+
+def test_epoch_counters_reduce_coordinator_traffic():
+    """During PHASE_RUN counters flush once per REPORT_EPOCH ops, not once
+    per message — and end-of-run flush leaves them exact."""
+    from repro.core.api import REPORT_EPOCH
+    m = 200
+
+    def step(mpi, st, k):
+        if mpi.rank == 0:
+            for i in range(m):
+                mpi.Isend(b"z", dest=1, tag=1)
+        else:
+            for i in range(m):
+                mpi.Recv(source=0, tag=1)
+        return st
+
+    out, job = run_app(2, step)
+    stats = job.coord.stats
+    # per-message reporting would be >= 2*m; epoch reporting is ~2*m/EPOCH
+    assert stats["counter_reports"] <= 4 * m // REPORT_EPOCH + 16, stats
+    assert job.coord.network_empty(), "final flush must leave exact counters"
+
+
+# --------------------------------------------- drain invariant & checkpoints
+
+def burst_app(m=40):
+    """Each step fires a mid-size batch consumed one step later, so a
+    checkpoint always lands with batches in flight."""
+    def init_fn(mpi):
+        return {"acc": 0}
+
+    def step_fn(mpi, st, k):
+        n, me = mpi.Comm_size(), mpi.Comm_rank()
+        for j in range(m):
+            mpi.Isend(np.int64(k * m + j), (me + 1) % n, tag=j % 7)
+        if k > 0:
+            for j in range(m):
+                st["acc"] += int(mpi.Recv(source=(me - 1) % n,
+                                          tag=j % 7))
+        return st
+
+    return init_fn, step_fn
+
+
+def test_channel_empty_at_snapshot_invariant(tmp_path):
+    """Checkpoint taken mid-burst: every rank's channel is verifiably empty
+    at snapshot (asserted inside the runtime; counted per rank here)."""
+    n = 3
+    init_fn, step_fn = burst_app()
+    job = MPIJob(n, step_fn, init_fn, transport="shm")
+    job.checkpoint_at(4, tmp_path / "ck")
+    job.run(8, timeout=120)
+    job.stop()
+    assert not job.errors
+    assert job.coord.stats["empty_channel_snapshots"] == n
+    for ch in job.channels:
+        assert ch.is_empty()
+
+
+@pytest.mark.parametrize("t1,t2", [("shm", "tcp"), ("tcp", "shm")])
+def test_cross_transport_restart_mid_batch(tmp_path, t1, t2):
+    """Checkpoint lands while multi-message batches are in flight; restart
+    on the OTHER transport continues identically."""
+    n, steps = 3, 8
+    init_fn, step_fn = burst_app()
+    ref_job = MPIJob(n, step_fn, init_fn, transport=t1)
+    ref = ref_job.run(steps, timeout=120)
+    ref_job.stop()
+
+    job = MPIJob(n, step_fn, init_fn, transport=t1)
+    job.checkpoint_at(4, tmp_path / "ck", resume=False)
+    job.run(steps, timeout=120)
+    job.stop()
+    assert job.coord.stats["empty_channel_snapshots"] == n
+    assert job.coord.stats["drained_messages"] > 0, \
+        "checkpoint must have caught in-flight messages"
+
+    job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn, transport=t2)
+    out = job2.run(steps, timeout=120)
+    job2.stop()
+    for r in range(n):
+        assert out[r]["acc"] == ref[r]["acc"]
+
+
+# ------------------------------------------------ registry & transport fabric
+
+def test_transport_registry_lists_and_rejects():
+    assert {"shm", "tcp"} <= set(available_transports())
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_transport("infiniband")
+
+
+def test_transport_registry_accepts_plugins():
+    class LoopbackTransport(ShmTransport):
+        name = "loopback-test"
+
+    try:
+        register_transport(LoopbackTransport)
+        assert isinstance(make_transport("loopback-test"), LoopbackTransport)
+    finally:
+        TRANSPORTS.pop("loopback-test", None)
+
+
+def test_register_transport_requires_concrete_name():
+    with pytest.raises(ValueError):
+        register_transport(Transport)
+
+
+@pytest.mark.parametrize("name", ["shm", "tcp"])
+def test_send_many_poll_all_fabric(name):
+    tr = make_transport(name)
+    tr.start(2)
+    try:
+        envs = [Envelope(src=0, dst=1, tag=3, comm_vid=0, seq=i,
+                         payload=bytes([i]), dtype="MPI_BYTE", count=1)
+                for i in range(10)]
+        tr.send_many(envs)
+        got = []
+        deadline = time.time() + 10
+        while len(got) < 10 and time.time() < deadline:
+            got.extend(tr.poll_all(1))
+        assert [e.seq for e in got] == list(range(10))
+        assert [e.payload for e in got] == [bytes([i]) for i in range(10)]
+    finally:
+        tr.stop()
+
+
+@pytest.mark.parametrize("name", ["shm", "tcp"])
+def test_poll_wait_blocks_then_returns_batch(name):
+    tr = make_transport(name)
+    tr.start(2)
+    try:
+        t0 = time.perf_counter()
+        assert tr.poll_wait(1, 0.05) == []          # honest timeout
+        assert time.perf_counter() - t0 >= 0.04
+        env = Envelope(src=0, dst=1, tag=0, comm_vid=0, seq=0, payload=b"hi")
+        threading.Timer(0.02, lambda: tr.send(env)).start()
+        got = tr.poll_wait(1, 5.0)                  # wakes on arrival
+        assert [e.payload for e in got] == [b"hi"]
+    finally:
+        tr.stop()
+
+
+# ----------------------------------------------------- deterministic teardown
+
+def test_switchboard_shutdown_with_missing_ranks():
+    """shutdown() must unblock run() even when fewer than n ranks ever
+    connected (the accept() race)."""
+    board = _Switchboard(4)
+    board.start()
+    import socket as _socket
+    import struct as _struct
+    s = _socket.create_connection(("127.0.0.1", board.port))
+    s.sendall(_struct.pack("!i", 0))      # only 1 of 4 ranks shows up
+    time.sleep(0.05)
+    t0 = time.time()
+    board.shutdown()
+    assert time.time() - t0 < 5.0
+    assert not board.is_alive()
+    s.close()
+
+
+@pytest.mark.parametrize("transport", ["shm", "tcp"])
+def test_job_stop_joins_all_threads(transport):
+    def step(mpi, st, k):
+        mpi.Barrier()
+        return st
+
+    job = MPIJob(3, step, lambda mpi: {}, transport=transport)
+    job.run(2, timeout=60)
+    job.stop()
+    for p in job.proxies:
+        assert not p.is_alive(), "stop() must join proxy threads"
+        assert p.channel.closed
+    if transport == "tcp":
+        assert not job.transport.board.is_alive()
+        for t in job.transport._readers:
+            assert not t.is_alive()
