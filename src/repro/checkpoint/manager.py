@@ -33,19 +33,28 @@ _STEP_RE = re.compile(r"^step_(\d+)$")
 
 class CheckpointManager:
     def __init__(self, root: str | Path, keep: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, generation: int = 0):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_write = async_write
+        #: membership generation (elastic restart epoch) stamped into every
+        #: manifest; the fault-tolerant driver bumps it on reshape
+        self.generation = generation
         self._pending: Optional[threading.Thread] = None
         self._last_error: Optional[BaseException] = None
+        #: dirs already crc-validated: checkpoints are immutable once the
+        #: manifest commits, so _gc never re-reads a known-valid dir
+        self._known_valid: set = set()
         self.stats = {"saves": 0, "drain_s": 0.0, "snapshot_s": 0.0,
                       "write_s": 0.0, "gc_removed": 0}
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, meta: Optional[dict] = None) -> Path:
-        """Drain -> host snapshot -> async commit.  Returns the ckpt dir."""
+        """Drain -> host snapshot -> async commit.  Returns the ckpt dir.
+        The manifest meta records the SOURCE world (device count + mesh
+        when the caller provides one) and the membership generation, so a
+        later elastic restore can report the topology change."""
         t0 = time.time()
         jax.block_until_ready(state)          # drain dispatched computation
         self.wait()                           # drain the previous async write
@@ -57,6 +66,8 @@ class CheckpointManager:
 
         ckpt_dir = self.root / f"step_{step:010d}"
         meta = dict(meta or {}, step=step, time=time.time())
+        meta.setdefault("world", {"n_devices": len(jax.devices())})
+        meta.setdefault("generation", self.generation)
 
         def _write():
             t1 = time.time()
@@ -106,21 +117,32 @@ class CheckpointManager:
         return None
 
     def restore(self, template, shardings=None,
-                ckpt_dir: Optional[Path] = None):
-        """Restore newest valid checkpoint (resharded).  Returns
-        (state, meta) or (None, None) if nothing valid exists."""
+                ckpt_dir: Optional[Path] = None, mesh=None, rules=None):
+        """Restore newest valid checkpoint (resharded).  Layouts come from
+        `shardings`, or are derived for `mesh` (+ optional `rules`) when
+        given — the elastic cross-topology path.  Returns (state, meta) or
+        (None, None) if nothing valid exists."""
         d = ckpt_dir or self.latest_valid()
         if d is None:
             return None, None
-        state = restore_resharded(d, template, shardings)
+        state = restore_resharded(d, template, shardings, mesh=mesh,
+                                  rules=rules)
         meta = ser.load_manifest(d).get("meta", {})
         return state, meta
 
     # --------------------------------------------------------------------- gc
     def _gc(self) -> None:
-        steps = self.list_steps()
-        for step in steps[:-self.keep] if self.keep else []:
-            d = self.root / f"step_{step:010d}"
-            if ser.validate(d):      # never GC the only valid artifacts race
-                shutil.rmtree(d, ignore_errors=True)
-                self.stats["gc_removed"] += 1
+        """Corrupt/partial dirs are ALWAYS removed (they can never be
+        restored and used to accumulate forever); of the valid ones, the
+        newest `keep` are retained — and the last remaining valid
+        checkpoint is never removed, whatever `keep` says."""
+        dirs = [self.root / f"step_{s:010d}" for s in self.list_steps()]
+        valid = [d for d in dirs
+                 if d.name in self._known_valid or ser.validate(d)]
+        self._known_valid = {d.name for d in valid}
+        invalid = [d for d in dirs if d not in valid]
+        excess = valid[:-self.keep] if self.keep else []
+        for d in invalid + excess:
+            shutil.rmtree(d, ignore_errors=True)
+            self._known_valid.discard(d.name)
+            self.stats["gc_removed"] += 1

@@ -19,12 +19,17 @@ from repro.checkpoint.serialization import (_leaf_paths, load_leaf,
 
 
 def restore_resharded(ckpt_dir: Path, template, shardings=None,
-                      verify: bool = True):
+                      verify: bool = True, mesh=None, rules=None):
     """Restore `template`-shaped tree; if `shardings` (matching tree of
     NamedSharding) is given, every leaf is device_put with its NEW layout.
-    The saving mesh is irrelevant — only index windows matter."""
+    Alternatively pass `mesh` (e.g. from ``elastic.choose_mesh``) plus the
+    ``ShardingRules`` in `rules` and the layout is DERIVED per leaf for
+    that arbitrary new mesh.  The saving mesh is irrelevant — only index
+    windows matter."""
     man = load_manifest(ckpt_dir)
     keys = [k for k, _ in _leaf_paths(template)]
+    if shardings is None and mesh is not None:
+        shardings = derive_shardings(template, mesh, rules)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(keys))
     vals = []
@@ -37,15 +42,47 @@ def restore_resharded(ckpt_dir: Path, template, shardings=None,
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 
+def derive_shardings(template, mesh, rules=None):
+    """NamedSharding tree for an arbitrary NEW mesh: Pm leaves resolve
+    their logical axes through `rules` (delegated to the one canonical
+    resolver, ``sharding.param_shardings``, so elastic restores can never
+    drift from training layouts); plain array leaves replicate (the safe
+    layout on a world whose shape the checkpoint never saw)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import param_shardings
+    from repro.models.params import is_pm
+
+    def one(leaf):
+        if rules is not None and is_pm(leaf):
+            return param_shardings(leaf, mesh, rules)
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, template, is_leaf=is_pm)
+
+
+def _dtype_bytes(dtype: str) -> int:
+    if dtype == "bfloat16":
+        return 2
+    try:
+        return int(np.dtype(dtype).itemsize)
+    except TypeError:
+        return 4
+
+
 def plan_summary(ckpt_dir: Path) -> dict:
-    """What a restore would move: leaves, bytes, source mesh metadata."""
+    """What a restore would move: leaves, shard files, bytes, and where the
+    checkpoint came from (source world + membership generation)."""
     man = load_manifest(ckpt_dir)
     total = 0
+    n_shards = 0
     for e in man["leaves"].values():
         n = 1
         for d in e["shape"]:
             n *= d
-        total += n * np.dtype("float32").itemsize if e["dtype"] == "float32" \
-            else n * 2
-    return {"n_leaves": len(man["leaves"]), "approx_bytes": total,
-            "meta": man.get("meta", {})}
+        total += n * _dtype_bytes(e["dtype"])
+        n_shards += len(e.get("shards", ()))
+    meta = man.get("meta", {})
+    return {"n_leaves": len(man["leaves"]), "n_shards": n_shards,
+            "approx_bytes": total, "meta": meta,
+            "source_world": meta.get("world"),
+            "generation": meta.get("generation", 0)}

@@ -30,14 +30,15 @@ from typing import Any, Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.coordinator import Coordinator, PHASE_PENDING, PHASE_RUN
-from repro.core.drain import MessageCache
+from repro.core.drain import MessageCache, remap_cache_snapshot
 from repro.core.messages import (ANY_SOURCE, ANY_TAG, COLL_TAG_BASE, DATATYPES,
                                  Status, pack, unpack)
 from repro.core.proxy import (CMD_POLL_ALL, CMD_POLL_WAIT, CMD_REGISTER_COMM,
                               CMD_REGISTER_RANK, CMD_SEND,
                               CMD_UNREGISTER_COMM, ProxyChannel)
 from repro.core.replay import AdminLog
-from repro.core.virtualization import WORLD_VID, VirtualIds
+from repro.core.virtualization import (RankMap, VirtualIds, WORLD_VID,
+                                       remap_vids_snapshot)
 
 COMM_WORLD = WORLD_VID
 
@@ -85,13 +86,21 @@ class MPI:
         self.bytes_received = 0
         self.coll_seq: dict = {COMM_WORLD: 0}
         self.step_idx = 0                 # maintained by the runtime
+        #: membership generation this rank joined with — stamped on every
+        #: coordinator report so a zombie rank from a superseded world is
+        #: rejected (StaleGenerationError) instead of corrupting the job
+        self.generation = coordinator.generation
         self._proposed_gen = -1
         self._initialized = False
         self._ops_since_report = 0
+        #: runtime hook: called whenever this rank is blocked-but-alive
+        #: (pumping an empty transport) so the heartbeat keeps beating
+        self._on_idle: Optional[Callable[[], None]] = None
 
     # ------------------------------------------------------------------ admin
     def Init(self) -> None:
         self.admin.append("init", (self.rank, self.n))
+        self.coord.join(self.rank, self.generation)
         self.channel.call(CMD_REGISTER_RANK, self.rank, self.n)
         self._initialized = True
 
@@ -115,9 +124,12 @@ class MPI:
         return self.vids.comms[comm].world_rank(dest)
 
     def _report(self) -> None:
-        """Exact counter push (always used when the checkpoint FSM runs)."""
+        """Exact counter push (always used when the checkpoint FSM runs).
+        Generation-stamped: a rank whose world was superseded raises
+        StaleGenerationError here instead of polluting the new epoch."""
         self._ops_since_report = 0
-        self.coord.report_counters(self.rank, self.sent, self.received)
+        self.coord.report_counters(self.rank, self.sent, self.received,
+                                   generation=self.generation)
 
     def _maybe_report(self) -> None:
         """Epoch-based flush: exact whenever phase != RUN (the only time the
@@ -176,11 +188,16 @@ class MPI:
         return len(envs)
 
     def _participate_if_pending(self) -> None:
-        """Inside a blocked call: keep checkpoint agreement deadlock-free."""
+        """Inside a blocked call: keep checkpoint agreement deadlock-free,
+        keep the heartbeat alive, and unwind promptly on abort."""
+        self.coord.check_aborted()
+        if self._on_idle is not None:
+            self._on_idle()
         if (self.coord.phase == PHASE_PENDING
-                and self._proposed_gen < self.coord.generation):
-            self.coord.propose_ckpt_step(self.rank, self.step_idx + 1)
-            self._proposed_gen = self.coord.generation
+                and self._proposed_gen < self.coord.ckpt_round):
+            self.coord.propose_ckpt_step(self.rank, self.step_idx + 1,
+                                         generation=self.generation)
+            self._proposed_gen = self.coord.ckpt_round
 
     def Recv(self, source: int = ANY_SOURCE, tag: int = ANY_TAG,
              comm: int = COMM_WORLD, timeout: float = 120.0,
@@ -574,6 +591,44 @@ class MPI:
         self.coll_seq = dict(snap["coll_seq"])
         self._initialized = True
         self._report()
+
+
+def remap_mpi_snapshot(snap: dict, rank_map: RankMap, new_rank: int,
+                       new_n: int, clone: bool = False) -> dict:
+    """World-remap one rank's MPI.snapshot() for an elastic restart.
+
+    `clone=True` marks a GROWN member (a new rank seeded from a survivor's
+    image): it inherits the survivor's communicator layout and collective
+    sequence numbers (so the first post-restart collective lines up across
+    old and new members) but has NO in-flight history — cache and pending
+    recvs are cleared.
+
+    sent/received reset to 0 for every member: the drain heuristic's
+    Σsent == Σreceived invariant is epoch-scoped to the membership
+    generation, and messages exchanged with dead ranks would otherwise
+    unbalance the sums forever (DESIGN.md §8)."""
+    vids_snap, dropped_comms = remap_vids_snapshot(snap["vids"], rank_map,
+                                                   new_n)
+    admin = AdminLog.restore(snap["admin"]).remap(rank_map, new_rank, new_n)
+    if clone:
+        cache: list = []
+        vids_snap = dict(vids_snap, pending_recvs=[])
+    else:
+        cache = remap_cache_snapshot(snap["cache"], rank_map, dropped_comms)
+    coll_seq = {int(v): s for v, s in snap["coll_seq"].items()
+                if int(v) not in dropped_comms}
+    return {
+        "rank": new_rank,
+        "n": new_n,
+        "cache": cache,
+        "vids": vids_snap,
+        "admin": admin.snapshot(),
+        "sent": 0,
+        "received": 0,
+        "bytes_sent": snap.get("bytes_sent", 0),
+        "bytes_received": snap.get("bytes_received", 0),
+        "coll_seq": coll_seq,
+    }
 
 
 class _ProxyFacade:

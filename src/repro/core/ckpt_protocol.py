@@ -53,11 +53,16 @@ def save_rank_image(ckpt_dir: Path, image: RankImage) -> dict:
 
 
 def commit_manifest(ckpt_dir: Path, entries: Dict[int, dict],
-                    meta: Optional[dict] = None) -> None:
+                    meta: Optional[dict] = None,
+                    generation: int = 0) -> None:
+    """`n_ranks` is the SOURCE world; `generation` the membership epoch the
+    job ran in — both are what an elastic restart (and its tests) read to
+    report a topology change (DESIGN.md §8)."""
     manifest = {
-        "version": 1,
+        "version": 2,
         "time": time.time(),
         "n_ranks": len(entries),
+        "generation": generation,
         "ranks": {str(r): e for r, e in sorted(entries.items())},
         "meta": meta or {},
     }

@@ -1,16 +1,24 @@
-"""DMTCP-style coordinator: checkpoint orchestration FSM + the global
-sent/received counter aggregation that detects drain completion.
+"""DMTCP-style coordinator: checkpoint orchestration FSM, the global
+sent/received counter aggregation that detects drain completion, and —
+since the elastic-restart refactor — a generation-based MEMBERSHIP service.
 
 Phases:  RUN -> DRAIN -> SNAPSHOT -> (RESUME | EXIT)
 
 The coordinator never sees application data — only counters and phase
-acknowledgements (exactly the DMTCP coordinator's role in the paper)."""
+acknowledgements (exactly the DMTCP coordinator's role in the paper).
+
+Membership (DESIGN.md §8): the world's shape is an epoch called the
+*generation*.  Ranks join with a generation number; a dead/removed rank
+bumps the generation; any rank-originated message stamped with a stale
+generation is rejected with ``StaleGenerationError`` so a zombie rank from
+a previous incarnation of the job cannot corrupt a restarted one."""
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
+
 
 PHASE_RUN = "run"
 PHASE_PENDING = "pending"      # ranks converge on a common checkpoint step
@@ -20,15 +28,72 @@ PHASE_RESUME = "resume"
 PHASE_EXIT = "exit"
 
 
+class StaleGenerationError(RuntimeError):
+    """A message stamped with a superseded membership generation."""
+
+
+class JobAborted(RuntimeError):
+    """The job was aborted (dead rank / external cancel); ranks unwind."""
+
+
 @dataclass
 class RankCounters:
     sent: int = 0
     received: int = 0
 
 
+class Membership:
+    """Generation-based membership: which world shape is current.
+
+    A Membership object OUTLIVES any single MPIJob — the fault-tolerant
+    driver owns one and threads it through restarts, so a rank checkpointed
+    in generation g can never ack, propose or report into generation g+1.
+    """
+
+    def __init__(self, world_size: int, generation: int = 0):
+        self._lock = threading.Lock()
+        self.world_size = world_size
+        self.generation = generation
+        #: (generation, world_size, dead_ranks) per epoch, oldest first
+        self.history: List[Tuple[int, int, Tuple[int, ...]]] = [
+            (generation, world_size, ())]
+
+    def bump(self, dead: Sequence[int] = (),
+             world_size: Optional[int] = None) -> int:
+        """Start a new membership epoch: remove `dead`, adopt `world_size`
+        (default: shrink by the number of dead ranks).  Returns the new
+        generation."""
+        with self._lock:
+            if world_size is None:
+                world_size = self.world_size - len(set(dead))
+            if world_size < 1:
+                raise ValueError(
+                    f"membership bump would leave world_size={world_size}")
+            self.generation += 1
+            self.world_size = world_size
+            self.history.append(
+                (self.generation, world_size, tuple(sorted(set(dead)))))
+            return self.generation
+
+    def check(self, generation: Optional[int]) -> None:
+        """Reject a stale-generation message (None = unstamped, accepted —
+        intra-job calls are implicitly current)."""
+        if generation is None:
+            return
+        with self._lock:
+            if generation != self.generation:
+                raise StaleGenerationError(
+                    f"message from generation {generation} rejected: "
+                    f"current generation is {self.generation} "
+                    f"(world_size={self.world_size})")
+
+
 class Coordinator:
-    def __init__(self, n_ranks: int):
+    def __init__(self, n_ranks: int, membership: Optional[Membership] = None,
+                 timeout: float = 60.0):
         self.n = n_ranks
+        self.timeout = timeout
+        self.membership = membership or Membership(n_ranks)
         self.phase = PHASE_RUN
         self._lock = threading.Condition()
         self._counters: Dict[int, RankCounters] = {
@@ -39,9 +104,47 @@ class Coordinator:
         self._barrier_gen = 0
         self._barrier_count = 0
         self._finished: set = set()
+        self.aborted: Optional[str] = None
         self.stats = {"drain_rounds": 0, "drain_wall_s": 0.0,
                       "drained_messages": 0, "checkpoints": 0,
-                      "counter_reports": 0, "empty_channel_snapshots": 0}
+                      "counter_reports": 0, "empty_channel_snapshots": 0,
+                      "stale_rejected": 0}
+
+    # ---- membership ---------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        """Current membership generation (the world-shape epoch)."""
+        return self.membership.generation
+
+    def join(self, rank: int, generation: Optional[int] = None) -> int:
+        """A rank enters the world at `generation`; stale joins rejected,
+        out-of-world ranks refused.  Returns the current generation."""
+        self._check_gen(generation)
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} outside world of {self.n}")
+        return self.membership.generation
+
+    def _check_gen(self, generation: Optional[int]) -> None:
+        try:
+            self.membership.check(generation)
+        except StaleGenerationError:
+            with self._lock:
+                self.stats["stale_rejected"] += 1
+            raise
+
+    # ---- abort --------------------------------------------------------------
+    def abort(self, reason: str) -> None:
+        """Cancel the job: every blocked rank raises JobAborted at its next
+        pump/wait instead of timing out (what makes dead-rank detection →
+        restart fast)."""
+        with self._lock:
+            if self.aborted is None:
+                self.aborted = reason
+            self._lock.notify_all()
+
+    def check_aborted(self) -> None:
+        if self.aborted is not None:
+            raise JobAborted(self.aborted)
 
     def mark_finished(self, rank: int) -> None:
         with self._lock:
@@ -53,7 +156,9 @@ class Coordinator:
             return len(self._finished) == self.n and self.phase == PHASE_RUN
 
     # ---- counters (the Σsent == Σreceived heuristic) -----------------------
-    def report_counters(self, rank: int, sent: int, received: int) -> None:
+    def report_counters(self, rank: int, sent: int, received: int,
+                        generation: Optional[int] = None) -> None:
+        self._check_gen(generation)
         with self._lock:
             c = self._counters[rank]
             c.sent, c.received = sent, received
@@ -92,12 +197,14 @@ class Coordinator:
             self.stats["checkpoints"] += 1
             self._lock.notify_all()
 
-    def propose_ckpt_step(self, rank: int, next_boundary: int) -> Optional[int]:
+    def propose_ckpt_step(self, rank: int, next_boundary: int,
+                          generation: Optional[int] = None) -> Optional[int]:
         """NON-BLOCKING.  A rank proposes the next step boundary it will
         reach (called at a boundary, or from inside a blocked Recv with
         current_step+1 — that is what makes agreement deadlock-free when
         ranks run at different speeds).  Returns the agreed step once all
         ranks have proposed, else None.  First proposal per rank wins."""
+        self._check_gen(generation)
         with self._lock:
             if self.phase not in (PHASE_PENDING, PHASE_DRAIN):
                 return self.ckpt_step
@@ -109,11 +216,15 @@ class Coordinator:
             return self.ckpt_step
 
     @property
-    def generation(self) -> int:
+    def ckpt_round(self) -> int:
+        """How many checkpoint FSM rounds have started (NOT the membership
+        generation — see `generation`)."""
         return self.stats["checkpoints"]
 
-    def ack_drained(self, rank: int) -> None:
+    def ack_drained(self, rank: int,
+                    generation: Optional[int] = None) -> None:
         """Rank reports: at step boundary, no un-pumped traffic visible."""
+        self._check_gen(generation)
         with self._lock:
             self._drain_ack.add(rank)
             self._lock.notify_all()
@@ -138,7 +249,9 @@ class Coordinator:
             self.stats["drain_rounds"] += 1
             return False
 
-    def ack_snapshot(self, rank: int) -> None:
+    def ack_snapshot(self, rank: int,
+                     generation: Optional[int] = None) -> None:
+        self._check_gen(generation)
         with self._lock:
             self._snap_ack.add(rank)
             if len(self._snap_ack) == self.n:
@@ -155,19 +268,27 @@ class Coordinator:
                     self.phase = PHASE_RUN
                     self._lock.notify_all()
 
-    def wait_phase(self, *phases: str, timeout: float = 60.0) -> str:
+    def wait_phase(self, *phases: str,
+                   timeout: Optional[float] = None) -> str:
+        timeout = self.timeout if timeout is None else timeout
         deadline = time.time() + timeout
         with self._lock:
             while self.phase not in phases:
+                if self.aborted is not None:
+                    raise JobAborted(self.aborted)
                 left = deadline - time.time()
                 if left <= 0:
                     raise TimeoutError(
-                        f"waiting for {phases}, still {self.phase}")
+                        f"waiting for {phases}, still {self.phase} "
+                        f"after {timeout:g}s")
                 self._lock.wait(left)
             return self.phase
 
     # ---- generic barrier -----------------------------------------------------
-    def barrier(self, rank: int, timeout: float = 60.0) -> None:
+    def barrier(self, rank: int, timeout: Optional[float] = None,
+                generation: Optional[int] = None) -> None:
+        self._check_gen(generation)
+        timeout = self.timeout if timeout is None else timeout
         with self._lock:
             gen = self._barrier_gen
             self._barrier_count += 1
@@ -178,7 +299,12 @@ class Coordinator:
                 return
             deadline = time.time() + timeout
             while self._barrier_gen == gen:
+                if self.aborted is not None:
+                    raise JobAborted(self.aborted)
                 left = deadline - time.time()
                 if left <= 0:
-                    raise TimeoutError("barrier timeout")
+                    raise TimeoutError(
+                        f"barrier timeout after {timeout:g}s "
+                        f"(rank {rank}, {self._barrier_count}/{self.n} "
+                        f"arrived)")
                 self._lock.wait(left)

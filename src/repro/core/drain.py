@@ -5,11 +5,17 @@ GLOBAL sent == received (the counter heuristic from Cao's thesis [5]);
 everything pumped out of the network lands in this per-rank MessageCache,
 which is checkpointed with the application and consulted FIRST by
 Recv/Probe/Iprobe after restart (and during normal operation — an envelope
-that arrived while the app was busy lives here too)."""
+that arrived while the app was busy lives here too).
+
+On an ELASTIC restart the cached envelopes are world-remapped: src/dst
+ranks rewritten through the old→new map, and envelopes that reference a
+dead rank or a dropped communicator are discarded (their sender no longer
+exists in the new world — DESIGN.md §8)."""
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Iterable, List, Optional, Set
 
 from repro.core.messages import ANY_SOURCE, ANY_TAG, Envelope
 
@@ -48,3 +54,22 @@ class MessageCache:
     @staticmethod
     def restore(items: list) -> "MessageCache":
         return MessageCache([Envelope.from_bytes(b) for b in items])
+
+
+def remap_cache_snapshot(items: list, rank_map: dict,
+                         dropped_comms: Iterable[int] = ()) -> list:
+    """World-remap a MessageCache.snapshot() for an elastic restart.
+    Envelopes whose src or dst did not survive, or whose communicator was
+    dropped by the reshape, are discarded."""
+    dropped: Set[int] = set(dropped_comms)
+    out: list = []
+    for b in items:
+        env = Envelope.from_bytes(b)
+        if env.comm_vid in dropped:
+            continue
+        src = rank_map.get(env.src)
+        dst = rank_map.get(env.dst)
+        if src is None or dst is None:
+            continue
+        out.append(dataclasses.replace(env, src=src, dst=dst).to_bytes())
+    return out

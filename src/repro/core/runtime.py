@@ -12,24 +12,28 @@ Checkpointing is ASYNCHRONOUS like DMTCP's coordinator: call
 a common boundary step, run up to it (draining the network), snapshot, and
 resume or exit.  ``MPIJob.restart`` reconstructs the job from images on ANY
 transport — checkpoint under shm, restart under tcp is the paper's §7
-cross-implementation restart."""
+cross-implementation restart — and, since the elastic refactor, for ANY
+world shape: ``MPIJob.restart(ck, step_fn, init_fn, world_size=K,
+dead_ranks=(r,))`` shrinks, grows, or replaces members, remapping every
+world-rank reference in the images through the old→new map (DESIGN.md §8)."""
 from __future__ import annotations
 
 import pickle
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.api import MPI
+from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
                                       save_rank_image)
-from repro.core.coordinator import (Coordinator, PHASE_DRAIN, PHASE_EXIT,
-                                    PHASE_PENDING, PHASE_RESUME, PHASE_RUN,
-                                    PHASE_SNAPSHOT)
+from repro.core.coordinator import (Coordinator, JobAborted, Membership,
+                                    PHASE_DRAIN, PHASE_EXIT, PHASE_PENDING,
+                                    PHASE_RESUME, PHASE_RUN, PHASE_SNAPSHOT)
 from repro.core.proxy import MPIProxy, ProxyChannel
 from repro.core.transport import make_transport
+from repro.core.virtualization import make_rank_map
 
 
 class MPIJob:
@@ -37,12 +41,15 @@ class MPIJob:
                  step_fn: Callable[[MPI, Any, int], Any],
                  init_fn: Callable[[MPI], Any],
                  transport: str = "shm",
-                 heartbeat_timeout: float = 5.0):
+                 heartbeat_timeout: float = 5.0,
+                 membership: Optional[Membership] = None,
+                 coord_timeout: float = 60.0):
         self.n = n_ranks
         self.step_fn = step_fn
         self.init_fn = init_fn
         self.transport_name = transport
-        self.coord = Coordinator(n_ranks)
+        self.coord = Coordinator(n_ranks, membership=membership,
+                                 timeout=coord_timeout)
         self.transport = make_transport(transport)
         self.transport.start(n_ranks)
         self.channels = [ProxyChannel() for _ in range(n_ranks)]
@@ -56,16 +63,24 @@ class MPIJob:
         self.start_steps = [0] * n_ranks
         self.results: List[Any] = [None] * n_ranks
         self.errors: Dict[int, BaseException] = {}
+        self._err_lock = threading.Lock()
         self._ckpt_dir: Optional[Path] = None
         self._ckpt_meta: Dict[int, dict] = {}
         self._ckpt_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
         self._restored = False
         self._trigger: Optional[tuple] = None   # (step, dir, resume)
+        #: set by an elastic restart: how this world was reshaped from the
+        #: checkpointed one (recorded into the next manifest's meta)
+        self.restore_info: Optional[dict] = None
         from repro.distributed.faults import (HeartbeatMonitor,
                                               StragglerTracker)
         self.heartbeat = HeartbeatMonitor(n_ranks, timeout_s=heartbeat_timeout)
         self.stragglers = StragglerTracker(n_ranks)
+        # blocked-but-alive ranks keep the heartbeat beating (a rank parked
+        # in Recv is NOT dead; one whose thread died stops pinging at once)
+        for r, m in enumerate(self.mpis):
+            m._on_idle = (lambda rr=r: self.heartbeat.ping(rr))
 
     # ------------------------------------------------------------------ run
     def _rank_main(self, rank: int, n_steps: int) -> None:
@@ -80,6 +95,8 @@ class MPIJob:
             step = self.start_steps[rank]
             end = n_steps
             while step < end:
+                self.coord.check_aborted()
+                self.heartbeat.ping(rank)    # arm before a (maybe long) step
                 mpi.step_idx = step
                 trig = self._trigger
                 if (trig is not None and step >= trig[0]
@@ -94,7 +111,7 @@ class MPIJob:
                 phase = self.coord.phase
                 if phase in (PHASE_PENDING, PHASE_DRAIN):
                     agreed = self.coord.propose_ckpt_step(rank, step)
-                    mpi._proposed_gen = self.coord.generation
+                    mpi._proposed_gen = self.coord.ckpt_round
                     if agreed is not None and step >= agreed:
                         should_exit = self._do_checkpoint(rank, mpi, state,
                                                           step)
@@ -121,18 +138,20 @@ class MPIJob:
             # an async checkpoint may land while peers are still running
             self.coord.mark_finished(rank)
             while not self.coord.all_finished():
+                self.coord.check_aborted()
                 self.heartbeat.ping(rank)    # alive while serving the FSM
                 if self.coord.phase in (PHASE_PENDING, PHASE_DRAIN):
                     mpi.step_idx = step
                     agreed = self.coord.propose_ckpt_step(rank, step)
-                    mpi._proposed_gen = self.coord.generation
+                    mpi._proposed_gen = self.coord.ckpt_round
                     if agreed is not None and step >= agreed:
                         if self._do_checkpoint(rank, mpi, state, step):
                             return
                         continue
                 time.sleep(0.0005)
         except BaseException as e:  # noqa: BLE001 - surfaced to driver
-            self.errors[rank] = e
+            with self._err_lock:
+                self.errors[rank] = e
             raise
 
     def _do_checkpoint(self, rank: int, mpi: MPI, state: Any,
@@ -144,8 +163,10 @@ class MPIJob:
         # coordinator before the rank acks drained (DESIGN.md §5)
         mpi.flush()
         while coord.phase == PHASE_DRAIN:
+            coord.check_aborted()
+            self.heartbeat.ping(rank)    # draining is alive, not dead
             pumped = mpi._pump_all()
-            coord.ack_drained(rank)
+            coord.ack_drained(rank, generation=mpi.generation)
             coord.drain_complete()
             if not pumped:
                 time.sleep(0.0002)
@@ -164,18 +185,41 @@ class MPIJob:
         with self._ckpt_lock:
             self._ckpt_meta[rank] = entry
             if len(self._ckpt_meta) == self.n:
-                commit_manifest(self._ckpt_dir, self._ckpt_meta,
-                                meta={"transport": self.transport_name,
-                                      "step": step})
-        coord.ack_snapshot(rank)
-        phase = coord.wait_phase(PHASE_RESUME, PHASE_EXIT)
+                meta = {"transport": self.transport_name, "step": step,
+                        "world_size": self.n}
+                if self.restore_info is not None:
+                    meta["elastic"] = self.restore_info
+                commit_manifest(self._ckpt_dir, self._ckpt_meta, meta=meta,
+                                generation=self.coord.generation)
+        coord.ack_snapshot(rank, generation=mpi.generation)
+        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
         if phase == PHASE_EXIT:
             return True
         coord.resume_running(rank)
-        coord.wait_phase(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
+        self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
         return False
 
+    def _wait_phase_alive(self, rank: int, *phases: str) -> str:
+        """wait_phase that keeps the heartbeat beating: a rank parked here
+        while a slower peer writes a large image must not be declared
+        dead.  Overall deadline is still the coordinator's timeout."""
+        deadline = time.time() + self.coord.timeout
+        while True:
+            self.heartbeat.ping(rank)
+            try:
+                return self.coord.wait_phase(
+                    *phases, timeout=min(0.25, self.coord.timeout))
+            except TimeoutError:
+                if time.time() > deadline:
+                    raise TimeoutError(
+                        f"waiting for {phases} after "
+                        f"{self.coord.timeout:g}s") from None
+
     def run(self, n_steps: int, timeout: float = 300.0) -> List[Any]:
+        # re-arm heartbeats NOW: image load / admin replay between
+        # construction and run() must not count against the first pings
+        for r in range(self.n):
+            self.heartbeat.reset(r)
         self._threads = [
             threading.Thread(target=self._rank_main, args=(r, n_steps),
                              daemon=True, name=f"rank-{r}")
@@ -218,6 +262,19 @@ class MPIJob:
             time.sleep(0.001)
         raise TimeoutError("checkpoint did not complete")
 
+    def failed_ranks(self) -> List[int]:
+        """Thread-safe snapshot of ranks whose thread raised (the driver's
+        monitor polls this concurrently with rank threads failing)."""
+        with self._err_lock:
+            return sorted(self.errors)
+
+    def abort(self, reason: str) -> None:
+        """Cancel a running job: every rank — stepping, blocked in Recv, or
+        draining — raises JobAborted at its next check instead of waiting
+        out a timeout.  Used by the fault-tolerant driver the moment the
+        heartbeat flags a dead rank (seconds, not Recv-timeout minutes)."""
+        self.coord.abort(reason)
+
     def stop(self) -> None:
         """Deterministic, leak-free teardown: stop every proxy (a
         fire-and-forget STOP — see MPIProxy.stop for why it must not be
@@ -237,17 +294,72 @@ class MPIJob:
     def restart(cls, ckpt_dir: str | Path,
                 step_fn: Callable[[MPI, Any, int], Any],
                 init_fn: Callable[[MPI], Any],
-                transport: str = "shm") -> "MPIJob":
-        """Reconstruct a job from a checkpoint on ANY transport: fresh
-        proxies + transports, admin-log replay, cache preload."""
+                transport: str = "shm",
+                world_size: Optional[int] = None,
+                dead_ranks: Sequence[int] = (),
+                membership: Optional[Membership] = None,
+                heartbeat_timeout: float = 5.0,
+                coord_timeout: float = 60.0) -> "MPIJob":
+        """Reconstruct a job from a checkpoint on ANY transport — and, when
+        `world_size` / `dead_ranks` reshape the world, for ANY topology:
+
+          * fresh proxies + transport (the switchboard is rebuilt for the
+            NEW world size), admin-log replay, cache preload;
+          * survivors compact over the holes left by `dead_ranks` (the
+            old→new rank map from `make_rank_map`);
+          * a grown world seeds its new members from survivor images
+            (communicator layout + collective sequence cloned, in-flight
+            history cleared);
+          * `membership` (usually the driver's, already bumped past the
+            dead generation) makes every stale-generation message from a
+            zombie of the old world rejectable.
+
+        The reshape is recorded in `job.restore_info` and stamped into the
+        next checkpoint manifest this job writes."""
         ckpt_dir = Path(ckpt_dir)
         man = load_manifest(ckpt_dir)
-        n = man["n_ranks"]
-        job = cls(n, step_fn, init_fn, transport=transport)
-        for r in range(n):
-            img = load_rank_image(ckpt_dir, r)
-            job.mpis[r].restore(img.mpi_state)
+        old_n = man["n_ranks"]
+        dead = tuple(sorted({int(r) for r in dead_ranks}))
+        bad = [r for r in dead if not 0 <= r < old_n]
+        if bad:
+            raise ValueError(f"dead_ranks {bad} outside world of {old_n}")
+        new_n = world_size if world_size is not None else old_n - len(dead)
+        survivors = [r for r in range(old_n) if r not in dead]
+        if new_n < 1 or not survivors:
+            raise ValueError(
+                f"cannot restart: world_size={new_n}, "
+                f"{len(survivors)} surviving rank images")
+        reshaped = (new_n != old_n) or bool(dead)
+        job = cls(new_n, step_fn, init_fn, transport=transport,
+                  heartbeat_timeout=heartbeat_timeout,
+                  membership=membership, coord_timeout=coord_timeout)
+        rank_map = make_rank_map(old_n, new_n, dead)
+        sources: Dict[int, int] = {}
+        images: Dict[int, RankImage] = {}    # grow clones reuse one load
+        for r in range(new_n):
+            src = survivors[r % len(survivors)]
+            sources[r] = src
+            if src not in images:
+                images[src] = load_rank_image(ckpt_dir, src)
+            img = images[src]
+            snap = img.mpi_state
+            if reshaped:
+                snap = remap_mpi_snapshot(snap, rank_map, r, new_n,
+                                          clone=r >= len(survivors))
+            job.mpis[r].restore(snap)
             job.states[r] = pickle.loads(img.app_state)
             job.start_steps[r] = img.step_idx
         job._restored = True
+        if reshaped:
+            job.restore_info = {
+                "from": ckpt_dir.name,
+                "old_world": old_n,
+                "new_world": new_n,
+                "dead_ranks": list(dead),
+                "rank_map": {str(o): n for o, n in rank_map.items()},
+                "sources": {str(r): s for r, s in sources.items()},
+                "generation": job.coord.generation,
+                "from_transport": man.get("meta", {}).get("transport"),
+                "to_transport": transport,
+            }
         return job

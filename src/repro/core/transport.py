@@ -1,11 +1,15 @@
 """Pluggable transports — the "MPI implementations" of the reproduction.
 
-Two deliberately different mechanisms prove implementation-agnosticism
+Three deliberately different mechanisms prove implementation-agnosticism
 (paper §1, §7):
 
-  * ShmTransport — in-process queues (the "shared-memory MPI").
+  * ShmTransport — in-process SimpleQueues (the "shared-memory MPI").
   * TcpTransport — real localhost sockets through a switchboard daemon
     (the "socket MPI"); frames are length-prefixed pickled Envelopes.
+  * InprocTransport — a single shared condition variable over per-rank
+    deques (the "third vendor": one lock for the whole fabric, batch
+    appends under one acquisition).  Exists so elastic restarts can hop
+    checkpoint-on-tcp → restart-on-inproc and back.
 
 Both speak the batched fabric API: ``send_many`` ships a whole proxy batch
 in one operation (one writev-style socket write for TCP) and ``poll_all``
@@ -23,12 +27,13 @@ tests/test_drain_restart.py::test_cross_transport_restart.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import socket
 import struct
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Type
+from typing import Deque, Dict, List, Optional, Sequence, Type
 
 from repro.core.messages import Envelope
 
@@ -148,6 +153,71 @@ class ShmTransport(Transport):
                 out.append(q.get_nowait())
             except queue.Empty:
                 return out
+
+
+@register_transport
+class InprocTransport(Transport):
+    """Third 'MPI implementation': per-rank deques under ONE shared
+    condition variable.  send_many appends a whole batch under a single
+    lock acquisition; poll_wait parks on the condition (no per-rank
+    queue object, no sockets) — structurally unlike both shm and tcp,
+    which is the point: a checkpoint must restore onto it unchanged."""
+
+    name = "inproc"
+
+    def start(self, n_ranks: int) -> None:
+        self._cv = threading.Condition()
+        self._boxes: List[Deque[Envelope]] = [
+            collections.deque() for _ in range(n_ranks)]
+
+    def stop(self) -> None:
+        with self._cv:
+            self._boxes = []
+            self._cv.notify_all()
+
+    def send(self, env: Envelope) -> None:
+        with self._cv:
+            self._boxes[env.dst].append(env)
+            self._cv.notify_all()
+
+    def send_many(self, envs: Sequence[Envelope]) -> None:
+        if not envs:
+            return
+        with self._cv:
+            boxes = self._boxes
+            for env in envs:
+                boxes[env.dst].append(env)
+            self._cv.notify_all()
+
+    def poll(self, rank: int) -> Optional[Envelope]:
+        with self._cv:
+            box = self._boxes[rank] if rank < len(self._boxes) else None
+            return box.popleft() if box else None
+
+    def poll_all(self, rank: int) -> List[Envelope]:
+        with self._cv:
+            if rank >= len(self._boxes):
+                return []
+            box = self._boxes[rank]
+            out = list(box)
+            box.clear()
+            return out
+
+    def poll_wait(self, rank: int, timeout: float) -> List[Envelope]:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if rank >= len(self._boxes):     # stopped
+                    return []
+                box = self._boxes[rank]
+                if box:
+                    out = list(box)
+                    box.clear()
+                    return out
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return []
+                self._cv.wait(left)
 
 
 class _Switchboard(threading.Thread):

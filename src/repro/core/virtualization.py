@@ -1,13 +1,87 @@
 """Virtual id tables (paper §7): communicators, groups and requests are
 exposed to the application as small integers that survive checkpoint /
 restart and transport switches; the mapping to live backend objects is
-rebuilt by admin-log replay."""
+rebuilt by admin-log replay.
+
+World remap (elastic restart, DESIGN.md §8): when the world is reshaped
+(dead rank removed, replacement added, grown), every world-rank reference
+inside a checkpointed table is rewritten through an old→new rank map.
+Comms/groups whose member set fully survives the reshape are kept (ranks
+remapped); any referencing a dead rank are DROPPED — the application sees
+a KeyError if it uses them, exactly like a real revoked communicator."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 WORLD_VID = 0
+
+
+#: old world rank -> new world rank (None = the rank did not survive)
+RankMap = Dict[int, Optional[int]]
+
+
+def make_rank_map(old_n: int, new_n: int,
+                  dead: Tuple[int, ...] = ()) -> RankMap:
+    """Canonical old→new mapping for a reshape: survivors keep their order
+    and compact down over the holes left by dead ranks; survivors beyond
+    the new world size are dropped (shrink past the death count)."""
+    survivors = [r for r in range(old_n) if r not in set(dead)]
+    out: RankMap = {r: None for r in range(old_n)}
+    for i, r in enumerate(survivors):
+        out[r] = i if i < new_n else None
+    return out
+
+
+def remap_rank_tuple(ranks: Tuple[int, ...],
+                     rank_map: RankMap) -> Optional[Tuple[int, ...]]:
+    """Remapped member tuple, or None if any member did not survive."""
+    out = []
+    for r in ranks:
+        nr = rank_map.get(r)
+        if nr is None:
+            return None
+        out.append(nr)
+    return tuple(out)
+
+
+def remap_vids_snapshot(snap: dict, rank_map: RankMap,
+                        new_n: int) -> Tuple[dict, Set[int]]:
+    """Rewrite a VirtualIds.snapshot() for a reshaped world.  Returns the
+    new snapshot plus the set of DROPPED COMM vids (so the cache, pending
+    recvs and collective sequence tables can drop matching state
+    consistently).  Comm and group vids are SEPARATE namespaces — both
+    counters start at 1 — so dropped group vids must never leak into the
+    comm-keyed filter.  COMM_WORLD is special: always rebuilt as
+    range(new_n)."""
+    dropped_comms: Set[int] = set()
+    comms: Dict[int, Tuple[int, ...]] = {}
+    for v, ranks in snap["comms"].items():
+        v = int(v)
+        if v == WORLD_VID:
+            comms[v] = tuple(range(new_n))
+            continue
+        new_ranks = remap_rank_tuple(tuple(ranks), rank_map)
+        if new_ranks is None:
+            dropped_comms.add(v)
+        else:
+            comms[v] = new_ranks
+    groups: Dict[int, Tuple[int, ...]] = {}
+    for v, ranks in snap["groups"].items():
+        v = int(v)
+        new_ranks = remap_rank_tuple(tuple(ranks), rank_map)
+        if new_ranks is not None:
+            groups[v] = new_ranks
+    pending = []
+    for vid, src, tag, comm_vid in snap["pending_recvs"]:
+        if comm_vid in dropped_comms:
+            continue
+        new_src = src if src < 0 else rank_map.get(src)   # ANY_SOURCE < 0
+        if new_src is None:
+            continue                 # the sender died with the old world
+        pending.append((vid, new_src, tag, comm_vid))
+    return ({"comms": comms, "groups": groups, "pending_recvs": pending,
+             "next": snap["next"]}, dropped_comms)
 
 
 @dataclass(frozen=True)

@@ -27,13 +27,23 @@ def choose_mesh(n_devices: Optional[int] = None,
 
 
 def elastic_restore(mgr: CheckpointManager, template, mesh,
-                    rules: ShardingRules, state_shardings):
-    """Restore the newest valid checkpoint onto the CURRENT mesh.  Returns
-    (state, meta) — meta records the source world for telemetry."""
-    state, meta = mgr.restore(template, state_shardings)
+                    rules: ShardingRules, state_shardings=None):
+    """Restore the newest valid checkpoint onto the CURRENT mesh (layouts
+    derived from mesh+rules when `state_shardings` is not given).  Returns
+    (state, meta) — meta reports the topology change: the SOURCE world the
+    manifest recorded, the world restored onto, whether they differ, and
+    the membership generation the checkpoint was written in."""
+    # explicit shardings win; otherwise layouts derive from mesh+rules
+    state, meta = mgr.restore(template, state_shardings, mesh=mesh,
+                              rules=rules)
     if state is None:
         return None, None
     meta = dict(meta or {})
-    meta["restored_onto"] = {"devices": len(mesh.devices.flatten()),
-                             "mesh": dict(mesh.shape)}
+    now = {"devices": len(mesh.devices.flatten()), "mesh": dict(mesh.shape)}
+    source = meta.get("world")
+    meta["restored_onto"] = now
+    meta["source_world"] = source
+    meta["generation"] = meta.get("generation", 0)
+    meta["topology_changed"] = bool(
+        source and source.get("n_devices") not in (None, now["devices"]))
     return state, meta

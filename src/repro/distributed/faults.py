@@ -1,41 +1,64 @@
-"""Failure detection, straggler mitigation, and the restart driver.
+"""Failure detection, straggler mitigation, and the elastic restart driver.
 
 At fleet scale the paper's protocol is what makes failures cheap: because
 the checkpoint is implementation-free, a replacement node (or a different
-cluster/transport) restores without any state from the dead one.  Here:
+cluster/transport, or a DIFFERENT WORLD SIZE) restores without any state
+from the dead rank.  Here:
 
-  * HeartbeatMonitor — missed-heartbeat failure detector (ranks ping; a
-    monitor thread flags silence > timeout).
+  * HeartbeatMonitor — missed-heartbeat failure detector on a MONOTONIC
+    clock (wall-clock jumps cannot mass-declare ranks dead); ranks ping
+    from step boundaries AND from inside blocked calls (api._on_idle), so
+    "parked in Recv" is alive and "thread gone" is dead within timeout_s.
   * StragglerTracker — per-rank step-duration EWMA; ranks slower than
     ``factor`` x median are flagged (policy hook: reassign / exclude).
-  * FaultTolerantDriver — run an MPIJob with periodic checkpoints; on any
-    rank failure, rebuild the job from the newest valid checkpoint (losing
-    at most ckpt_every steps) — optionally on a different transport.
+  * FaultTolerantDriver — run an MPIJob with periodic checkpoints and a
+    live monitor.  On a dead rank: bump the membership generation (zombie
+    messages from the old world are rejected from that instant), abort the
+    job (blocked ranks unwind in milliseconds, not Recv-timeout minutes),
+    and restart from the newest valid checkpoint — shrunk by the dead
+    ranks, grown to a target size, or on a different transport
+    (DESIGN.md §8 state machine).
 """
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.core.coordinator import Membership
 
 
 class HeartbeatMonitor:
     def __init__(self, n_ranks: int, timeout_s: float = 1.0):
         self.timeout = timeout_s
-        self.last: Dict[int, float] = {r: time.time() for r in range(n_ranks)}
+        self.last: Dict[int, float] = {
+            r: time.monotonic() for r in range(n_ranks)}
         self._lock = threading.Lock()
 
     def ping(self, rank: int) -> None:
         with self._lock:
-            self.last[rank] = time.time()
+            self.last[rank] = time.monotonic()
+
+    def remove(self, rank: int) -> None:
+        """Forget a rank entirely (it was removed from the world): a
+        replaced rank must stop being reported dead on every poll."""
+        with self._lock:
+            self.last.pop(rank, None)
+
+    def reset(self, rank: int) -> None:
+        """Re-arm a rank (a replacement joined under the same id)."""
+        with self._lock:
+            self.last[rank] = time.monotonic()
 
     def dead_ranks(self) -> List[int]:
-        now = time.time()
+        now = time.monotonic()
         with self._lock:
-            return [r for r, t in self.last.items() if now - t > self.timeout]
+            return [r for r, t in self.last.items()
+                    if now - t > self.timeout]
 
 
 class StragglerTracker:
@@ -64,19 +87,52 @@ class RankKilled(Exception):
 
 
 class FaultTolerantDriver:
-    """Run-to-completion with checkpoint/restart recovery (MPIJob level)."""
+    """Run-to-completion with checkpoint/restart recovery (MPIJob level).
 
-    def __init__(self, job_factory: Callable[[], "MPIJob"],
-                 restart_factory: Callable[[Path, str], "MPIJob"],
+    Two factory styles are accepted (detected by arity):
+
+      * legacy — ``job_factory()`` and ``restart_factory(path, transport)``:
+        every incarnation keeps the original world size;
+      * elastic — ``job_factory(world_size, membership)`` and
+        ``restart_factory(path, transport, world_size, dead_ranks,
+        membership)``: on failure the driver bumps the shared Membership
+        generation and restarts at ``world_size - dead`` (or whatever
+        ``world_size_after_failure`` says — an int for a fixed target such
+        as grow-to-4, or a callable ``(world, dead) -> new_world``).
+
+    Detection is two-channel: a raised rank exception lands in
+    ``job.errors`` immediately, and a silently hung/vanished rank misses
+    heartbeats.  Either way the driver aborts the incarnation — blocked
+    peers unwind at their next pump — instead of waiting out Recv
+    timeouts.
+    """
+
+    def __init__(self, job_factory: Callable,
+                 restart_factory: Callable,
                  ckpt_root: str | Path, ckpt_every: int,
-                 max_restarts: int = 3):
+                 max_restarts: int = 3,
+                 world_size_after_failure:
+                     Union[int, Callable[[int, Tuple[int, ...]], int],
+                           None] = None,
+                 min_world_size: int = 1,
+                 monitor_poll_s: float = 0.02,
+                 membership: Optional[Membership] = None):
         self.job_factory = job_factory
         self.restart_factory = restart_factory
         self.ckpt_root = Path(ckpt_root)
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
+        self.world_size_after_failure = world_size_after_failure
+        self.min_world_size = min_world_size
+        self.monitor_poll_s = monitor_poll_s
+        self.membership = membership
         self.events: List[str] = []
+        self._elastic_jobs = (
+            len(inspect.signature(job_factory).parameters) >= 2)
+        self._elastic_restarts = (
+            len(inspect.signature(restart_factory).parameters) >= 5)
 
+    # ------------------------------------------------------------- plumbing
     def _latest_valid(self) -> Optional[Path]:
         from repro.core.ckpt_protocol import checkpoint_valid
         if not self.ckpt_root.exists():
@@ -87,30 +143,152 @@ class FaultTolerantDriver:
                 return d
         return None
 
+    def _next_world(self, world: int, dead: Tuple[int, ...]) -> int:
+        policy = self.world_size_after_failure
+        if callable(policy):
+            new = policy(world, dead)
+        elif policy is not None:
+            new = int(policy)
+        else:
+            new = world - len(dead)
+        return max(new, self.min_world_size)
+
+    def _fresh_job(self):
+        if self._elastic_jobs:
+            return self.job_factory(
+                self.membership.world_size if self.membership else None,
+                self.membership)
+        return self.job_factory()
+
+    def _restart_job(self, latest: Path, transport: str,
+                     dead: Tuple[int, ...], dead_gen: Optional[int]):
+        if not self._elastic_restarts:
+            return self.restart_factory(latest, transport)
+        from repro.core.ckpt_protocol import load_manifest
+        man = load_manifest(latest)
+        # dead rank ids are only meaningful against the INCARNATION that
+        # wrote the checkpoint — identified by its membership generation
+        # (world sizes can repeat across generations under a replacement
+        # policy); if the newest valid image predates the incarnation the
+        # death was observed in, restart by target size alone
+        if dead_gen is not None and man.get("generation", 0) != dead_gen:
+            dead = ()
+        world = (self.membership.world_size if self.membership
+                 else man["n_ranks"] - len(dead))
+        return self.restart_factory(latest, transport, world, dead,
+                                    self.membership)
+
+    @staticmethod
+    def _detect_dead(job) -> Tuple[int, ...]:
+        return tuple(sorted(set(job.failed_ranks())
+                            | set(job.heartbeat.dead_ranks())))
+
+    def _declare_dead(self, job, dead: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Bump the membership generation for an observed death set.  A
+        set covering the WHOLE world is an incarnation failure, not a
+        shrink (a shrink-by-all would leave no survivors): keep the world
+        size and restore every image.  Returns the dead set to carry into
+        the restart (empty for total outage)."""
+        observed = dead
+        if len(dead) >= job.n:
+            gen = self.membership.bump(world_size=job.n)
+            dead = ()
+        else:
+            gen = self.membership.bump(
+                dead, world_size=self._next_world(job.n, dead))
+        self.events.append(f"dead:{list(observed)}:gen={gen}")
+        return dead
+
+    # ------------------------------------------------------------------ run
     def run(self, n_steps: int, transport_after_failure: str = "shm",
             timeout: float = 120.0):
         attempts = 0
+        pending_dead: Tuple[int, ...] = ()
+        pending_gen: Optional[int] = None     # generation the death was seen in
         while True:
             latest = self._latest_valid()
             if latest is None:
-                job = self.job_factory()
+                job = self._fresh_job()
                 self.events.append("start:fresh")
             else:
-                job = self.restart_factory(latest, transport_after_failure)
-                self.events.append(f"restart:{latest.name}")
+                job = self._restart_job(latest, transport_after_failure,
+                                        pending_dead, pending_gen)
+                self.events.append(
+                    f"restart:{latest.name}:world={job.n}"
+                    f":gen={job.coord.generation}")
+            pending_dead, pending_gen = (), None
+            if self.membership is None:
+                # adopt the first incarnation's membership: it survives
+                # every later job and is what stale messages die against
+                self.membership = job.coord.membership
             start = max(job.start_steps) if latest is not None else 0
             # schedule periodic checkpoints from the next multiple
             nxt = ((start // self.ckpt_every) + 1) * self.ckpt_every
             if nxt < n_steps:
                 job.checkpoint_at(nxt, self.ckpt_root / f"at_{nxt:08d}")
-            try:
-                results = job.run(n_steps, timeout=timeout)
-                job.stop()
+
+            box: dict = {}
+
+            def _run_job(job=job, box=box):
+                try:
+                    box["result"] = job.run(n_steps, timeout=timeout)
+                except BaseException as e:  # noqa: BLE001 - surfaced below
+                    box["error"] = e
+
+            # re-arm heartbeats from THIS thread before monitoring begins:
+            # a slow image restore must not make the first dead_ranks()
+            # poll (which can run before the job thread is ever scheduled)
+            # mass-declare healthy ranks dead
+            for r in range(job.n):
+                job.heartbeat.reset(r)
+            t = threading.Thread(target=_run_job, daemon=True,
+                                 name="ftd-job")
+            t.start()
+            dead: Tuple[int, ...] = ()
+            dying_gen = self.membership.generation
+            deadline = time.monotonic() + timeout
+            while t.is_alive():
+                dead = self._detect_dead(job)
+                if dead:
+                    # settling window: co-failing ranks (one crash taking
+                    # the whole step down, a switch dying under several
+                    # nodes) rarely land in the same poll; batch them into
+                    # ONE generation bump instead of cascading restarts
+                    time.sleep(max(0.05, 2 * self.monitor_poll_s))
+                    dead = self._detect_dead(job)
+                    if not dead:
+                        continue    # transient blip: the rank recovered
+                    dead = self._declare_dead(job, dead)
+                    job.abort(f"dead ranks declared "
+                              f"(generation {self.membership.generation})")
+                    break
+                if time.monotonic() > deadline:
+                    job.abort("driver timeout")
+                    break
+                time.sleep(self.monitor_poll_s)
+            # cooperating ranks observe the abort within milliseconds; a
+            # rank wedged in non-MPI user code should not make recovery
+            # wait out the full driver timeout a second time
+            t.join(min(timeout, 10.0))
+            job.stop()
+            if "result" in box and not dead:
                 self.events.append("done")
-                return results
-            except (RuntimeError, TimeoutError) as e:
-                job.stop()
-                attempts += 1
-                self.events.append(f"failure:{type(e).__name__}")
-                if attempts > self.max_restarts:
-                    raise
+                return box["result"]
+            if "result" not in box and not dead:
+                # the job died faster than the monitor could poll (every
+                # rank crashed at once): post-mortem detection still bumps
+                # the generation so zombies of this incarnation are locked
+                # out before the restart
+                post = self._detect_dead(job)
+                if post:
+                    dead = self._declare_dead(job, post)
+            attempts += 1
+            err = box.get("error")
+            self.events.append(
+                f"failure:{type(err).__name__ if err else 'DeadRank'}")
+            if attempts > self.max_restarts:
+                if err is not None:
+                    raise err
+                raise RuntimeError(
+                    f"exceeded max_restarts={self.max_restarts}")
+            pending_dead, pending_gen = dead, dying_gen

@@ -97,6 +97,47 @@ def test_keep_k_gc(tmp_path):
     assert mgr.stats["gc_removed"] == 2
 
 
+def test_gc_removes_corrupt_keeps_valid(tmp_path):
+    """Corrupt/partial dirs (a crashed writer's leftovers — the kind that
+    used to accumulate forever) are always collected; valid ones obey
+    `keep`; the last remaining valid checkpoint is never removed."""
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(1, _state(1))
+    mgr.wait()
+    # two crashed-writer leftovers: partial (no manifest) and bit-flipped
+    (tmp_path / "step_0000000002").mkdir()
+    (tmp_path / "step_0000000002" / "leaf00000_full.zz").write_bytes(b"junk")
+    d3 = tmp_path / "step_0000000003"
+    d3.mkdir()
+    (d3 / "leaf00000_full.zz").write_bytes(b"\x00shard")
+    (d3 / "MANIFEST.json").write_text(json.dumps(
+        {"version": 1, "codec": "zlib", "meta": {}, "leaves": {"w": {
+            "shape": [1], "dtype": "float32", "shards": [{
+                "file": "leaf00000_full.zz", "index": [[0, 1]],
+                "crc32": 1, "device": -1}]}}}))    # wrong crc
+    mgr.save(4, _state(4))        # triggers _gc
+    mgr.wait()
+    assert mgr.list_steps() == [1, 4]      # both corrupt dirs collected...
+    assert mgr.latest_valid() == tmp_path / "step_0000000004"
+    assert ser.validate(tmp_path / "step_0000000001")  # ...valid kept
+
+
+def test_gc_never_removes_last_valid(tmp_path):
+    """The seed's inverted guard deleted VALID old checkpoints while corrupt
+    ones accumulated: with keep=2 and the two newest dirs corrupt, it would
+    have removed the only restorable checkpoint.  Now the valid one survives
+    no matter how many newer corrupt dirs outrank it."""
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    mgr.save(1, _state(1))
+    for s in (2, 3):               # two NEWER corrupt/partial dirs
+        d = tmp_path / f"step_{s:010d}"
+        d.mkdir()
+        (d / "MANIFEST.json").write_text("{not json")
+    mgr._gc()
+    assert mgr.list_steps() == [1]
+    assert mgr.latest_valid() == tmp_path / "step_0000000001"
+
+
 def test_write_failure_surfaces_on_wait(tmp_path, monkeypatch):
     mgr = CheckpointManager(tmp_path)
     monkeypatch.setattr(ser, "save_shards",

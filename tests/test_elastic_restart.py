@@ -1,0 +1,242 @@
+"""Generation-based elastic restart, end-to-end (DESIGN.md §8).
+
+The acceptance scenario: start an N-rank job, kill a live rank mid-step,
+have the driver detect it (heartbeat/error channel), bump the membership
+generation, and restart the job RESHAPED — shrunk to N-1 or grown to a
+target size — on a DIFFERENT transport, resuming bit-identically from the
+proxy-free checkpoint; a zombie message stamped with the dead generation
+is rejected."""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import MPIJob
+from repro.core.ckpt_protocol import load_manifest, load_rank_image
+from repro.core.coordinator import (Coordinator, Membership,
+                                    StaleGenerationError)
+from repro.distributed.faults import (FaultTolerantDriver, HeartbeatMonitor,
+                                      RankKilled)
+from repro.distributed.proxy_grad import make_dp_app
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(a[k], b[k]) for k in a)
+
+
+def _image_params(ckpt_dir, rank):
+    return pickle.loads(load_rank_image(ckpt_dir, rank).app_state)["params"]
+
+
+# --------------------------------------------------------------- e2e driver
+
+@pytest.mark.parametrize("n0,target,t1,t2", [
+    (4, None, "shm", "tcp"),      # shrink: kill 1 of 4, restart at 3
+    (2, 4, "tcp", "inproc"),      # grow: kill 1 of 2, restart at 4
+])
+def test_kill_rank_reshape_resume(tmp_path, n0, target, t1, t2):
+    steps, every = 14, 5
+    init_fn, step_fn = make_dp_app()
+    victim = n0 - 1
+    kill = {"armed": True}
+
+    def killing_step(mpi, st, k):
+        if kill["armed"] and k == 8 and mpi.rank == victim:
+            kill["armed"] = False
+            raise RankKilled(f"rank {victim} killed at step {k}")
+        return step_fn(mpi, st, k)
+
+    def fresh(ws, ms):
+        return MPIJob(ws or n0, killing_step, init_fn, transport=t1,
+                      heartbeat_timeout=2.0, membership=ms,
+                      coord_timeout=30.0)
+
+    def restarted(d, tr, ws, dead, ms):
+        return MPIJob.restart(d, killing_step, init_fn, transport=tr,
+                              world_size=ws, dead_ranks=dead, membership=ms,
+                              heartbeat_timeout=2.0, coord_timeout=30.0)
+
+    driver = FaultTolerantDriver(
+        job_factory=fresh, restart_factory=restarted,
+        ckpt_root=tmp_path, ckpt_every=every,
+        world_size_after_failure=target)
+    out = driver.run(steps, transport_after_failure=t2, timeout=60)
+
+    new_world = target if target else n0 - 1
+    assert len(out) == new_world
+    # every surviving replica finished in sync
+    for r in range(1, new_world):
+        assert _params_equal(out[0]["params"], out[r]["params"])
+    # the driver observed the death, bumped the generation, reshaped
+    assert any(e.startswith(f"dead:[{victim}]") for e in driver.events)
+    assert any(e.startswith("restart:") and f"world={new_world}" in e
+               and "gen=1" in e for e in driver.events)
+    assert driver.events[-1] == "done"
+    assert driver.membership.generation == 1
+    assert driver.membership.world_size == new_world
+    # a zombie message stamped with generation 0 is rejected
+    with pytest.raises(StaleGenerationError):
+        driver.membership.check(0)
+    # the post-reshape incarnation checkpointed its NEW topology: manifest
+    # records the new world, generation 1, and the old->new rank map
+    man = load_manifest(tmp_path / "at_00000010")
+    assert man["n_ranks"] == new_world
+    assert man["generation"] == 1
+    elastic = man["meta"]["elastic"]
+    assert elastic["old_world"] == n0
+    assert elastic["new_world"] == new_world
+    assert elastic["dead_ranks"] == [victim]
+    assert elastic["rank_map"][str(victim)] is None
+    assert elastic["from_transport"] == t1
+    assert elastic["to_transport"] == t2
+
+
+def test_total_outage_restarts_full_world(tmp_path):
+    """Every rank dying at once is an incarnation failure, not a shrink:
+    the driver bumps the generation but keeps the world size and restores
+    every image (a shrink-by-all would leave no survivors at all)."""
+    steps, n = 12, 2
+    init_fn, step_fn = make_dp_app()
+    kill = {"armed": True}
+
+    def killing_step(mpi, st, k):
+        if kill["armed"] and k == 6:
+            if mpi.rank == n - 1:
+                kill["armed"] = False
+            raise RankKilled(f"rank {mpi.rank} killed at step {k}")
+        return step_fn(mpi, st, k)
+
+    driver = FaultTolerantDriver(
+        job_factory=lambda ws, ms: MPIJob(ws or n, killing_step, init_fn,
+                                          transport="shm", membership=ms,
+                                          heartbeat_timeout=2.0,
+                                          coord_timeout=30.0),
+        restart_factory=lambda d, tr, ws, dead, ms: MPIJob.restart(
+            d, killing_step, init_fn, transport=tr, world_size=ws,
+            dead_ranks=dead, membership=ms, heartbeat_timeout=2.0,
+            coord_timeout=30.0),
+        ckpt_root=tmp_path, ckpt_every=4)
+    out = driver.run(steps, transport_after_failure="shm", timeout=60)
+    assert len(out) == n                       # world size preserved
+    assert driver.membership.world_size == n
+    assert driver.membership.generation >= 1
+    assert any(e.startswith("restart:") and f"world={n}" in e
+               for e in driver.events)
+    assert driver.events[-1] == "done"
+
+
+# ----------------------------------------------------- bit-identical resume
+
+def test_elastic_restart_bit_identical_states(tmp_path):
+    """restart(world_size=3, dead_ranks=[2]) restores EXACTLY the app state
+    of the surviving images — the bit-identity half of the acceptance
+    criterion, asserted directly on the restored job."""
+    init_fn, step_fn = make_dp_app()
+    job = MPIJob(4, step_fn, init_fn, transport="shm")
+    job.checkpoint_at(6, tmp_path / "ck", resume=False)
+    job.run(10, timeout=60)
+    job.stop()
+
+    ms = Membership(4)
+    ms.bump(dead=[2])
+    job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                          transport="inproc", dead_ranks=[2], membership=ms)
+    assert job2.n == 3
+    # survivors compact over the hole: new (0,1,2) <- old (0,1,3)
+    for new_rank, src in [(0, 0), (1, 1), (2, 3)]:
+        assert _params_equal(job2.states[new_rank]["params"],
+                             _image_params(tmp_path / "ck", src))
+    info = job2.restore_info
+    assert info["rank_map"] == {"0": 0, "1": 1, "2": None, "3": 2}
+    assert info["generation"] == 1
+    # a zombie of the old world reporting into the new coordinator dies
+    with pytest.raises(StaleGenerationError):
+        job2.coord.report_counters(0, 5, 5, generation=0)
+    assert job2.coord.stats["stale_rejected"] == 1
+    # the reshaped world still trains (cross-transport: shm -> inproc)
+    out = job2.run(10, timeout=60)
+    job2.stop()
+    for r in range(1, 3):
+        assert _params_equal(out[0]["params"], out[r]["params"])
+
+
+def test_elastic_grow_clones_survivor_images(tmp_path):
+    """Growing 2 -> 4: new members are seeded from survivor images (same
+    params bit-for-bit), get a rebuilt world comm, and train in sync."""
+    init_fn, step_fn = make_dp_app()
+    job = MPIJob(2, step_fn, init_fn, transport="shm")
+    job.checkpoint_at(5, tmp_path / "ck", resume=False)
+    job.run(8, timeout=60)
+    job.stop()
+
+    job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                          transport="tcp", world_size=4)
+    assert job2.n == 4
+    for r in range(4):
+        assert _params_equal(job2.states[r]["params"],
+                             _image_params(tmp_path / "ck", r % 2))
+    out = job2.run(8, timeout=60)
+    job2.stop()
+    for r in range(1, 4):
+        assert _params_equal(out[0]["params"], out[r]["params"])
+
+
+# -------------------------------------------------- membership + coordinator
+
+def test_membership_generation_rules():
+    ms = Membership(4)
+    assert ms.generation == 0 and ms.world_size == 4
+    assert ms.bump(dead=[1, 1, 3]) == 1          # dedup'd dead
+    assert ms.world_size == 2
+    assert ms.bump(world_size=5) == 2            # grow epoch
+    ms.check(2)                                  # current: fine
+    ms.check(None)                               # unstamped: fine
+    for stale in (0, 1, 3):
+        with pytest.raises(StaleGenerationError):
+            ms.check(stale)
+    assert ms.history[-1] == (2, 5, ())
+    with pytest.raises(ValueError):
+        Membership(1).bump(dead=[0])             # would empty the world
+
+
+def test_coordinator_rejects_stale_everywhere():
+    ms = Membership(2)
+    coord = Coordinator(2, membership=ms)
+    coord.join(0, generation=0)
+    ms.bump(dead=[1])
+    for call in (lambda: coord.join(0, generation=0),
+                 lambda: coord.report_counters(0, 1, 1, generation=0),
+                 lambda: coord.propose_ckpt_step(0, 3, generation=0),
+                 lambda: coord.ack_drained(0, generation=0),
+                 lambda: coord.ack_snapshot(0, generation=0),
+                 lambda: coord.barrier(0, generation=0)):
+        with pytest.raises(StaleGenerationError):
+            call()
+    assert coord.stats["stale_rejected"] == 6
+
+
+def test_coordinator_timeouts_configurable_and_reported():
+    coord = Coordinator(2, timeout=0.05)
+    with pytest.raises(TimeoutError) as ei:
+        coord.wait_phase("snapshot")
+    assert "0.05" in str(ei.value)
+    with pytest.raises(TimeoutError) as ei:
+        coord.barrier(0)                          # second rank never comes
+    assert "0.05" in str(ei.value) and "1/2" in str(ei.value)
+    # per-call override still wins
+    with pytest.raises(TimeoutError) as ei:
+        coord.wait_phase("snapshot", timeout=0.01)
+    assert "0.01" in str(ei.value)
+
+
+def test_heartbeat_monitor_monotonic_remove_reset():
+    hb = HeartbeatMonitor(3, timeout_s=0.05)
+    hb.ping(0), hb.ping(1), hb.ping(2)
+    assert hb.dead_ranks() == []
+    import time
+    time.sleep(0.08)
+    assert hb.dead_ranks() == [0, 1, 2]
+    hb.remove(2)                 # replaced rank: never reported again
+    assert hb.dead_ranks() == [0, 1]
+    hb.reset(0)                  # replacement joined under the same id
+    assert hb.dead_ranks() == [1]

@@ -1,0 +1,234 @@
+"""Dedicated coverage for the virtual-id tables, admin-log replay, the
+world-remap step (elastic restart), and resharding.plan_summary."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.resharding import plan_summary
+from repro.core.drain import remap_cache_snapshot
+from repro.core.messages import ANY_SOURCE, Envelope
+from repro.core.replay import AdminLog
+from repro.core.virtualization import (VirtualIds, WORLD_VID, make_rank_map,
+                                       remap_rank_tuple,
+                                       remap_vids_snapshot)
+
+
+class FakeProxy:
+    """Records the configuration calls replay makes (stand-in for the
+    channel-backed _ProxyFacade)."""
+
+    def __init__(self):
+        self.ranks = []
+        self.comms = {}
+
+    def register_rank(self, rank, n):
+        self.ranks.append((rank, n))
+
+    def register_comm(self, vid, ranks):
+        self.comms[vid] = tuple(ranks)
+
+    def unregister_comm(self, vid):
+        self.comms.pop(vid, None)
+
+
+# ------------------------------------------------- snapshot/restore churn
+
+def test_vids_snapshot_restore_roundtrip_under_churn():
+    v = VirtualIds(4)
+    c1 = v.new_comm((0, 1))
+    c2 = v.new_comm((1, 2, 3))
+    g1 = v.new_group((0, 2))
+    v.new_request("recv", 3, 7, c2.vid)
+    done = v.new_request("recv", 1, 2, c1.vid)
+    done.done = True                       # completed: not checkpointed
+    v.free_comm(c1.vid)                    # create-free churn
+    v.free_group(g1.vid)
+    g2 = v.new_group((1, 3))
+    snap = v.snapshot()
+
+    r = VirtualIds(4)
+    r.restore(snap, 4)
+    assert set(r.comms) == {WORLD_VID, c2.vid}
+    assert r.comms[c2.vid].ranks == (1, 2, 3)
+    assert set(r.groups) == {g2.vid}
+    pend = list(r.requests.values())
+    assert len(pend) == 1 and pend[0].src == 3 and pend[0].tag == 7
+    # id allocators continue past the churn (no vid reuse after restore)
+    assert r.new_comm((0, 3)).vid > c2.vid
+    assert r.new_group((0,)).vid > g2.vid
+
+
+def test_admin_log_replay_rebuilds_proxy_and_tables():
+    log = AdminLog()
+    log.append("init", (2, 4))
+    log.append("comm_create", ((0, 2),), 1)
+    log.append("group_incl", ((1, 3),), 1)
+    log.append("comm_create", ((1, 2, 3),), 2)
+    log.append("comm_free", (), 1)         # churn: created then freed
+    log.append("group_free", (), 1)
+    snap = log.snapshot()
+
+    vids, proxy = VirtualIds(4), FakeProxy()
+    AdminLog.restore(snap).replay(vids, proxy)
+    assert proxy.ranks == [(2, 4)]
+    assert proxy.comms == {2: (1, 2, 3)}   # comm 1 freed during replay
+    assert set(vids.comms) == {WORLD_VID, 2}
+    assert vids.groups == {}
+    with pytest.raises(ValueError):
+        AdminLog.restore([("warp", (), -1)]).replay(VirtualIds(2),
+                                                    FakeProxy())
+
+
+# ------------------------------------------------------------ world remap
+
+def test_make_rank_map_shrink_grow():
+    assert make_rank_map(4, 3, dead=(2,)) == {0: 0, 1: 1, 2: None, 3: 2}
+    # shrink past the death count: trailing survivors dropped too
+    assert make_rank_map(4, 2, dead=(1,)) == {0: 0, 1: None, 2: 1, 3: None}
+    # grow: survivors keep identity, new slots have no old counterpart
+    assert make_rank_map(2, 4, dead=(1,)) == {0: 0, 1: None}
+    assert remap_rank_tuple((0, 3), make_rank_map(4, 3, dead=(2,))) == (0, 2)
+    assert remap_rank_tuple((0, 2), make_rank_map(4, 3, dead=(2,))) is None
+
+
+def test_remap_vids_snapshot_drops_dead_member_configs():
+    v = VirtualIds(4)
+    alive = v.new_comm((0, 1, 3))          # survives (remapped)
+    doomed = v.new_comm((1, 2))            # member 2 dies with the world
+    v.new_group((0, 3))
+    v.new_group((2,))
+    v.new_request("recv", 3, 5, alive.vid)          # survives: src 3 -> 2
+    v.new_request("recv", 2, 5, WORLD_VID)          # sender died: dropped
+    v.new_request("recv", ANY_SOURCE, 1, doomed.vid)  # comm dropped
+    snap, dropped = remap_vids_snapshot(v.snapshot(),
+                                        make_rank_map(4, 3, dead=(2,)), 3)
+    assert dropped == {doomed.vid}         # COMM vids only, never group vids
+    assert snap["comms"][WORLD_VID] == (0, 1, 2)    # rebuilt for new world
+    assert snap["comms"][alive.vid] == (0, 1, 2)
+    assert doomed.vid not in snap["comms"]
+    assert list(snap["groups"].values()) == [(0, 2)]
+    assert snap["pending_recvs"] == [(1, 2, 5, alive.vid)]
+
+
+def test_admin_log_remap_drops_freed_dead_configs():
+    log = AdminLog()
+    log.append("init", (3, 4))
+    log.append("comm_create", ((0, 1, 3),), 1)
+    log.append("comm_create", ((1, 2),), 2)   # dead member
+    log.append("comm_free", (), 2)            # ...its free goes too
+    log.append("group_incl", ((0, 3),), 1)
+    log.append("finalize", ())
+    out = log.remap(make_rank_map(4, 3, dead=(2,)), new_rank=2, new_n=3)
+    ops = [(r.op, r.args, r.vid) for r in out.records]
+    assert ops == [("init", (2, 3), -1),
+                   ("comm_create", ((0, 1, 2),), 1),
+                   ("group_incl", ((0, 2),), 1),
+                   ("finalize", (), -1)]
+    # remapped log replays cleanly onto the new world
+    vids, proxy = VirtualIds(3), FakeProxy()
+    out.replay(vids, proxy)
+    assert proxy.comms == {1: (0, 1, 2)}
+
+
+def test_remap_cache_snapshot_filters_and_rewrites():
+    def env(src, dst, comm=0):
+        return Envelope(src=src, dst=dst, tag=1, comm_vid=comm, seq=0,
+                        payload=b"x").to_bytes()
+    items = [env(3, 0), env(2, 0), env(0, 2), env(1, 3, comm=7)]
+    rank_map = make_rank_map(4, 3, dead=(2,))
+    out = [Envelope.from_bytes(b)
+           for b in remap_cache_snapshot(items, rank_map,
+                                         dropped_comms={7})]
+    assert len(out) == 1                   # dead src, dead dst, dropped comm
+    assert (out[0].src, out[0].dst) == (2, 0)
+
+
+def test_remap_comm_group_vid_namespaces_do_not_collide():
+    """Comm vids and group vids are separate counters that BOTH start at 1:
+    dropping group vid 1 (dead member) must not discard state keyed by the
+    surviving comm vid 1 — pending recvs, cached envelopes, coll_seq, or
+    the comm's replayed free."""
+    from repro.core.api import remap_mpi_snapshot
+
+    v = VirtualIds(4)
+    g = v.new_group((0, 1, 2, 3))          # group vid 1: contains dead rank
+    c = v.new_comm((0, 1))                 # comm vid 1: fully survives
+    assert g.vid == c.vid == 1             # the collision under test
+    v.new_request("recv", 1, 9, c.vid)
+    rank_map = make_rank_map(4, 3, dead=(3,))
+    snap, dropped = remap_vids_snapshot(v.snapshot(), rank_map, 3)
+    assert dropped == set()                # no comm was dropped
+    assert snap["comms"][c.vid] == (0, 1)
+    assert snap["groups"] == {}            # group 1 itself is dropped
+    assert snap["pending_recvs"] == [(1, 1, 9, c.vid)]   # recv SURVIVES
+
+    log = AdminLog()
+    log.append("init", (0, 4))
+    log.append("group_incl", ((0, 1, 2, 3),), 1)   # dropped (dead member)
+    log.append("comm_create", ((0, 1),), 1)        # survives
+    log.append("comm_free", (), 1)                 # ...and so must its free
+    log.append("group_free", (), 1)                # group's free IS dropped
+    out = log.remap(rank_map, new_rank=0, new_n=3)
+    ops = [(r.op, r.vid) for r in out.records]
+    assert ops == [("init", -1), ("comm_create", 1), ("comm_free", 1)]
+
+    full = {"rank": 0, "n": 4, "cache": [
+                Envelope(src=1, dst=0, tag=9, comm_vid=c.vid, seq=0,
+                         payload=b"x").to_bytes()],
+            "vids": v.snapshot(), "admin": log.snapshot(),
+            "sent": 3, "received": 2, "coll_seq": {0: 4, c.vid: 7}}
+    re = remap_mpi_snapshot(full, rank_map, new_rank=0, new_n=3)
+    assert len(re["cache"]) == 1           # envelope on comm 1 kept
+    assert re["coll_seq"] == {0: 4, c.vid: 7}   # sequence NOT reset
+
+
+# ------------------------------------------------------------ plan_summary
+
+def test_elastic_restore_reports_topology_change(tmp_path):
+    """elastic_restore derives layouts for the CURRENT mesh and reports the
+    topology change the manifest makes assertable: source world vs restored
+    world, generation, changed flag."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed.elastic import elastic_restore
+    from repro.distributed.sharding import DEFAULT_RULES
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    mgr = CheckpointManager(tmp_path, generation=2)
+    mgr.save(5, {"w": jnp.arange(8.0)},
+             meta={"world": {"n_devices": 4, "mesh": {"data": 4}}})
+    mgr.wait()
+    tpl = {"w": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    out, meta = elastic_restore(mgr, tpl, mesh, DEFAULT_RULES)
+    assert np.array_equal(np.asarray(out["w"]),
+                          np.arange(8.0, dtype=np.float32))
+    assert meta["restored_onto"] == {"devices": 1, "mesh": {"data": 1}}
+    assert meta["source_world"] == {"n_devices": 4, "mesh": {"data": 4}}
+    assert meta["topology_changed"] is True
+    assert meta["generation"] == 2
+    # same-world restore: not a topology change
+    mgr2 = CheckpointManager(tmp_path / "same")
+    mgr2.save(1, {"w": jnp.arange(8.0)})
+    mgr2.wait()
+    _, meta2 = elastic_restore(mgr2, tpl, mesh, DEFAULT_RULES)
+    assert meta2["topology_changed"] is False
+    # nothing valid to restore
+    empty = CheckpointManager(tmp_path / "empty")
+    assert elastic_restore(empty, tpl, mesh, DEFAULT_RULES) == (None, None)
+
+
+def test_plan_summary_reports_source_world(tmp_path):
+    mgr = CheckpointManager(tmp_path, generation=3)
+    state = {"w": jnp.arange(24.0).reshape(4, 6),
+             "b": np.arange(6, dtype=np.float64)}
+    mgr.save(2, state)
+    mgr.wait()
+    plan = plan_summary(mgr.latest_valid())
+    assert plan["n_leaves"] == 2
+    assert plan["n_shards"] == 2
+    assert plan["approx_bytes"] == 24 * 4 + 6 * 8
+    assert plan["generation"] == 3
+    assert plan["source_world"] == {"n_devices": 1}
+    assert plan["meta"]["step"] == 2
