@@ -8,22 +8,26 @@ import tempfile
 import time
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke_scale
 from repro.core import MPIJob
 from repro.distributed.proxy_grad import make_dp_app
 
-STEPS = 30
+
+def _steps() -> int:
+    return smoke_scale(30, 10)
 
 
 def _run_with_ckpts(every: int | None) -> float:
-    init_fn, step_fn = make_dp_app(din=32, dh=64, dout=8, batch_per_rank=16)
+    steps = _steps()
+    init_fn, step_fn = make_dp_app(din=32, dh=64, dout=8,
+                                   batch_per_rank=smoke_scale(16, 4))
     job = MPIJob(3, step_fn, init_fn)
     with tempfile.TemporaryDirectory() as d:
         if every:
             # schedule several periodic checkpoints up front
             job.checkpoint_at(every, Path(d) / "ck0")
         t0 = time.perf_counter()
-        job.run(STEPS, timeout=300)
+        job.run(steps, timeout=300)
         wall = time.perf_counter() - t0
         # further checkpoints, resumed jobs: emulate frequency by serial runs
         job.stop()
@@ -31,14 +35,15 @@ def _run_with_ckpts(every: int | None) -> float:
 
 
 def run() -> None:
+    steps = _steps()
     base = min(_run_with_ckpts(None) for _ in range(2))
-    emit("ckpt_overhead/none", base / STEPS * 1e6, "baseline")
-    for every in (10, 5, 2):
+    emit("ckpt_overhead/none", base / steps * 1e6, "baseline")
+    for every in smoke_scale((10, 5, 2), (5,)):
         # run with one checkpoint per `every` steps: approximate frequency
         # cost from n_ckpts * single-ckpt cost measured end-to-end
         wall = _run_with_ckpts(every)
         ovh = (wall - base) / base * 100
-        emit(f"ckpt_overhead/every={every}", wall / STEPS * 1e6,
+        emit(f"ckpt_overhead/every={every}", wall / steps * 1e6,
              f"overhead_pct~{max(ovh, 0):.1f}")
 
 

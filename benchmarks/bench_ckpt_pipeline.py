@@ -1,0 +1,151 @@
+"""Content-addressed incremental checkpoint pipeline (DESIGN.md §9).
+
+Three claims, measured as RATIOS (the container is noisy; absolutes are
+not the contract — see BENCH_ckpt_pipeline.json):
+
+  * parallel_speedup_x — full-save wall time with the compress/write pool
+    vs the serial writer (workers=1), same state, fresh stores;
+  * delta_write_fraction — bytes written / bytes handled when <= 25% of
+    leaves changed since the previous save (content-addressed references
+    for the rest);
+  * chain_bit_identical / elastic_chain_bit_identical — restore from a
+    chain of incremental checkpoints equals restore from a full save,
+    bitwise, including across an MPI-layer N -> N-1 elastic restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+import time
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, smoke_scale
+from repro.checkpoint.manager import CheckpointManager
+
+N_LEAVES = 16
+CHANGED = 3                      # 3/16 leaves mutate between saves
+
+
+def _state(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.standard_normal(shape).astype(np.float32)
+            for i in range(N_LEAVES)}
+
+
+def _seed_writer_save(d: Path, state) -> None:
+    """Faithful replica of the pre-chunk-store serial writer (commit
+    6d1b3ae): one thread, ``tobytes()`` copies, zlib-6 over every byte of
+    every leaf every save, blob crc32, atomic renames — the baseline the
+    speedup contract is measured against."""
+    d.mkdir(parents=True, exist_ok=True)
+    man = {"version": 1, "codec": "zlib", "leaves": {}, "meta": {}}
+    for i, (k, data) in enumerate(state.items()):
+        blob = zlib.compress(data.tobytes(), 6)
+        fn = f"leaf{i:05d}_full.zz"
+        tmp = d / (fn + ".tmp")
+        tmp.write_bytes(blob)
+        os.replace(tmp, d / fn)
+        man["leaves"][k] = {
+            "shape": list(data.shape), "dtype": str(data.dtype),
+            "shards": [{"file": fn, "index": [[0, s] for s in data.shape],
+                        "crc32": zlib.crc32(blob), "device": -1}]}
+    (d / "MANIFEST.json").write_bytes(json.dumps(man, indent=1).encode())
+
+
+def _timed_save(root: Path, state, step: int, workers) -> float:
+    mgr = CheckpointManager(root, keep=3, async_write=False,
+                            writer_threads=workers)
+    t0 = time.perf_counter()
+    mgr.save(step, state)
+    return time.perf_counter() - t0, mgr
+
+
+def run() -> None:
+    shape = smoke_scale((512, 512), (128, 128))
+    state = _state(shape)
+    nbytes = sum(x.nbytes for x in state.values())
+
+    with tempfile.TemporaryDirectory() as d:
+        d = Path(d)
+        # warmup: initialize the jax backend + thread pool outside the
+        # timed region (dominates at smoke sizes otherwise)
+        _timed_save(d / "warm", {"w": state["w0"]}, 1, workers=None)
+        t0 = time.perf_counter()
+        _seed_writer_save(d / "seed", state)
+        t_seed = time.perf_counter() - t0
+        t_serial, _ = _timed_save(d / "serial", state, 1, workers=1)
+        t_par, mgr = _timed_save(d / "par", state, 1, workers=None)
+        emit("ckpt_pipeline/full_save_seed_serial", t_seed * 1e6,
+             f"MB={nbytes/1e6:.0f}")
+        emit("ckpt_pipeline/full_save_serial", t_serial * 1e6,
+             f"vs_seed_x={t_seed / max(t_serial, 1e-9):.2f}")
+        emit("ckpt_pipeline/full_save_parallel", t_par * 1e6,
+             f"vs_seed_x={t_seed / max(t_par, 1e-9):.2f};"
+             f"pool_speedup_x={t_serial / max(t_par, 1e-9):.2f};"
+             f"workers={mgr.writer_threads}")
+
+        # ---- incremental: mutate CHANGED of N_LEAVES leaves, save again
+        state2 = dict(state)
+        for i in range(CHANGED):
+            state2[f"w{i}"] = state[f"w{i}"] + 1.0
+        t0 = time.perf_counter()
+        mgr.save(2, state2)
+        t_inc = time.perf_counter() - t0
+        frac = mgr.delta_write_fraction()
+        emit("ckpt_pipeline/incremental_save", t_inc * 1e6,
+             f"changed={CHANGED}/{N_LEAVES};"
+             f"bytes_written={mgr.stats['last_bytes_written']};"
+             f"bytes_referenced={mgr.stats['last_bytes_referenced']}")
+        emit("ckpt_pipeline/delta_write_fraction", frac,
+             f"target<={CHANGED/N_LEAVES:.4f}")
+
+        # ---- chain restore == full restore, bitwise
+        import jax
+        tpl = jax.eval_shape(lambda: state2)
+        chain, _ = mgr.restore(tpl)                      # incremental chain
+        full_mgr = CheckpointManager(d / "full", keep=1, async_write=False)
+        full_mgr.save(2, state2)
+        full, _ = full_mgr.restore(tpl)
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(chain),
+                                   jax.tree.leaves(full)))
+        emit("ckpt_pipeline/chain_bit_identical", float(same), "")
+
+        # ---- MPI layer: incremental rank images across N=3 -> N=2 elastic
+        from repro.core import MPIJob
+        from repro.core.ckpt_protocol import load_rank_image
+
+        def init_fn(mpi):
+            return {"x": np.arange(smoke_scale(20000, 2000),
+                                   dtype=np.float64) * (mpi.rank + 1)}
+
+        def step_fn(mpi, st, k):
+            mpi.Allreduce(np.ones(4) * mpi.rank)
+            return st
+
+        store = d / "imgstore"
+        job = MPIJob(3, step_fn, init_fn, ckpt_store=store)
+        job.checkpoint_at(2, d / "ck_a", resume=False)
+        job.run(4, timeout=60)
+        job.stop()
+        job = MPIJob.restart(d / "ck_a", step_fn, init_fn, world_size=2,
+                             dead_ranks=[2], ckpt_store=store)
+        job.checkpoint_at(3, d / "ck_b", resume=False)
+        job.run(5, timeout=60)
+        job.stop()
+        ok = all(np.array_equal(
+            pickle.loads(load_rank_image(d / "ck_b", r).app_state)["x"],
+            np.arange(smoke_scale(20000, 2000), dtype=np.float64) * (r + 1))
+            for r in range(2))
+        n_img_chunks = len(list(store.glob("*.bin")))
+        emit("ckpt_pipeline/elastic_chain_bit_identical", float(ok),
+             f"img_chunks={n_img_chunks};expected<=8")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""CI contract gate: compare a fresh ``benchmarks.run --json`` output
+against the perf floors committed in BENCH_*.json.
+
+  PYTHONPATH=src python -m benchmarks.check_contract bench_smoke.json
+
+Checks (ratios/deterministic metrics only — absolute wall times on shared
+CI runners are noise):
+
+  * proxied_roundtrip_improvement_vs_seed_x: the seed's strictly
+    synchronous channel measured 1779.5us per proxied round trip
+    (BENCH_proxy_overhead.json); a fresh run must stay >= the committed
+    minimum_required_x above it.
+  * iprobe_miss: the peek fast path is load-independent; a fresh miss
+    must stay under the committed ceiling (a regression here means the
+    fast path stopped being hit).
+  * ckpt_delta_write_fraction: deterministic (bytes written / bytes
+    handled with 3 of 16 equal leaves changed); must stay <= the
+    committed maximum.
+  * chain/elastic bit-identity: must be exactly 1.0.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: benchmarks.check_contract FRESH.json")
+    data = json.loads(Path(sys.argv[1]).read_text())
+    rows = {r["name"]: r["us_per_call"] for r in data["rows"]}
+    smoke = bool(data.get("smoke"))
+    proxy = json.loads((REPO / "BENCH_proxy_overhead.json").read_text())
+    ckpt = json.loads((REPO / "BENCH_ckpt_pipeline.json").read_text())
+
+    failures = []
+
+    def check(name: str, ok: bool, detail: str) -> None:
+        print(f"{'PASS' if ok else 'FAIL'}  {name}: {detail}")
+        if not ok:
+            failures.append(name)
+
+    seed_rt = proxy["seed"]["proxy_overhead/proxied_roundtrip"]
+    min_x = proxy["contract"]["minimum_required_x"]
+    fresh_rt = rows.get("proxy_overhead/proxied_roundtrip")
+    if fresh_rt is not None:
+        x = seed_rt / fresh_rt
+        check("proxied_roundtrip_improvement_vs_seed_x", x >= min_x,
+              f"{x:.1f}x (floor {min_x}x; seed {seed_rt}us, "
+              f"fresh {fresh_rt:.1f}us)")
+
+    iprobe_max = proxy["contract"].get("iprobe_miss_max_us")
+    fresh_ip = rows.get("proxy_overhead/iprobe_miss")
+    if iprobe_max is not None and fresh_ip is not None:
+        check("iprobe_miss_max_us", fresh_ip <= iprobe_max,
+              f"{fresh_ip:.2f}us (ceiling {iprobe_max}us)")
+
+    # full-save speedup vs the in-bench seed-writer replica: the real 2x
+    # floor holds at full size; smoke shapes are too small for the ratio
+    # to be stable on shared runners, so smoke only gates "not slower"
+    full_floor = (ckpt["contract"]["ci_smoke_full_save_floor_x"] if smoke
+                  else ckpt["contract"]["minimum_required_full_save_x"])
+    t_seed = rows.get("ckpt_pipeline/full_save_seed_serial")
+    t_par = rows.get("ckpt_pipeline/full_save_parallel")
+    if t_seed is not None and t_par is not None:
+        x = t_seed / t_par
+        check("full_save_improvement_vs_seed_x", x >= full_floor,
+              f"{x:.2f}x (floor {full_floor}x{' [smoke]' if smoke else ''})")
+
+    frac_max = ckpt["contract"]["ckpt_delta_write_fraction_max"]
+    fresh_frac = rows.get("ckpt_pipeline/delta_write_fraction")
+    if fresh_frac is not None:
+        check("ckpt_delta_write_fraction", fresh_frac <= frac_max,
+              f"{fresh_frac:.4f} (ceiling {frac_max})")
+
+    for name in ("ckpt_pipeline/chain_bit_identical",
+                 "ckpt_pipeline/elastic_chain_bit_identical"):
+        val = rows.get(name)
+        if val is not None:
+            check(name, val == 1.0, f"{val}")
+
+    missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
+                              ("delta_write_fraction", fresh_frac))
+               if v is None]
+    if missing:
+        check("required_rows_present", False, f"missing rows: {missing}")
+    if failures:
+        raise SystemExit(f"contract violations: {failures}")
+    print("all contract floors hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,12 +15,14 @@ import traceback
 
 from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
-                        bench_ckpt_overhead, bench_drain,
-                        bench_proxy_overhead, bench_restart, bench_roofline)
+                        bench_ckpt_overhead, bench_ckpt_pipeline,
+                        bench_drain, bench_proxy_overhead, bench_restart,
+                        bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
     "ckpt_overhead": bench_ckpt_overhead.run,
+    "ckpt_pipeline": bench_ckpt_pipeline.run,
     "restart": bench_restart.run,
     "proxy_overhead": bench_proxy_overhead.run,
     "allreduce": bench_allreduce.run,

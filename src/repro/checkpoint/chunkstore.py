@@ -1,0 +1,113 @@
+"""Content-addressed chunk store — the storage half of incremental
+checkpoints (DESIGN.md §9).
+
+A chunk is an immutable file named by the digest of its UNCOMPRESSED
+content: ``<store root>/<digest>.<ext>`` (the extension records the codec).
+Checkpoint manifests reference chunks by name, so two checkpoints whose
+leaves did not change between saves share the same chunk files on disk and
+the second save writes nothing for them.  Deletion is refcounting over
+live manifests: a chunk is removed only when no remaining manifest
+references it (``gc``).
+
+Because the name IS the content digest, chunks are self-validating: a deep
+check re-derives the digest from the (decompressed) bytes and compares it
+to the filename — no separate crc bookkeeping can drift out of sync.
+
+Writes are atomic (tmp file + rename) and idempotent: two writers racing
+on the same digest produce byte-identical content, so whichever rename
+lands last is indistinguishable from the first.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from pathlib import Path
+from typing import Iterable, Set
+
+
+def content_digest(buf) -> str:
+    """Digest of a bytes-like/buffer (memoryviews welcome — no copy)."""
+    return hashlib.blake2b(buf, digest_size=16).hexdigest()
+
+
+class ChunkStore:
+    """One flat directory of content-addressed chunk files.
+
+    Thread-safe: ``put`` may be called concurrently from writer-pool
+    threads (and from several rank threads sharing one store); stats
+    updates are lock-protected, file writes are atomic renames.
+    """
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self._lock = threading.Lock()
+        self.stats = {"chunks_written": 0, "chunks_referenced": 0,
+                      "bytes_written": 0, "bytes_referenced": 0,
+                      "chunks_removed": 0}
+
+    # ------------------------------------------------------------------ io
+    def path(self, name: str) -> Path:
+        return self.root / name
+
+    def has(self, name: str) -> bool:
+        return (self.root / name).is_file()
+
+    def size(self, name: str) -> int:
+        return (self.root / name).stat().st_size
+
+    def ref(self, name: str, raw_bytes: int) -> None:
+        """Count an incremental reference: the chunk already exists and this
+        save points at it instead of rewriting it."""
+        with self._lock:
+            self.stats["chunks_referenced"] += 1
+            self.stats["bytes_referenced"] += raw_bytes
+
+    def put(self, name: str, blob: bytes, raw_bytes: int = 0) -> bool:
+        """Store `blob` under `name` unless present.  Returns True when this
+        call wrote the chunk, False when it was already stored (a reference,
+        the incremental fast path).  `raw_bytes` is the uncompressed payload
+        size, credited to the written/referenced byte counters."""
+        p = self.root / name
+        if p.is_file():
+            self.ref(name, raw_bytes or len(blob))
+            return False
+        self.root.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_name(p.name + f".tmp{threading.get_ident()}")
+        tmp.write_bytes(blob)
+        os.replace(tmp, p)
+        with self._lock:
+            self.stats["chunks_written"] += 1
+            self.stats["bytes_written"] += raw_bytes or len(blob)
+        return True
+
+    def get(self, name: str) -> bytes:
+        return (self.root / name).read_bytes()
+
+    # ------------------------------------------------------------------ gc
+    def list_chunks(self) -> Set[str]:
+        if not self.root.is_dir():
+            return set()
+        return {p.name for p in self.root.iterdir()
+                if p.is_file() and ".tmp" not in p.name}
+
+    def gc(self, live: Iterable[str]) -> int:
+        """Remove every chunk NOT in `live` (the union of chunk names
+        referenced by all manifests the caller intends to keep).  Returns
+        the number removed.  Stale tmp files are always collected."""
+        live = set(live)
+        removed = 0
+        if not self.root.is_dir():
+            return 0
+        for p in list(self.root.iterdir()):
+            if not p.is_file():
+                continue
+            if ".tmp" in p.name or p.name not in live:
+                try:
+                    p.unlink()
+                    removed += 1
+                except OSError:
+                    pass
+        with self._lock:
+            self.stats["chunks_removed"] += removed
+        return removed

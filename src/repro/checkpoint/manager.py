@@ -1,31 +1,38 @@
 """Fleet-level checkpoint manager: the paper's protocol at the training
-loop (DESIGN.md §2 mapping).
+loop (DESIGN.md §2 mapping, §9 storage layout).
 
   drain    = jax.block_until_ready on the state (all dispatched steps and
              async transfers complete) + wait for the previous async write
-  snapshot = device->host copy of the pure pytree, handed to a background
-             writer thread (the storage 'proxy'; training never blocks on
-             the filesystem)
-  commit   = per-shard files + manifest, atomic rename, crc32
-  restore  = newest VALID checkpoint (corrupt/partial ones skipped),
-             resharded onto the current mesh
+  snapshot = device->host copy of the pure pytree (replicated shards
+             deduped BEFORE the copy), handed to a background writer
+             (the storage 'proxy'; training never blocks on the filesystem)
+  commit   = content-addressed chunks + v3 manifest, atomic rename;
+             unchanged chunks are REFERENCED, not rewritten (incremental)
+  restore  = newest VALID checkpoint (corrupt/partial ones skipped,
+             manifest-only fast validation), resharded onto the current
+             mesh
 
-Layout: <root>/step_<N>/{leaf shards, MANIFEST.json}
+Layout: <root>/chunks/<digest>.<ext>  — shared, content-addressed
+        <root>/step_<N>/MANIFEST.json — references chunks by name
+
+GC is refcounting over live manifests: step dirs beyond `keep` (and
+corrupt ones) are removed first, then every chunk no remaining manifest
+references; the last remaining valid checkpoint is never removed.
 """
 from __future__ import annotations
 
-import json
 import re
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import serialization as ser
+from repro.checkpoint.chunkstore import ChunkStore
 from repro.checkpoint.resharding import restore_resharded
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
@@ -33,7 +40,8 @@ _STEP_RE = re.compile(r"^step_(\d+)$")
 
 class CheckpointManager:
     def __init__(self, root: str | Path, keep: int = 3,
-                 async_write: bool = True, generation: int = 0):
+                 async_write: bool = True, generation: int = 0,
+                 writer_threads: Optional[int] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -41,13 +49,25 @@ class CheckpointManager:
         #: membership generation (elastic restart epoch) stamped into every
         #: manifest; the fault-tolerant driver bumps it on reshape
         self.generation = generation
+        #: content-addressed store shared by every step this manager writes
+        self.store = ChunkStore(self.root / "chunks")
+        #: compress/write pool width (<=1 disables the parallel pipeline)
+        self.writer_threads = (ser.DEFAULT_WORKERS if writer_threads is None
+                               else writer_threads)
         self._pending: Optional[threading.Thread] = None
         self._last_error: Optional[BaseException] = None
-        #: dirs already crc-validated: checkpoints are immutable once the
-        #: manifest commits, so _gc never re-reads a known-valid dir
+        #: dirs already validated: checkpoints are immutable once the
+        #: manifest commits (and gc protects every retained manifest's
+        #: chunks), so _gc never re-validates a known-valid dir
         self._known_valid: set = set()
         self.stats = {"saves": 0, "drain_s": 0.0, "snapshot_s": 0.0,
-                      "write_s": 0.0, "gc_removed": 0}
+                      "write_s": 0.0, "gc_removed": 0,
+                      # pipeline stage timings (summed across pool threads)
+                      "hash_s": 0.0, "compress_s": 0.0, "io_s": 0.0,
+                      # incremental accounting, cumulative and per-save
+                      "bytes_written": 0, "bytes_referenced": 0,
+                      "last_bytes_written": 0, "last_bytes_referenced": 0,
+                      "chunks_gc_removed": 0}
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, meta: Optional[dict] = None) -> Path:
@@ -71,13 +91,33 @@ class CheckpointManager:
 
         def _write():
             t1 = time.time()
+            w0 = self.store.stats["bytes_written"]
+            r0 = self.store.stats["bytes_referenced"]
             try:
-                ser.save_shards(ckpt_dir, host_state, meta=meta)
-                self._gc()
+                ser.save_shards(ckpt_dir, host_state, meta=meta,
+                                store=self.store,
+                                workers=self.writer_threads,
+                                stats=self.stats)
             except BaseException as e:  # surfaced on next wait()
+                # NO gc: it would run against a partial dir, and must not
+                # get a chance to touch the previous valid checkpoint
                 self._last_error = e
-            finally:
                 self.stats["write_s"] += time.time() - t1
+                return
+            self.stats["write_s"] += time.time() - t1
+            # last_* deltas describe the last COMPLETED save only — a
+            # failed partial write must not overwrite them
+            self.stats["last_bytes_written"] = \
+                self.store.stats["bytes_written"] - w0
+            self.stats["last_bytes_referenced"] = \
+                self.store.stats["bytes_referenced"] - r0
+            self.stats["bytes_written"] = self.store.stats["bytes_written"]
+            self.stats["bytes_referenced"] = \
+                self.store.stats["bytes_referenced"]
+            try:
+                self._gc()
+            except BaseException as e:
+                self._last_error = e
 
         self.stats["saves"] += 1
         if self.async_write:
@@ -100,6 +140,14 @@ class CheckpointManager:
             err, self._last_error = self._last_error, None
             raise RuntimeError("async checkpoint write failed") from err
 
+    def delta_write_fraction(self) -> float:
+        """Bytes written / bytes handled for the LAST completed save — the
+        observable incremental ratio (1.0 = full rewrite, ~0.0 = everything
+        referenced)."""
+        total = (self.stats["last_bytes_written"]
+                 + self.stats["last_bytes_referenced"])
+        return self.stats["last_bytes_written"] / total if total else 1.0
+
     # ---------------------------------------------------------------- restore
     def list_steps(self) -> List[int]:
         out = []
@@ -110,6 +158,9 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_valid(self) -> Optional[Path]:
+        """Newest restorable checkpoint.  v3 validation is manifest-only
+        (parse + stat every referenced chunk) — no blob reads, so scanning
+        a long history costs milliseconds, not a full re-read."""
         for step in reversed(self.list_steps()):
             d = self.root / f"step_{step:010d}"
             if ser.validate(d):
@@ -121,21 +172,45 @@ class CheckpointManager:
         """Restore newest valid checkpoint (resharded).  Layouts come from
         `shardings`, or are derived for `mesh` (+ optional `rules`) when
         given — the elastic cross-topology path.  Returns (state, meta) or
-        (None, None) if nothing valid exists."""
-        d = ckpt_dir or self.latest_valid()
-        if d is None:
-            return None, None
-        state = restore_resharded(d, template, shardings, mesh=mesh,
-                                  rules=rules)
-        meta = ser.load_manifest(d).get("meta", {})
-        return state, meta
+        (None, None) if nothing valid exists.
+
+        Because fast validation is manifest-only, a size-preserving bit
+        flip is first caught by the digest check DURING the restore read;
+        when auto-picking, such a dir is skipped and the next older valid
+        checkpoint is served (the pre-chunk-store 'corrupt ones skipped'
+        guarantee).  An explicit `ckpt_dir` still raises."""
+        if ckpt_dir is not None:
+            state = restore_resharded(ckpt_dir, template, shardings,
+                                      mesh=mesh, rules=rules)
+            return state, ser.load_manifest(ckpt_dir).get("meta", {})
+        for step in reversed(self.list_steps()):
+            d = self.root / f"step_{step:010d}"
+            if not ser.validate(d):
+                continue
+            try:
+                state = restore_resharded(d, template, shardings, mesh=mesh,
+                                          rules=rules)
+            except (OSError, zlib.error, RuntimeError, ValueError):
+                # payload-level corruption the fast validate can't see
+                # (digest mismatch, truncated codec stream): skip this dir
+                self._known_valid.discard(d.name)
+                continue
+            return state, ser.load_manifest(d).get("meta", {})
+        return None, None
 
     # --------------------------------------------------------------------- gc
     def _gc(self) -> None:
-        """Corrupt/partial dirs are ALWAYS removed (they can never be
-        restored and used to accumulate forever); of the valid ones, the
-        newest `keep` are retained — and the last remaining valid
-        checkpoint is never removed, whatever `keep` says."""
+        """Two-phase refcounting gc.
+
+        Phase 1 (step dirs): corrupt/partial dirs are ALWAYS removed (they
+        can never be restored and used to accumulate forever); of the valid
+        ones, the newest `keep` are retained — and the last remaining valid
+        checkpoint is never removed, whatever `keep` says.
+
+        Phase 2 (chunks): the union of chunk names referenced by every
+        RETAINED manifest is the live set; everything else in the store is
+        unlinked.  A chunk shared by a removed and a retained step survives
+        (that is the point of content addressing)."""
         dirs = [self.root / f"step_{s:010d}" for s in self.list_steps()]
         valid = [d for d in dirs
                  if d.name in self._known_valid or ser.validate(d)]
@@ -146,3 +221,14 @@ class CheckpointManager:
             shutil.rmtree(d, ignore_errors=True)
             self._known_valid.discard(d.name)
             self.stats["gc_removed"] += 1
+        live: set = set()
+        for d in valid:
+            if d in excess:
+                continue
+            try:
+                live.update(ser.manifest_chunks(ser.load_manifest(d)))
+            except (OSError, ValueError, KeyError):
+                # unreadable manifest in a dir we chose to keep: be
+                # conservative and skip chunk gc entirely this round
+                return
+        self.stats["chunks_gc_removed"] += self.store.gc(live)

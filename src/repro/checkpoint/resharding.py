@@ -35,7 +35,8 @@ def restore_resharded(ckpt_dir: Path, template, shardings=None,
     vals = []
     for k, sh in zip(keys, shard_leaves):
         host = load_leaf(ckpt_dir, man["leaves"][k], verify,
-                         codec=man.get("codec", "zstd"))
+                         codec=man.get("codec", "zstd"),
+                         chunk_dir=man.get("chunk_dir", "chunks"))
         vals.append(jax.device_put(host, sh) if sh is not None
                     else jax.device_put(host))
     treedef = jax.tree_util.tree_structure(template)
@@ -70,19 +71,30 @@ def _dtype_bytes(dtype: str) -> int:
 
 
 def plan_summary(ckpt_dir: Path) -> dict:
-    """What a restore would move: leaves, shard files, bytes, and where the
-    checkpoint came from (source world + membership generation)."""
+    """What a restore would move: leaves, shard chunks, bytes, and where the
+    checkpoint came from (source world + membership generation).  For v3
+    manifests also reports the content-addressed view: distinct chunks vs
+    shard references (replicas and unchanged leaves collapse onto the same
+    chunk) and the compressed footprint."""
     man = load_manifest(ckpt_dir)
     total = 0
     n_shards = 0
+    chunks = {}
     for e in man["leaves"].values():
         n = 1
         for d in e["shape"]:
             n *= d
         total += n * _dtype_bytes(e["dtype"])
         n_shards += len(e.get("shards", ()))
+        for s in e.get("shards", ()):
+            if "chunk" in s:
+                chunks[s["chunk"]] = s.get("clen", 0)
     meta = man.get("meta", {})
-    return {"n_leaves": len(man["leaves"]), "n_shards": n_shards,
-            "approx_bytes": total, "meta": meta,
-            "source_world": meta.get("world"),
-            "generation": meta.get("generation", 0)}
+    out = {"n_leaves": len(man["leaves"]), "n_shards": n_shards,
+           "approx_bytes": total, "meta": meta,
+           "source_world": meta.get("world"),
+           "generation": meta.get("generation", 0)}
+    if chunks:
+        out["n_chunks"] = len(chunks)
+        out["compressed_bytes"] = sum(chunks.values())
+    return out

@@ -169,8 +169,9 @@ class MPI:
 
     def _pump_all(self) -> int:
         """ONE round trip drains every available envelope into the cache
-        (bulk poll).  Buffered sends piggyback on the same batch."""
-        return self._absorb(self.channel.call(CMD_POLL_ALL))
+        (bulk poll).  Buffered sends piggyback on the same batch; an idle
+        channel takes the preallocated fast frame (no batch machinery)."""
+        return self._absorb(self.channel.poll_all_fast())
 
     def _pump_wait(self) -> int:
         """Blocking bulk poll: the proxy parks on the transport up to
@@ -240,8 +241,14 @@ class MPI:
                comm: int = COMM_WORLD) -> Tuple[bool, Optional[Status]]:
         src_world = (source if source == ANY_SOURCE
                      else self.vids.comms[comm].world_rank(source))
-        self._pump_all()
+        # cache-first (paper §4 rule): a hit answers without any proxy
+        # round trip; a definite transport-empty hint answers a miss the
+        # same way; only the ambiguous middle pays the (fast-path) poll
         env = self.cache.match(src_world, tag, comm, remove=False)
+        if env is None and self.channel.poll_miss_hint():
+            return False, None
+        if env is None and self._pump_all():
+            env = self.cache.match(src_world, tag, comm, remove=False)
         if env is None:
             return False, None
         return True, Status(source=env.src, tag=env.tag, count=env.count,

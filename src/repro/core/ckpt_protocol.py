@@ -1,4 +1,4 @@
-"""Per-rank checkpoint images + job manifest (paper §3/§4).
+"""Per-rank checkpoint images + job manifest (paper §3/§4, DESIGN.md §9).
 
 An image contains ONLY application-boundary state: app payload, drained
 message cache, admin log, virtual-id tables, counters.  No transport, no
@@ -6,8 +6,19 @@ proxy, no sockets, no thread state — grep this file for 'transport': the
 only hit is the manifest's *informational* record of which transport was in
 use (never required at restore).
 
-Write protocol: tmp file + crc32 + atomic rename; the manifest commits last
-so a crash mid-checkpoint leaves the previous checkpoint valid."""
+Since manifest v3 an image is stored as content-addressed PARTS — the MPI
+snapshot and the opaque app payload each hashed and written once into a
+chunk store.  A rank whose payload did not change between checkpoints (or
+ranks sharing a replicated payload within one checkpoint) reference the
+same chunk instead of rewriting it — the same incremental scheme the
+tensor layer uses (checkpoint/chunkstore.py).
+
+Write protocol: tmp file + atomic rename per chunk; the manifest commits
+last so a crash mid-checkpoint leaves the previous checkpoint valid.
+Chunks are self-validating (filename == content digest); fast validation
+is manifest-only (existence + size), deep validation re-derives digests.
+v2 manifests (monolithic ``rank_*.img`` + crc32) are still readable.
+"""
 from __future__ import annotations
 
 import json
@@ -17,7 +28,9 @@ import time
 import zlib
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Dict, Iterable, Optional, Set
+
+from repro.checkpoint.chunkstore import ChunkStore, content_digest
 
 
 @dataclass
@@ -42,27 +55,42 @@ def _atomic_write(path: Path, data: bytes) -> None:
     os.replace(tmp, path)
 
 
-def save_rank_image(ckpt_dir: Path, image: RankImage) -> dict:
+def save_rank_image(ckpt_dir: Path, image: RankImage,
+                    store: Optional[ChunkStore] = None) -> dict:
+    """Write one rank's image as content-addressed parts.  `store` defaults
+    to ``ckpt_dir/chunks`` (self-contained); the runtime passes a shared
+    store so consecutive checkpoints (and replicated payloads across ranks)
+    skip unchanged parts.  Returns the manifest entry."""
     ckpt_dir.mkdir(parents=True, exist_ok=True)
-    blob = image.to_bytes()
-    crc = zlib.crc32(blob)
-    path = ckpt_dir / f"rank_{image.rank:05d}.img"
-    _atomic_write(path, blob)
-    return {"file": path.name, "crc32": crc, "bytes": len(blob),
-            "step_idx": image.step_idx}
+    if store is None:
+        store = ChunkStore(ckpt_dir / "chunks")
+    parts: Dict[str, dict] = {}
+    total = 0
+    for part, blob in (("mpi", pickle.dumps(image.mpi_state,
+                                            protocol=pickle.HIGHEST_PROTOCOL)),
+                       ("app", image.app_state)):
+        name = f"{content_digest(blob)}.bin"
+        store.put(name, blob)
+        parts[part] = {"chunk": name, "bytes": len(blob)}
+        total += len(blob)
+    return {"rank": image.rank, "n_ranks": image.n_ranks,
+            "step_idx": image.step_idx, "parts": parts, "bytes": total}
 
 
 def commit_manifest(ckpt_dir: Path, entries: Dict[int, dict],
                     meta: Optional[dict] = None,
-                    generation: int = 0) -> None:
+                    generation: int = 0,
+                    chunk_dir: str = "chunks") -> None:
     """`n_ranks` is the SOURCE world; `generation` the membership epoch the
     job ran in — both are what an elastic restart (and its tests) read to
-    report a topology change (DESIGN.md §8)."""
+    report a topology change (DESIGN.md §8).  `chunk_dir` locates the
+    content-addressed store relative to `ckpt_dir`."""
     manifest = {
-        "version": 2,
+        "version": 3,
         "time": time.time(),
         "n_ranks": len(entries),
         "generation": generation,
+        "chunk_dir": chunk_dir,
         "ranks": {str(r): e for r, e in sorted(entries.items())},
         "meta": meta or {},
     }
@@ -74,22 +102,73 @@ def load_manifest(ckpt_dir: Path) -> dict:
     return json.loads((ckpt_dir / "MANIFEST.json").read_text())
 
 
+def manifest_chunks(man: dict) -> Set[str]:
+    """Every chunk name a v3 manifest references (refcount-gc input)."""
+    if man.get("version", 1) < 3:
+        return set()
+    return {p["chunk"] for e in man["ranks"].values()
+            for p in e.get("parts", {}).values()}
+
+
+def live_chunks(ckpt_dirs: Iterable[Path]) -> Set[str]:
+    """Union of chunk references across checkpoint dirs — pass the dirs you
+    intend to KEEP, then ``store.gc(live_chunks(dirs))`` removes everything
+    only dead checkpoints referenced."""
+    live: Set[str] = set()
+    for d in ckpt_dirs:
+        try:
+            live |= manifest_chunks(load_manifest(Path(d)))
+        except (OSError, ValueError, KeyError):
+            continue
+    return live
+
+
+def _read_part(ckpt_dir: Path, man: dict, part: dict,
+               verify: bool) -> bytes:
+    path = ckpt_dir / man.get("chunk_dir", "chunks") / part["chunk"]
+    blob = path.read_bytes()
+    if verify and content_digest(blob) != part["chunk"].split(".")[0]:
+        raise IOError(f"{part['chunk']}: content digest mismatch")
+    return blob
+
+
 def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True) -> RankImage:
     man = load_manifest(ckpt_dir)
     ent = man["ranks"][str(rank)]
-    blob = (ckpt_dir / ent["file"]).read_bytes()
+    if "parts" in ent:                        # v3: content-addressed parts
+        mpi = _read_part(ckpt_dir, man, ent["parts"]["mpi"], verify)
+        app = _read_part(ckpt_dir, man, ent["parts"]["app"], verify)
+        return RankImage(rank=ent["rank"], n_ranks=ent["n_ranks"],
+                         step_idx=ent["step_idx"],
+                         mpi_state=pickle.loads(mpi), app_state=app)
+    blob = (ckpt_dir / ent["file"]).read_bytes()    # v2: monolithic image
     if verify and zlib.crc32(blob) != ent["crc32"]:
         raise IOError(f"rank {rank} image failed crc32 validation")
     return RankImage.from_bytes(blob)
 
 
-def checkpoint_valid(ckpt_dir: Path) -> bool:
+def checkpoint_valid(ckpt_dir: Path, deep: bool = False) -> bool:
+    """Fast path (default): manifest parses and every referenced chunk
+    exists with its recorded size — no payload reads.  ``deep=True``
+    re-derives every content digest (v3) / crc32 (v2)."""
     try:
         man = load_manifest(ckpt_dir)
         for r, ent in man["ranks"].items():
-            blob = (ckpt_dir / ent["file"]).read_bytes()
-            if zlib.crc32(blob) != ent["crc32"]:
-                return False
+            if "parts" in ent:
+                for part in ent["parts"].values():
+                    path = (ckpt_dir / man.get("chunk_dir", "chunks")
+                            / part["chunk"])
+                    if not path.is_file():
+                        return False
+                    if path.stat().st_size != part["bytes"]:
+                        return False
+                    if deep and (content_digest(path.read_bytes())
+                                 != part["chunk"].split(".")[0]):
+                        return False
+            else:
+                blob = (ckpt_dir / ent["file"]).read_bytes()
+                if zlib.crc32(blob) != ent["crc32"]:
+                    return False
         return True
-    except (OSError, KeyError, json.JSONDecodeError):
+    except (OSError, KeyError, json.JSONDecodeError, ValueError):
         return False

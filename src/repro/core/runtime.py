@@ -18,12 +18,14 @@ dead_ranks=(r,))`` shrinks, grows, or replaces members, remapping every
 world-rank reference in the images through the old→new map (DESIGN.md §8)."""
 from __future__ import annotations
 
+import os
 import pickle
 import threading
 import time
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.checkpoint.chunkstore import ChunkStore
 from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
@@ -43,11 +45,17 @@ class MPIJob:
                  transport: str = "shm",
                  heartbeat_timeout: float = 5.0,
                  membership: Optional[Membership] = None,
-                 coord_timeout: float = 60.0):
+                 coord_timeout: float = 60.0,
+                 ckpt_store: Optional[str | Path] = None):
         self.n = n_ranks
         self.step_fn = step_fn
         self.init_fn = init_fn
         self.transport_name = transport
+        #: shared content-addressed chunk root for incremental rank images:
+        #: consecutive checkpoints (possibly in different dirs) reference
+        #: unchanged payloads instead of rewriting them (DESIGN.md §9).
+        #: None keeps every checkpoint dir self-contained.
+        self.ckpt_store = Path(ckpt_store) if ckpt_store else None
         self.coord = Coordinator(n_ranks, membership=membership,
                                  timeout=coord_timeout)
         self.transport = make_transport(transport)
@@ -65,6 +73,7 @@ class MPIJob:
         self.errors: Dict[int, BaseException] = {}
         self._err_lock = threading.Lock()
         self._ckpt_dir: Optional[Path] = None
+        self._ckpt_chunks: Optional[ChunkStore] = None
         self._ckpt_meta: Dict[int, dict] = {}
         self._ckpt_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
@@ -181,7 +190,8 @@ class MPIJob:
         image = RankImage(rank=rank, n_ranks=self.n, step_idx=step,
                           mpi_state=mpi.snapshot(),
                           app_state=pickle.dumps(state))
-        entry = save_rank_image(self._ckpt_dir, image)
+        store = self._ckpt_chunks
+        entry = save_rank_image(self._ckpt_dir, image, store=store)
         with self._ckpt_lock:
             self._ckpt_meta[rank] = entry
             if len(self._ckpt_meta) == self.n:
@@ -190,7 +200,9 @@ class MPIJob:
                 if self.restore_info is not None:
                     meta["elastic"] = self.restore_info
                 commit_manifest(self._ckpt_dir, self._ckpt_meta, meta=meta,
-                                generation=self.coord.generation)
+                                generation=self.coord.generation,
+                                chunk_dir=os.path.relpath(
+                                    store.root, self._ckpt_dir))
         coord.ack_snapshot(rank, generation=mpi.generation)
         phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
         if phase == PHASE_EXIT:
@@ -243,6 +255,8 @@ class MPIJob:
                                              for t in self._threads):
             raise RuntimeError("job already finished; nothing to checkpoint")
         self._ckpt_dir = Path(ckpt_dir)
+        self._ckpt_chunks = ChunkStore(self.ckpt_store
+                                       or self._ckpt_dir / "chunks")
         self._ckpt_meta = {}
         self.coord.request_checkpoint(resume=resume)
 
@@ -299,7 +313,8 @@ class MPIJob:
                 dead_ranks: Sequence[int] = (),
                 membership: Optional[Membership] = None,
                 heartbeat_timeout: float = 5.0,
-                coord_timeout: float = 60.0) -> "MPIJob":
+                coord_timeout: float = 60.0,
+                ckpt_store: Optional[str | Path] = None) -> "MPIJob":
         """Reconstruct a job from a checkpoint on ANY transport — and, when
         `world_size` / `dead_ranks` reshape the world, for ANY topology:
 
@@ -332,7 +347,8 @@ class MPIJob:
         reshaped = (new_n != old_n) or bool(dead)
         job = cls(new_n, step_fn, init_fn, transport=transport,
                   heartbeat_timeout=heartbeat_timeout,
-                  membership=membership, coord_timeout=coord_timeout)
+                  membership=membership, coord_timeout=coord_timeout,
+                  ckpt_store=ckpt_store)
         rank_map = make_rank_map(old_n, new_n, dead)
         sources: Dict[int, int] = {}
         images: Dict[int, RankImage] = {}    # grow clones reuse one load

@@ -56,6 +56,15 @@ class Transport:
         """Non-blocking: next envelope destined to `rank`, else None."""
         raise NotImplementedError
 
+    def peek(self, rank: int) -> Optional[bool]:
+        """NON-CONSUMING emptiness hint: False = definitely nothing queued
+        for `rank` right now, True = something may be, None = backend can't
+        tell.  Must be safe to call from a thread that is not the proxy
+        (the Iprobe-miss fast path reads it without a channel round trip);
+        a False may race with a concurrent send — callers treat it as
+        'nothing had arrived yet', which is exactly Iprobe's contract."""
+        return None
+
     # ---- batched fabric API (generic fallbacks; backends override) ---------
     def send_many(self, envs: Sequence[Envelope]) -> None:
         """Ship a batch.  Per-(src,dst) order within the batch is preserved."""
@@ -133,6 +142,12 @@ class ShmTransport(Transport):
         except queue.Empty:
             return None
 
+    def peek(self, rank: int) -> Optional[bool]:
+        try:
+            return not self._queues[rank].empty()
+        except IndexError:        # stopped
+            return None
+
     def poll_all(self, rank: int) -> List[Envelope]:
         q = self._queues[rank]
         out: List[Envelope] = []
@@ -193,6 +208,12 @@ class InprocTransport(Transport):
         with self._cv:
             box = self._boxes[rank] if rank < len(self._boxes) else None
             return box.popleft() if box else None
+
+    def peek(self, rank: int) -> Optional[bool]:
+        # lock-free read: deque truthiness is atomic under the GIL, and a
+        # racing append only turns a False into "arrived just after"
+        boxes = self._boxes
+        return bool(boxes[rank]) if rank < len(boxes) else None
 
     def poll_all(self, rank: int) -> List[Envelope]:
         with self._cv:
@@ -405,6 +426,12 @@ class TcpTransport(Transport):
         try:
             return self._inbox[rank].get_nowait()
         except queue.Empty:
+            return None
+
+    def peek(self, rank: int) -> Optional[bool]:
+        try:
+            return not self._inbox[rank].empty()
+        except IndexError:        # stopped
             return None
 
     def poll_all(self, rank: int) -> List[Envelope]:

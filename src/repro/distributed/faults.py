@@ -139,7 +139,11 @@ class FaultTolerantDriver:
             return None
         cands = sorted(self.ckpt_root.iterdir())
         for d in reversed(cands):
-            if d.is_dir() and checkpoint_valid(d):
+            # deep=True: restart is rare and correctness-critical — pay
+            # the full digest scan so a size-preserving bit flip (invisible
+            # to the manifest-only fast path) falls back to an older
+            # checkpoint instead of failing the recovery mid-restart
+            if d.is_dir() and checkpoint_valid(d, deep=True):
                 return d
         return None
 

@@ -64,20 +64,64 @@ def test_async_write_is_donation_safe(tmp_path):
     assert np.array_equal(np.asarray(out["x"]), x)
 
 
+def _chunks_of(ckpt_dir):
+    man = ser.load_manifest(ckpt_dir)
+    return set(ser.manifest_chunks(man))
+
+
 def test_corruption_detected_and_skipped(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=5)
     mgr.save(1, _state(1)); mgr.wait()
     mgr.save(2, _state(2)); mgr.wait()
-    # corrupt the newest checkpoint's first shard
+    # truncate a chunk only step 2 references (shared chunks would
+    # invalidate both steps — content addressing really does share them)
     newest = tmp_path / "step_0000000002"
-    victim = sorted(newest.glob("leaf*"))[0]
-    blob = bytearray(victim.read_bytes())
-    blob[len(blob) // 2] ^= 0xFF
-    victim.write_bytes(bytes(blob))
-    assert not ser.validate(newest)
+    only2 = _chunks_of(newest) - _chunks_of(tmp_path / "step_0000000001")
+    assert only2, "differently-seeded states must have some unique chunks"
+    victim = tmp_path / "chunks" / sorted(only2)[0]
+    victim.write_bytes(victim.read_bytes()[:-3])
+    assert not ser.validate(newest)          # manifest-only fast path
     assert mgr.latest_valid().name == "step_0000000001"
     out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
     assert meta["step"] == 1
+
+
+def test_restore_falls_back_past_size_preserving_bitflip(tmp_path):
+    """A same-size bit flip passes manifest-only validation; the digest
+    check catches it during the restore READ and the auto-pick falls back
+    to the next older valid checkpoint — the pre-chunk-store 'corrupt
+    ones skipped' guarantee, preserved."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _state(1)); mgr.wait()
+    mgr.save(2, _state(2)); mgr.wait()
+    only2 = _chunks_of(tmp_path / "step_0000000002") \
+        - _chunks_of(tmp_path / "step_0000000001")
+    victim = tmp_path / "chunks" / sorted(only2)[0]
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    assert ser.validate(tmp_path / "step_0000000002")   # fast path fooled
+    out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert meta["step"] == 1                            # ...restore wasn't
+    for a, b in zip(jax.tree.leaves(_state(1)), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bitflip_detected_by_deep_validate_and_restore(tmp_path):
+    """A same-size bit flip slips past the manifest-only fast path (by
+    design — it never reads blobs); deep validation and restore both catch
+    it via the content digest."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _state(1)); mgr.wait()
+    d = tmp_path / "step_0000000001"
+    victim = tmp_path / "chunks" / sorted(_chunks_of(d))[0]
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    assert ser.validate(d)                   # fast path: size unchanged
+    assert not ser.validate(d, deep=True)    # deep: digest mismatch
+    with pytest.raises(Exception):
+        ser.restore_tree(d, jax.eval_shape(lambda: _state()))
 
 
 def test_missing_manifest_is_invalid(tmp_path):
@@ -145,6 +189,83 @@ def test_write_failure_surfaces_on_wait(tmp_path, monkeypatch):
     mgr.save(1, _state())
     with pytest.raises(RuntimeError):
         mgr.wait()
+
+
+def test_failed_async_write_never_deletes_previous_valid(tmp_path,
+                                                         monkeypatch):
+    """A save_shards failure mid-write used to leave _gc running against
+    the partial dir; with keep=1 that could collect the only valid
+    checkpoint.  Now a failed write skips gc entirely: the previous
+    checkpoint (manifest AND chunks) must survive, and the next restore
+    must serve it."""
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(1, _state(1))
+    mgr.wait()
+    good = mgr.latest_valid()
+    chunks_before = set(p.name for p in (tmp_path / "chunks").iterdir())
+
+    real = ser.save_shards
+
+    def dies_mid_write(ckpt_dir, state, **kw):
+        real(ckpt_dir, state, **kw)           # chunks + manifest land...
+        (ckpt_dir / "MANIFEST.json").unlink()  # ...but the commit "crashes"
+        raise IOError("disk full")
+
+    monkeypatch.setattr(ser, "save_shards", dies_mid_write)
+    mgr.save(2, _state(2))
+    with pytest.raises(RuntimeError):
+        mgr.wait()
+    # gc did NOT run: the old checkpoint is intact, chunks included
+    assert mgr.latest_valid() == good
+    assert chunks_before <= set(p.name
+                                for p in (tmp_path / "chunks").iterdir())
+    out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert meta["step"] == 1
+    # the next SUCCESSFUL save gc-collects the partial leftovers
+    monkeypatch.setattr(ser, "save_shards", real)
+    mgr.save(3, _state(3))
+    mgr.wait()
+    assert mgr.list_steps() == [3]
+
+
+def test_incremental_save_references_unchanged_chunks(tmp_path):
+    """Steady-state incremental save: when only a few leaves change, the
+    next save writes only their chunks and hard-references the rest; the
+    restore from the incremental chain is bit-identical."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    st = _state(0)
+    mgr.save(1, st)
+    mgr.wait()
+    full_written = mgr.stats["last_bytes_written"]
+    assert full_written > 0 and mgr.delta_write_fraction() == 1.0
+    # change ONE leaf (the optimizer-step analog) and save again
+    st2 = dict(st, step=jnp.int32(8))
+    mgr.save(2, st2)
+    mgr.wait()
+    assert mgr.stats["last_bytes_referenced"] > 0
+    assert mgr.delta_write_fraction() < 0.25
+    out, meta = mgr.restore(jax.eval_shape(lambda: _state()))
+    assert meta["step"] == 2
+    for a, b in zip(jax.tree.leaves(st2), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refcount_gc_keeps_shared_chunks(tmp_path):
+    """Dropping an old step removes only chunks no retained manifest
+    references; shared chunks survive and the survivor still restores."""
+    mgr = CheckpointManager(tmp_path, keep=1, async_write=False)
+    st = _state(0)
+    mgr.save(1, st)
+    st2 = dict(st, step=jnp.int32(8))      # mostly-shared successor
+    mgr.save(2, st2)                        # gc drops step 1
+    assert mgr.list_steps() == [2]
+    assert mgr.stats["chunks_gc_removed"] >= 1     # step-1's unique chunk
+    live = set(ser.manifest_chunks(ser.load_manifest(mgr.latest_valid())))
+    on_disk = set(p.name for p in (tmp_path / "chunks").iterdir())
+    assert live == on_disk                  # exactly the live set remains
+    out, _ = mgr.restore(jax.eval_shape(lambda: _state()))
+    for a, b in zip(jax.tree.leaves(st2), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
 # ------------------------------------------------------------ data pipeline

@@ -70,8 +70,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, json
 from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import make_variant, resolve_spec
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 r = make_variant("baseline")
 checks = []
 # divisible head dim shards on model
@@ -206,5 +206,17 @@ def test_serve_engine_greedy_matches_forward_argmax():
                           Policy(compute=jnp.float32))
     for t in range(6):
         pos = prompts.shape[1] + t - 1
-        pred = np.argmax(np.asarray(full[:, pos]), axis=-1)
-        np.testing.assert_array_equal(pred, res.tokens[:, t])
+        logits = np.asarray(full[:, pos])
+        pred = np.argmax(logits, axis=-1)
+        for b in range(logits.shape[0]):
+            if pred[b] == res.tokens[b, t]:
+                continue
+            # The decode path (incremental KV cache) and the full forward
+            # reduce in different orders; when the top-2 logits are within
+            # float32 noise the argmax can legitimately flip.  Only a gap
+            # beyond noise is a real cache/position bug.
+            gap = logits[b, pred[b]] - logits[b, res.tokens[b, t]]
+            assert gap < 1e-2, (
+                f"t={t} b={b}: decode chose {res.tokens[b, t]} but forward "
+                f"argmax is {pred[b]} with logit gap {gap:.4f} (beyond "
+                f"float32 tie noise -- KV-cache divergence)")
