@@ -73,7 +73,12 @@ class ChunkStore:
             self.ref(name, raw_bytes or len(blob))
             return False
         self.root.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_name(p.name + f".tmp{threading.get_ident()}")
+        # tmp name must be unique per WRITER, and writers can now live in
+        # different processes (process-world rank children share one store):
+        # thread idents alone collide across forked children — same main
+        # thread address — so qualify with the pid too
+        tmp = p.with_name(
+            p.name + f".tmp{os.getpid()}-{threading.get_ident()}")
         tmp.write_bytes(blob)
         os.replace(tmp, p)
         with self._lock:

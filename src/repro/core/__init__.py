@@ -5,13 +5,17 @@ Public surface:
     MPI            — passive stub (plugin): full API incl. collectives
     MPIJob         — runtime: launch, async checkpoint, restart
     Coordinator    — DMTCP-style coordinator (drain counters, ckpt FSM)
-    transports     — "shm" and "tcp" (two 'MPI implementations')
+    transports     — "shm" / "tcp" / "inproc" (three 'MPI implementations')
+                     plus "proc": every rank a REAL OS process behind a
+                     socket proxy endpoint (core/procworld.py, DESIGN §10)
 """
 from repro.core.api import COMM_WORLD, MPI
 from repro.core.coordinator import Coordinator
 from repro.core.messages import ANY_SOURCE, ANY_TAG, Status
 from repro.core.runtime import MPIJob
-from repro.core.transport import TRANSPORTS, make_transport
+from repro.core.transport import (TRANSPORTS, available_transports,
+                                  make_transport)
 
 __all__ = ["MPI", "MPIJob", "Coordinator", "COMM_WORLD", "ANY_SOURCE",
-           "ANY_TAG", "Status", "TRANSPORTS", "make_transport"]
+           "ANY_TAG", "Status", "TRANSPORTS", "available_transports",
+           "make_transport"]

@@ -165,6 +165,13 @@ class Coordinator:
             self.stats["counter_reports"] += 1
             self._lock.notify_all()
 
+    def stat_add(self, key: str, n: int = 1) -> None:
+        """Thread-safe stats bump — process-world rank children report
+        their per-rank statistics (e.g. drained_messages) through their
+        endpoint via this, since they cannot touch the dict in-process."""
+        with self._lock:
+            self.stats[key] = self.stats.get(key, 0) + n
+
     def note_empty_channel(self, rank: int) -> None:
         """Rank verified its proxy channel empty right before snapshotting
         (the drain invariant, asserted — not just claimed — each ckpt)."""

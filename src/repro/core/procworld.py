@@ -1,0 +1,741 @@
+"""The PROCESS world — ranks as real OS processes behind socket proxies
+(DESIGN.md §10).
+
+The paper's whole argument is that the proxy is a *separate process* from
+the MPI application: the app's address space holds no MPI state, so a
+checkpoint of the app alone restores onto any implementation.  The thread
+world simulates that boundary; this module makes it real.  Selecting
+``MPIJob(..., transport="proc")``:
+
+  * LAUNCHER (parent) — ``ProcWorld`` forks one child process per rank,
+    accepts one socket per rank, and runs a per-rank ENDPOINT thread that
+    owns a ``ProxyCore`` (sequence numbers + comm tables) over the
+    parent-side ``ProcTransport`` fabric.  The endpoint speaks the SAME
+    versioned batch wire protocol as the in-thread ProxyChannel, framed
+    exactly like TcpTransport frames (``read_frame``/``write_frame``).
+    Membership is over PIDs: the launcher reaps exit codes, pings the
+    heartbeat on every frame a rank sends, and a torn/half-written socket
+    (a SIGKILLed child) is recorded as a dead rank the instant its
+    connection drops — no timeout needed.
+  * RANK CHILD — ``_child_main`` runs the same step loop as
+    ``MPIJob._rank_main`` against a ``SocketChannel`` (ProxyChannel
+    look-alike over the socket) and a ``CoordClient`` (Coordinator
+    look-alike: replied calls are RPCs; phase/abort/ckpt-round piggyback
+    on EVERY reply, so the cached view is at most one round trip stale).
+    At a checkpoint the CHILD writes its own rank image into the shared
+    content-addressed chunk store; agreement and the manifest commit stay
+    with the parent (``ckpt_entry``).
+
+Children are forked (not spawned): step/init closures and restored
+snapshots transfer by address-space inheritance, never by pickling — the
+same reason the checkpoint images stay implementation-free.  Fork-safety
+caveat: the launcher may host background threads (XLA's pools once jax
+has run in-process), and forking a multithreaded process is only safe
+for children that avoid the affected libraries — which is why rank code
+on this substrate must stay off jax (proxy_grad is pure numpy for
+exactly this reason).  If a child ever wedges pre-connect anyway, the
+layered mitigations bound the damage: per-test timeouts fail the test,
+the driver's heartbeat declares the silent rank dead and restarts
+reshaped, and stop()/the conftest reaper SIGKILL stragglers.
+
+Wire protocol additions (served by the endpoint, not by ProxyCore):
+
+  ("ping", ())                       liveness + coord-state refresh
+  ("coord", (method, args, kwargs))  whitelisted Coordinator RPC
+  ("stats_add", (key, n))            per-rank stat into coord.stats
+  ("straggler", (rank, seconds))     per-step duration -> StragglerTracker
+  ("ckpt_info", ())                  -> (ckpt_dir, chunk_store_root)
+  ("ckpt_entry", (rank, entry, step))  manifest entry; parent commits last
+  ("fire_trigger", ())               first rank at a checkpoint_at step
+  ("finish", (rank, state_bytes))    normal completion (result to parent)
+  ("ckpt_exit", (rank, state_bytes)) checkpoint-with-exit completion
+  ("fail", (rank, exc_bytes))        rank raised; parent records the error
+
+Every reply is ``(ok, value, coord_state)`` with ``coord_state =
+(phase, aborted_reason, ckpt_round, trigger_step, all_finished)``.
+"""
+from __future__ import annotations
+
+import itertools
+import multiprocessing
+import os
+import pickle
+import socket
+import struct
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.checkpoint.chunkstore import ChunkStore
+from repro.core.ckpt_protocol import RankImage, save_rank_image
+from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
+                                    PHASE_PENDING, PHASE_RESUME, PHASE_RUN)
+from repro.core.proxy import (CMD_POLL_ALL, PROTOCOL_VERSION, ProtocolError,
+                              ProxyChannel, ProxyCore)
+from repro.core.transport import read_exact, read_frame, write_frame
+
+_WORLD_SEQ = itertools.count()
+
+#: Coordinator methods a rank child may invoke over the wire.  Everything
+#: else on the coordinator (request_checkpoint, abort, membership bumps)
+#: belongs to the launcher/driver side and is deliberately unreachable.
+COORD_RPC_METHODS = frozenset({
+    "join", "propose_ckpt_step", "ack_drained", "unack_drained",
+    "drain_complete", "note_empty_channel", "ack_snapshot",
+    "resume_running", "wait_phase", "report_counters", "mark_finished",
+    "all_finished", "barrier", "check_aborted",
+})
+
+
+class RankProcessDied(RuntimeError):
+    """A rank's OS process vanished mid-protocol (SIGKILL, OOM, crash)."""
+
+
+def _safe_exc(e: BaseException) -> BaseException:
+    """An exception that survives a pickle round trip (reply frames and
+    ``fail`` reports carry real exception objects when they can)."""
+    try:
+        pickle.loads(pickle.dumps(e))
+        return e
+    except Exception:
+        return RuntimeError(f"{type(e).__name__}: {e}")
+
+
+# =========================================================================
+# parent side
+# =========================================================================
+
+class ProcWorld:
+    """Launcher + supervisor: fork rank processes, serve their proxy
+    endpoints, reap exit codes, capture per-rank stdout/stderr."""
+
+    def __init__(self, job, log_dir: Optional[str | Path] = None):
+        self.job = job
+        self.n = job.n
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind(("127.0.0.1", 0))
+        self._srv.listen(self.n)
+        self._srv.settimeout(0.2)
+        self.port = self._srv.getsockname()[1]
+        self.log_dir = Path(log_dir or os.environ.get("REPRO_PROC_LOG_DIR")
+                            or (Path(tempfile.gettempdir()) / "procworld"))
+        self._seq = next(_WORLD_SEQ)
+        self._procs: Dict[int, multiprocessing.Process] = {}
+        self._conns: Dict[int, socket.socket] = {}
+        self._threads: List[threading.Thread] = []
+        self._done: set = set()            # ranks that reported a terminal RPC
+        self._lock = threading.Lock()
+        self._halt = threading.Event()
+        self._launched = False
+        self.exit_codes: Dict[int, Optional[int]] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def pids(self) -> Dict[int, int]:
+        """LIVE PID-based membership: rank -> pid, only for processes that
+        are still alive.  An exited rank drops out immediately — its pid
+        number may already belong to someone else, so handing it to a
+        killer (faults.kill_rank_process) would be a stale reference.
+        Snapshot the dict: launch() inserts concurrently with callers
+        polling from other threads (the fault injector does exactly
+        that)."""
+        return {r: p.pid for r, p in list(self._procs.items())
+                if p.pid is not None and p.is_alive()}
+
+    def log_path(self, rank: int) -> Path:
+        return self.log_dir / f"world{self._seq:04d}-rank{rank}.log"
+
+    def finished(self) -> bool:
+        return self._launched and all(p.exitcode is not None
+                                      for p in list(self._procs.values()))
+
+    def _record_error(self, rank: int, err: BaseException) -> None:
+        job = self.job
+        with job._err_lock:
+            job.errors.setdefault(rank, err)
+
+    # ------------------------------------------------------------------ run
+    def run(self, n_steps: int, timeout: float) -> List[Any]:
+        self.launch(n_steps)
+        return self.wait(timeout)
+
+    def launch(self, n_steps: int) -> None:
+        assert not self._launched, "a process world launches exactly once"
+        self._launched = True
+        self.log_dir.mkdir(parents=True, exist_ok=True)
+        t = threading.Thread(target=self._accept_loop, daemon=True,
+                             name=f"procworld-{self._seq}-accept")
+        t.start()
+        self._threads.append(t)
+        # fork start method: step/init closures and restored snapshots are
+        # inherited by address space, exactly like the thread world sees
+        # them — nothing is pickled across the boundary
+        ctx = multiprocessing.get_context("fork")
+        for r in range(self.n):
+            p = ctx.Process(target=_child_main,
+                            args=(self.job, r, self.port, n_steps,
+                                  str(self.log_path(r))),
+                            daemon=True, name=f"rank-{r}")
+            p.start()
+            self._procs[r] = p
+
+    def _accept_loop(self) -> None:
+        while not self._halt.is_set():
+            with self._lock:
+                if len(self._conns) >= self.n:
+                    return
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:            # server socket closed by stop()
+                return
+            # rank handshake: 4-byte rank id, same as the tcp switchboard
+            raw = read_exact(conn, 4)
+            if raw is None:
+                conn.close()
+                continue
+            rank = struct.unpack("!i", raw)[0]
+            with self._lock:
+                self._conns[rank] = conn
+            t = threading.Thread(target=self._serve_rank, args=(rank, conn),
+                                 daemon=True,
+                                 name=f"procworld-{self._seq}-endpoint-{rank}")
+            t.start()
+            self._threads.append(t)
+
+    # ------------------------------------------------------------- endpoint
+    def _coord_state(self) -> tuple:
+        c = self.job.coord
+        trig = self.job._trigger
+        return (c.phase, c.aborted, c.ckpt_round,
+                trig[0] if trig is not None else None,
+                c.all_finished())
+
+    def _serve_rank(self, rank: int, conn: socket.socket) -> None:
+        """One rank's proxy endpoint: the process-world twin of
+        MPIProxy._serve, owning this rank's ProxyCore over the fabric."""
+        job = self.job
+        core = ProxyCore(rank, job.transport)
+        deferred: Optional[Exception] = None
+        try:
+            while True:
+                blob = read_frame(conn)
+                if blob is None:
+                    return                      # EOF / torn frame
+                job.heartbeat.ping(rank)
+                version, cmds, want_reply = pickle.loads(blob)
+                if version != PROTOCOL_VERSION:
+                    err: Exception = ProtocolError(
+                        f"child speaks v{version}, "
+                        f"endpoint v{PROTOCOL_VERSION}")
+                    if want_reply:
+                        self._reply(conn, False, err)
+                    else:
+                        deferred = deferred or err
+                    continue
+                if want_reply and deferred is not None:
+                    err, deferred = deferred, None
+                    self._reply(conn, False, err)
+                    continue
+                try:
+                    result = self._execute(core, rank, cmds)
+                    if want_reply:
+                        self._reply(conn, True, result)
+                except Exception as e:  # surfaced now or at the next reply
+                    if want_reply:
+                        self._reply(conn, False, _safe_exc(e))
+                    else:
+                        deferred = deferred or e
+        except OSError:
+            return                              # reply write hit a dead peer
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._lock:
+                clean = rank in self._done or self._halt.is_set()
+            if not clean:
+                # the socket died before the rank said goodbye: a real
+                # SIGKILL/crash.  Record it NOW — detection in one poll,
+                # not after a heartbeat timeout.
+                pid = self._procs.get(rank).pid if rank in self._procs else "?"
+                self._record_error(rank, RankProcessDied(
+                    f"rank {rank} (pid {pid}) lost its proxy connection "
+                    f"mid-protocol (killed?); log: {self.log_path(rank)}"))
+
+    def _reply(self, conn: socket.socket, ok: bool, value: Any) -> None:
+        try:
+            payload = pickle.dumps((ok, value, self._coord_state()),
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception as e:                 # unpicklable result
+            payload = pickle.dumps((False, _safe_exc(e), self._coord_state()),
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+        write_frame(conn, payload)
+
+    def _execute(self, core: ProxyCore, rank: int, cmds) -> Any:
+        """Run one batch: plain proxy commands go through the shared
+        ProxyCore executor (sends coalesce as usual); launcher-side
+        commands are handled here, in order."""
+        result: Any = None
+        buf: List[tuple] = []
+        for cmd, args in cmds:
+            if cmd in _ENDPOINT_CMDS:
+                if buf:
+                    result = core.execute_batch(buf)
+                    buf = []
+                result = self._endpoint_cmd(cmd, rank, args)
+            else:
+                buf.append((cmd, args))
+        if buf:
+            result = core.execute_batch(buf)
+        return result
+
+    def _endpoint_cmd(self, cmd: str, rank: int, args: tuple) -> Any:
+        job = self.job
+        if cmd == "ping":
+            return None
+        if cmd == "coord":
+            method, cargs, ckwargs = args
+            if method not in COORD_RPC_METHODS:
+                raise ValueError(f"coordinator method {method!r} not "
+                                 f"callable from a rank child")
+            return getattr(job.coord, method)(*cargs, **ckwargs)
+        if cmd == "stats_add":
+            key, n = args
+            job.coord.stat_add(key, n)
+            return None
+        if cmd == "straggler":
+            r, seconds = args
+            job.stragglers.record(r, seconds)
+            return None
+        if cmd == "ckpt_info":
+            with job._ckpt_lock:
+                return (str(job._ckpt_dir), str(job._ckpt_chunks.root))
+        if cmd == "ckpt_entry":
+            r, entry, step = args
+            job._commit_rank_entry(r, entry, step)
+            return None
+        if cmd == "fire_trigger":
+            with job._ckpt_lock:
+                trig, job._trigger = job._trigger, None
+            if trig is not None and job.coord.phase == PHASE_RUN:
+                try:
+                    job.checkpoint(trig[1], resume=trig[2])
+                except RuntimeError:
+                    pass       # superseded by a concurrent request / finish
+            return None
+        if cmd == "finish":
+            r, blob = args
+            state = pickle.loads(blob)
+            job.states[r] = state
+            job.results[r] = state
+            job.coord.mark_finished(r)
+            with self._lock:
+                self._done.add(r)
+            return None
+        if cmd == "ckpt_exit":
+            r, blob = args
+            job.states[r] = pickle.loads(blob)
+            with self._lock:
+                self._done.add(r)
+            return None
+        if cmd == "fail":
+            r, blob = args
+            try:
+                err = pickle.loads(blob)
+            except Exception:
+                err = RuntimeError(f"rank {r} failed (unpicklable error)")
+            self._record_error(r, err)
+            with self._lock:
+                self._done.add(r)
+            return None
+        raise ValueError(f"unknown endpoint command {cmd!r}")
+
+    # ------------------------------------------------------------- waiting
+    def wait(self, timeout: float) -> List[Any]:
+        """Block until every rank process exits (the thread world's join);
+        reap exit codes; surface the first recorded error."""
+        job = self.job
+        deadline = time.monotonic() + timeout
+        while True:
+            alive = [r for r, p in self._procs.items() if p.is_alive()]
+            for r, p in self._procs.items():
+                if not p.is_alive() and r not in self.exit_codes:
+                    p.join(0.1)                       # reap the zombie
+                    self.exit_codes[r] = p.exitcode
+                    with self._lock:
+                        clean = r in self._done
+                    if not clean and p.exitcode != 0 and r not in job.errors:
+                        # died before it ever connected (or between connect
+                        # and its first frame): the endpoint EOF path never
+                        # saw it — record from the exit code
+                        self._record_error(r, RankProcessDied(
+                            f"rank {r} exited with code {p.exitcode} "
+                            f"before finishing; log: {self.log_path(r)}"))
+            if not alive:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"rank-{alive[0]} did not finish")
+            time.sleep(0.005)
+        if job.errors:
+            rank, err = next(iter(job.errors.items()))
+            raise RuntimeError(f"rank {rank} failed: {err!r}") from err
+        return job.results
+
+    # ------------------------------------------------------------- teardown
+    def stop(self) -> None:
+        """Deterministic, leak-free teardown: close the wire, then
+        SIGTERM -> SIGKILL any rank process still alive, and reap."""
+        self._halt.set()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns.values())
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        for r, p in self._procs.items():
+            if p.is_alive():
+                p.terminate()
+        for r, p in self._procs.items():
+            p.join(2.0)
+            if p.is_alive():
+                p.kill()
+                p.join(5.0)
+            self.exit_codes.setdefault(r, p.exitcode)
+        for t in self._threads:
+            t.join(5.0)
+
+
+_ENDPOINT_CMDS = frozenset({
+    "ping", "coord", "stats_add", "straggler", "ckpt_info", "ckpt_entry",
+    "fire_trigger", "finish", "ckpt_exit", "fail",
+})
+
+
+# =========================================================================
+# child side
+# =========================================================================
+
+class SocketChannel(ProxyChannel):
+    """The ProxyChannel over the endpoint socket (child side).
+
+    Subclasses the real channel: batching, MAX_BATCH auto-flush, and the
+    stats contract are INHERITED, so the plugin (api.MPI) — and the tests
+    that assert on round_trips/async_batches — cannot tell it from the
+    queue channel.  Only the frame-transport hooks differ: frames are
+    pickled over the socket, and every reply refreshes ``coord_state``
+    for free, which keeps the child's view of the checkpoint FSM one
+    round trip fresh."""
+
+    def __init__(self, port: int, rank: int, connect_timeout: float = 10.0):
+        super().__init__()
+        self.rank = rank
+        self.sock = socket.create_connection(("127.0.0.1", port),
+                                             timeout=connect_timeout)
+        self.sock.settimeout(None)
+        self.sock.sendall(struct.pack("!i", rank))
+        #: (phase, aborted_reason, ckpt_round, trigger_step, all_finished)
+        #: — piggybacked on every reply
+        self.coord_state: tuple = (PHASE_RUN, None, 0, None, False)
+
+    # ---- frame transport hooks ---------------------------------------------
+    def _push(self, frame: tuple) -> None:
+        try:
+            write_frame(self.sock, pickle.dumps(
+                frame, protocol=pickle.HIGHEST_PROTOCOL))
+        except OSError:
+            self.closed = True
+            raise RuntimeError("proxy channel closed") from None
+
+    def _await_reply(self) -> Any:
+        blob = read_frame(self.sock)
+        if blob is None:
+            self.closed = True
+            raise RuntimeError("proxy channel closed")
+        ok, val, state = pickle.loads(blob)
+        self.coord_state = state
+        if not ok:
+            raise val
+        return val
+
+    def poll_all_fast(self) -> Any:
+        # the base class's preallocated singleton frame is a queue-identity
+        # trick; over a socket a plain replied poll is the same thing
+        return self.call(CMD_POLL_ALL)
+
+    def poll_miss_hint(self) -> bool:
+        # no cross-process non-consuming peek: Iprobe pays the round trip
+        return False
+
+    def is_empty(self) -> bool:
+        # single-threaded child: after flush() nothing is buffered here and
+        # nothing can be in flight — the channel-empty-at-snapshot invariant
+        return not self._pending and not self.closed
+
+    def refresh(self) -> tuple:
+        """Replied ping: heartbeat + fresh coord state in one round trip."""
+        self.call("ping")
+        return self.coord_state
+
+
+class CoordClient:
+    """Coordinator look-alike for the rank child.
+
+    Replied methods are RPCs through the channel; ``phase`` /
+    ``check_aborted`` / ``ckpt_round`` read the piggybacked cache (updated
+    by EVERY reply — a child blocked in Recv refreshes every poll_wait)."""
+
+    def __init__(self, chan: SocketChannel, generation: int, timeout: float):
+        self.chan = chan
+        self.generation = generation
+        self.timeout = timeout
+
+    # ---- cached view -------------------------------------------------------
+    @property
+    def phase(self) -> str:
+        return self.chan.coord_state[0]
+
+    @property
+    def ckpt_round(self) -> int:
+        return self.chan.coord_state[2]
+
+    @property
+    def trigger_step(self) -> Optional[int]:
+        return self.chan.coord_state[3]
+
+    def check_aborted(self) -> None:
+        reason = self.chan.coord_state[1]
+        if reason is not None:
+            raise JobAborted(reason)
+
+    # ---- RPCs --------------------------------------------------------------
+    def _rpc(self, method: str, *args, **kwargs) -> Any:
+        return self.chan.call("coord", method, args, kwargs)
+
+    def join(self, rank, generation=None):
+        return self._rpc("join", rank, generation)
+
+    def propose_ckpt_step(self, rank, next_boundary, generation=None):
+        return self._rpc("propose_ckpt_step", rank, next_boundary,
+                         generation=generation)
+
+    def report_counters(self, rank, sent, received, generation=None):
+        # fire-and-forget, like the sends it accounts for: the epoch push
+        # must not turn every REPORT_EPOCH-th send into a round trip.  The
+        # socket is ordered, so the report reaches the coordinator before
+        # any later replied call (ack_drained relies on exactly this); a
+        # StaleGenerationError surfaces at the next replied call instead
+        # of here (deferred-error slot, same as a failed send).
+        self.chan.send_async("coord", "report_counters", (rank, sent, received),
+                             {"generation": generation})
+
+    def ack_drained(self, rank, generation=None):
+        return self._rpc("ack_drained", rank, generation=generation)
+
+    def drain_complete(self):
+        return self._rpc("drain_complete")
+
+    def note_empty_channel(self, rank):
+        return self._rpc("note_empty_channel", rank)
+
+    def ack_snapshot(self, rank, generation=None):
+        return self._rpc("ack_snapshot", rank, generation=generation)
+
+    def resume_running(self, rank):
+        return self._rpc("resume_running", rank)
+
+    def mark_finished(self, rank):
+        return self._rpc("mark_finished", rank)
+
+    def all_finished(self):
+        # cached: piggybacked on every reply, refreshed by the serving
+        # loop's periodic ping — a finished rank must not burn a dedicated
+        # RPC per poll just to learn whether its peers are done
+        return self.chan.coord_state[4]
+
+    def barrier(self, rank, timeout=None, generation=None):
+        return self._rpc("barrier", rank, timeout=timeout,
+                         generation=generation)
+
+    def wait_phase_alive(self, *phases: str) -> str:
+        """The child's _wait_phase_alive: short parent-side waits so every
+        loop sends a frame (= heartbeat) until the phase flips."""
+        deadline = time.time() + self.timeout
+        while True:
+            try:
+                return self._rpc("wait_phase", *phases, timeout=0.25)
+            except TimeoutError:
+                if time.time() > deadline:
+                    raise TimeoutError(
+                        f"waiting for {phases} after "
+                        f"{self.timeout:g}s") from None
+
+
+def _redirect_io(log_path: str) -> Any:
+    """Point the child's fds 1/2 (and sys.stdout/stderr) at its rank log —
+    the launcher-side capture the CI uploads on failure."""
+    Path(log_path).parent.mkdir(parents=True, exist_ok=True)
+    f = open(log_path, "a", buffering=1)
+    os.dup2(f.fileno(), 1)
+    os.dup2(f.fileno(), 2)
+    sys.stdout = f
+    sys.stderr = f
+    return f
+
+
+def _child_main(job, rank: int, port: int, n_steps: int,
+                log_path: str) -> None:
+    """The rank process entry point — the process-world twin of
+    MPIJob._rank_main + _do_checkpoint, RPC'd through the SocketChannel.
+    Runs in a forked child; exits via os._exit (no inherited atexit)."""
+    code = 1
+    chan = None
+    logf = None
+    try:
+        logf = _redirect_io(log_path)
+        print(f"[procworld] rank {rank} pid {os.getpid()} starting "
+              f"(world {job.n}, steps {n_steps})")
+        # inherited parent-side fds are not ours: the listener, and the
+        # endpoint connections of every rank that connected before this
+        # fork (closing the child's dup leaves the parent's end intact)
+        try:
+            job._proc._srv.close()
+        except Exception:
+            pass
+        for c in list(job._proc._conns.values()):
+            try:
+                c.close()
+            except Exception:
+                pass
+        from repro.core.api import MPI
+        chan = SocketChannel(port, rank)
+        coord = CoordClient(chan, generation=job.coord.generation,
+                            timeout=job.coord.timeout)
+        mpi = MPI(rank, job.n, chan, coord)
+        if not job._restored:
+            mpi.Init()
+            state = job.init_fn(mpi)
+        else:
+            mpi.restore(job._restore_snaps[rank])
+            state = job.states[rank]
+        step = job.start_steps[rank]
+        last_rt = -1
+        while step < n_steps:
+            # heartbeat + coord-state freshness: a communication-heavy step
+            # already refreshed both through its own replied frames; only a
+            # compute-only step needs the dedicated ping round trip
+            rt = chan.stats["round_trips"]
+            if rt == last_rt:
+                chan.refresh()
+                rt = chan.stats["round_trips"]
+            last_rt = rt
+            coord.check_aborted()
+            mpi.step_idx = step
+            trig = coord.trigger_step
+            if (trig is not None and step >= trig
+                    and coord.phase == PHASE_RUN):
+                chan.call("fire_trigger")
+            if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
+                agreed = coord.propose_ckpt_step(rank, step)
+                mpi._proposed_gen = coord.ckpt_round
+                if agreed is not None and step >= agreed:
+                    if _child_checkpoint(job, chan, coord, mpi, state, step):
+                        chan.call("ckpt_exit", rank, pickle.dumps(state))
+                        code = 0
+                        return
+                    continue
+                if agreed is None:
+                    time.sleep(0.0002)
+                    continue
+            t_step = time.time()
+            state = job.step_fn(mpi, state, step)
+            # straggler telemetry rides the async batch, like the sends
+            chan.send_async("straggler", rank, time.time() - t_step)
+            mpi.flush_async()
+            step += 1
+        mpi.flush()
+        chan.call("finish", rank, pickle.dumps(state))
+        # keep serving the checkpoint FSM until every rank is done: one
+        # replied ping per poll refreshes phase + all_finished together
+        # (a finished rank idles at ~200 RPC/s, not a busy loop)
+        while not coord.all_finished():
+            coord.check_aborted()
+            if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
+                mpi.step_idx = step
+                agreed = coord.propose_ckpt_step(rank, step)
+                mpi._proposed_gen = coord.ckpt_round
+                if agreed is not None and step >= agreed:
+                    if _child_checkpoint(job, chan, coord, mpi, state, step):
+                        code = 0
+                        return
+                    continue
+            time.sleep(0.005)
+            chan.refresh()
+        code = 0
+    except BaseException as e:  # noqa: BLE001 - shipped to the launcher
+        print(f"[procworld] rank {rank} failed: {type(e).__name__}: {e}")
+        if chan is not None and not chan.closed:
+            try:
+                chan.call("fail", rank, pickle.dumps(_safe_exc(e)))
+            except Exception:
+                pass
+        code = 1
+    finally:
+        try:
+            if chan is not None:
+                chan.sock.close()
+        except Exception:
+            pass
+        try:
+            if logf is not None:
+                logf.flush()
+        except Exception:
+            pass
+        os._exit(code)
+
+
+def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
+                      state, step: int) -> bool:
+    """Flush -> drain -> snapshot -> resume/exit, with the CHILD writing
+    its own rank image into the shared chunk store and the parent
+    committing the manifest.  True if the job exits."""
+    mpi.flush()
+    while coord.phase == PHASE_DRAIN:
+        coord.check_aborted()
+        pumped = mpi._pump_all()
+        coord.ack_drained(mpi.rank, generation=mpi.generation)
+        coord.drain_complete()
+        if not pumped:
+            time.sleep(0.0002)
+    assert chan.is_empty(), \
+        f"rank {mpi.rank}: proxy channel not empty at snapshot"
+    coord.note_empty_channel(mpi.rank)
+    chan.call("stats_add", "drained_messages", len(mpi.cache))
+    ckpt_dir, store_root = chan.call("ckpt_info")
+    image = RankImage(rank=mpi.rank, n_ranks=job.n, step_idx=step,
+                      mpi_state=mpi.snapshot(),
+                      app_state=pickle.dumps(state))
+    entry = save_rank_image(Path(ckpt_dir), image,
+                            store=ChunkStore(store_root))
+    chan.call("ckpt_entry", mpi.rank, entry, step)
+    coord.ack_snapshot(mpi.rank, generation=mpi.generation)
+    phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)
+    if phase == PHASE_EXIT:
+        return True
+    coord.resume_running(mpi.rank)
+    coord.wait_phase_alive(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
+    return False

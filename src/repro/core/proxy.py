@@ -66,6 +66,13 @@ class ProxyChannel:
     Threading contract: exactly ONE plugin thread issues commands and
     exactly ONE proxy thread serves them, so at most one reply is ever
     outstanding and the response queue needs no correlation ids.
+
+    Transport of the frames themselves is pluggable through two hooks —
+    ``_push(frame)`` and ``_await_reply()``: this base class rides a pair
+    of queues to an in-process proxy thread; the PROCESS world's
+    SocketChannel (core/procworld.py) overrides the hooks to ship the
+    identical frames over a socket.  Batching, MAX_BATCH auto-flush, and
+    the stats contract live HERE, once.
     """
 
     def __init__(self) -> None:
@@ -95,7 +102,7 @@ class ProxyChannel:
         batch, self._pending = self._pending, []
         self.stats["async_batches"] += 1
         self.stats["commands"] += len(batch)
-        self.requests.put((PROTOCOL_VERSION, batch, False))
+        self._push((PROTOCOL_VERSION, batch, False))
 
     # ---- replied path ------------------------------------------------------
     def call(self, cmd: str, *args) -> Any:
@@ -108,8 +115,12 @@ class ProxyChannel:
         self._pending = []
         self.stats["round_trips"] += 1
         self.stats["commands"] += len(batch)
-        self.requests.put((PROTOCOL_VERSION, batch, True))
+        self._push((PROTOCOL_VERSION, batch, True))
         return self._await_reply()
+
+    # ---- frame transport hooks (overridden by the socket channel) ----------
+    def _push(self, frame: tuple) -> None:
+        self.requests.put(frame)
 
     def _await_reply(self):
         """Wait for the single outstanding reply.  The timeout+`closed`
@@ -177,24 +188,26 @@ class ProxyChannel:
                 and self.responses.empty())
 
 
-class MPIProxy(threading.Thread):
-    """Active-library process stand-in (thread; see DESIGN.md §2 assumption
-    notes).  Holds ONLY reconstructible state."""
+class ProxyCore:
+    """The transport-owning half of the proxy, factored out of the serving
+    loop: per-destination sequence numbers, comm-addressing tables, and the
+    batch executor.  Two hosts drive it:
 
-    def __init__(self, rank: int, transport: Transport, channel: ProxyChannel):
-        super().__init__(daemon=True, name=f"mpi-proxy-{rank}")
+      * MPIProxy (below) — the thread-world proxy, fed by a ProxyChannel;
+      * the per-rank endpoint thread of a PROCESS world
+        (core/procworld.py) — fed the same versioned batches over a socket.
+
+    Everything here is reconstructible from the admin log; none of it is
+    ever serialized into a checkpoint."""
+
+    def __init__(self, rank: int, transport: Transport):
         self.rank = rank
         self.transport = transport
-        self.channel = channel
-        # hand the plugin side a non-consuming emptiness hint (the proxy
-        # owns the transport; the channel exposes only this closure)
-        channel.inbox_peek = (lambda: transport.peek(rank))
         self._seq: Dict[int, int] = {}          # dst -> next seq
         self._comms: Dict[int, Tuple[int, ...]] = {}
         self._registered = False
-        self._deferred_error: Optional[Exception] = None
 
-    # ---- command handlers (executed on the proxy thread) -------------------
+    # ---- command handlers (executed on the serving thread) -----------------
     def register_rank(self, rank: int, n_ranks: int) -> None:
         self._registered = True
 
@@ -217,8 +230,7 @@ class MPIProxy(threading.Thread):
     def _do_poll_all(self) -> List[Envelope]:
         return self.transport.poll_all(self.rank)
 
-    # ---- pump ---------------------------------------------------------------
-    def _execute_batch(self, cmds: List[Tuple[str, tuple]]) -> Any:
+    def execute_batch(self, cmds: List[Tuple[str, tuple]]) -> Any:
         """Run a batch in order; consecutive sends coalesce into ONE
         transport.send_many call (the writev-style fast path).  Returns the
         last command's value; raises on the first failing command."""
@@ -253,6 +265,23 @@ class MPIProxy(threading.Thread):
         if sends:
             self.transport.send_many(sends)
         return result
+
+
+class MPIProxy(threading.Thread):
+    """Active-library process stand-in (thread; see DESIGN.md §2 assumption
+    notes — the PROCESS world in core/procworld.py is the real-process
+    variant).  Holds ONLY reconstructible state, all of it in the core."""
+
+    def __init__(self, rank: int, transport: Transport, channel: ProxyChannel):
+        super().__init__(daemon=True, name=f"mpi-proxy-{rank}")
+        self.rank = rank
+        self.transport = transport
+        self.channel = channel
+        self.core = ProxyCore(rank, transport)
+        # hand the plugin side a non-consuming emptiness hint (the proxy
+        # owns the transport; the channel exposes only this closure)
+        channel.inbox_peek = (lambda: transport.peek(rank))
+        self._deferred_error: Optional[Exception] = None
 
     def run(self) -> None:
         try:
@@ -293,7 +322,7 @@ class MPIProxy(threading.Thread):
                     return
                 continue
             try:
-                result = self._execute_batch(cmds)
+                result = self.core.execute_batch(cmds)
                 if want_reply:
                     self.channel.responses.put((True, result))
             except Exception as e:  # surfaced now or at the next reply

@@ -15,7 +15,13 @@ transport — checkpoint under shm, restart under tcp is the paper's §7
 cross-implementation restart — and, since the elastic refactor, for ANY
 world shape: ``MPIJob.restart(ck, step_fn, init_fn, world_size=K,
 dead_ranks=(r,))`` shrinks, grows, or replaces members, remapping every
-world-rank reference in the images through the old→new map (DESIGN.md §8)."""
+world-rank reference in the images through the old→new map (DESIGN.md §8).
+
+Two execution substrates share this class: the THREAD world (ranks are
+threads, proxies are MPIProxy threads) and the PROCESS world
+(``transport="proc"``: ranks are forked OS processes behind per-rank
+socket proxy endpoints — core/procworld.py, DESIGN.md §10).  Checkpoints
+restore across substrates in both directions."""
 from __future__ import annotations
 
 import os
@@ -60,13 +66,28 @@ class MPIJob:
                                  timeout=coord_timeout)
         self.transport = make_transport(transport)
         self.transport.start(n_ranks)
-        self.channels = [ProxyChannel() for _ in range(n_ranks)]
-        self.proxies = [MPIProxy(r, self.transport, self.channels[r])
-                        for r in range(n_ranks)]
-        for p in self.proxies:
-            p.start()
-        self.mpis = [MPI(r, n_ranks, self.channels[r], self.coord)
-                     for r in range(n_ranks)]
+        if transport == "proc":
+            # PROCESS world (DESIGN.md §10): ranks are real OS processes
+            # forked at run() time; their proxies are per-rank endpoint
+            # threads in THIS process (core/procworld.py).  No in-process
+            # plugin objects exist — snapshots restore in the children.
+            from repro.core.procworld import ProcWorld
+            self.channels: List[ProxyChannel] = []
+            self.proxies: List[MPIProxy] = []
+            self.mpis: List[MPI] = []
+            self._proc = ProcWorld(self)
+        else:
+            self._proc = None
+            self.channels = [ProxyChannel() for _ in range(n_ranks)]
+            self.proxies = [MPIProxy(r, self.transport, self.channels[r])
+                            for r in range(n_ranks)]
+            for p in self.proxies:
+                p.start()
+            self.mpis = [MPI(r, n_ranks, self.channels[r], self.coord)
+                         for r in range(n_ranks)]
+        #: proc mode: rank -> remapped MPI snapshot, applied by the forked
+        #: child (admin replay runs against ITS endpoint, not in-process)
+        self._restore_snaps: Dict[int, dict] = {}
         self.states: List[Any] = [None] * n_ranks
         self.start_steps = [0] * n_ranks
         self.results: List[Any] = [None] * n_ranks
@@ -185,13 +206,28 @@ class MPIJob:
             f"rank {rank}: proxy channel not empty at snapshot"
         coord.note_empty_channel(rank)
         # messages that crossed the checkpoint boundary (restored from cache)
-        coord.stats["drained_messages"] += len(mpi.cache)
+        coord.stat_add("drained_messages", len(mpi.cache))
         # SNAPSHOT
         image = RankImage(rank=rank, n_ranks=self.n, step_idx=step,
                           mpi_state=mpi.snapshot(),
                           app_state=pickle.dumps(state))
-        store = self._ckpt_chunks
-        entry = save_rank_image(self._ckpt_dir, image, store=store)
+        entry = save_rank_image(self._ckpt_dir, image,
+                                store=self._ckpt_chunks)
+        self._commit_rank_entry(rank, entry, step)
+        coord.ack_snapshot(rank, generation=mpi.generation)
+        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
+        if phase == PHASE_EXIT:
+            return True
+        coord.resume_running(rank)
+        self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
+        return False
+
+    def _commit_rank_entry(self, rank: int, entry: dict, step: int) -> None:
+        """Record one rank's image entry; the LAST entry commits the
+        manifest.  Shared by the thread world (rank threads land here
+        directly) and the process world (children write their own images;
+        their endpoints call this — agreement and the commit stay with the
+        parent, DESIGN.md §10)."""
         with self._ckpt_lock:
             self._ckpt_meta[rank] = entry
             if len(self._ckpt_meta) == self.n:
@@ -202,14 +238,7 @@ class MPIJob:
                 commit_manifest(self._ckpt_dir, self._ckpt_meta, meta=meta,
                                 generation=self.coord.generation,
                                 chunk_dir=os.path.relpath(
-                                    store.root, self._ckpt_dir))
-        coord.ack_snapshot(rank, generation=mpi.generation)
-        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
-        if phase == PHASE_EXIT:
-            return True
-        coord.resume_running(rank)
-        self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
-        return False
+                                    self._ckpt_chunks.root, self._ckpt_dir))
 
     def _wait_phase_alive(self, rank: int, *phases: str) -> str:
         """wait_phase that keeps the heartbeat beating: a rank parked here
@@ -232,6 +261,8 @@ class MPIJob:
         # construction and run() must not count against the first pings
         for r in range(self.n):
             self.heartbeat.reset(r)
+        if self._proc is not None:
+            return self._proc.run(n_steps, timeout)
         self._threads = [
             threading.Thread(target=self._rank_main, args=(r, n_steps),
                              daemon=True, name=f"rank-{r}")
@@ -251,8 +282,10 @@ class MPIJob:
     # ------------------------------------------------------------ checkpoint
     def checkpoint(self, ckpt_dir: str | Path, resume: bool = True) -> None:
         """Asynchronous checkpoint request (any thread, any time)."""
-        if self.coord.all_finished() and all(not t.is_alive()
-                                             for t in self._threads):
+        over = (self._proc.finished() if self._proc is not None
+                else self.coord.all_finished()
+                and all(not t.is_alive() for t in self._threads))
+        if over:
             raise RuntimeError("job already finished; nothing to checkpoint")
         self._ckpt_dir = Path(ckpt_dir)
         self._ckpt_chunks = ChunkStore(self.ckpt_store
@@ -289,11 +322,24 @@ class MPIJob:
         heartbeat flags a dead rank (seconds, not Recv-timeout minutes)."""
         self.coord.abort(reason)
 
+    def rank_pids(self) -> Dict[int, int]:
+        """PID-based membership view of a PROCESS world (rank -> pid of
+        its live OS process); empty for thread worlds.  This is what real
+        fault injection targets: ``os.kill(job.rank_pids()[r], SIGKILL)``
+        (distributed/faults.kill_rank_process)."""
+        return self._proc.pids() if self._proc is not None else {}
+
     def stop(self) -> None:
         """Deterministic, leak-free teardown: stop every proxy (a
         fire-and-forget STOP — see MPIProxy.stop for why it must not be
         replied), JOIN the proxy threads, then stop the transport (which
-        joins its own reader/switchboard threads)."""
+        joins its own reader/switchboard threads).  A process world
+        additionally SIGTERM -> SIGKILLs any rank process still alive and
+        reaps its exit code — no orphans survive a stop()."""
+        if self._proc is not None:
+            self._proc.stop()
+            self.transport.stop()
+            return
         for p in self.proxies:
             try:
                 p.stop()
@@ -362,7 +408,13 @@ class MPIJob:
             if reshaped:
                 snap = remap_mpi_snapshot(snap, rank_map, r, new_n,
                                           clone=r >= len(survivors))
-            job.mpis[r].restore(snap)
+            if job._proc is not None:
+                # process world: the snapshot restores INSIDE the forked
+                # child (admin replay must run against the child's own
+                # endpoint); stash it for fork-time inheritance
+                job._restore_snaps[r] = snap
+            else:
+                job.mpis[r].restore(snap)
             job.states[r] = pickle.loads(img.app_state)
             job.start_steps[r] = img.step_idx
         job._restored = True

@@ -38,6 +38,43 @@ from typing import Deque, Dict, List, Optional, Sequence, Type
 from repro.core.messages import Envelope
 
 
+# ------------------------------------------------------------ frame helpers
+# One framing for every socket in the system: 8-byte big-endian length +
+# body.  The switchboard and TcpTransport clients frame pickled Envelopes
+# this way, and the PROCESS world (core/procworld.py) reuses the exact same
+# framing for the child <-> per-rank-endpoint wire protocol batches.
+
+def read_exact(conn: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly `n` bytes; None on EOF/error (a torn or half-written
+    frame — e.g. the peer was SIGKILLed mid-send — reads as EOF, never as
+    a short garbage frame)."""
+    buf = b""
+    while len(buf) < n:
+        try:
+            chunk = conn.recv(n - len(buf))
+        except socket.timeout:
+            continue
+        except (OSError, ConnectionError):
+            return None
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def read_frame(conn: socket.socket) -> Optional[bytes]:
+    """One length-prefixed frame body, or None on EOF/torn frame."""
+    hdr = read_exact(conn, 8)
+    if hdr is None:
+        return None
+    (ln,) = struct.unpack("!q", hdr)
+    return read_exact(conn, ln)
+
+
+def write_frame(conn: socket.socket, body: bytes) -> None:
+    conn.sendall(struct.pack("!q", len(body)) + body)
+
+
 class Transport:
     """Reliable, per-(src,dst)-ordered message fabric."""
 
@@ -271,7 +308,7 @@ class _Switchboard(threading.Thread):
                 continue
             except OSError:          # server socket closed by shutdown()
                 return
-            hdr = self._read_exact(conn, 4)
+            hdr = read_exact(conn, 4)
             if hdr is None:
                 conn.close()
                 continue
@@ -285,11 +322,7 @@ class _Switchboard(threading.Thread):
     def _pump(self, conn: socket.socket) -> None:
         try:
             while not self._halt.is_set():
-                hdr = self._read_exact(conn, 8)
-                if hdr is None:
-                    return
-                (ln,) = struct.unpack("!q", hdr)
-                body = self._read_exact(conn, ln)
+                body = read_frame(conn)
                 if body is None:
                     return
                 env = Envelope.from_bytes(body)
@@ -302,20 +335,7 @@ class _Switchboard(threading.Thread):
         except (OSError, ConnectionError):
             return
 
-    @staticmethod
-    def _read_exact(conn, n) -> Optional[bytes]:
-        buf = b""
-        while len(buf) < n:
-            try:
-                chunk = conn.recv(n - len(buf))
-            except socket.timeout:
-                continue
-            except (OSError, ConnectionError):
-                return None
-            if not chunk:
-                return None
-            buf += chunk
-        return buf
+
 
     def shutdown(self, join_timeout: float = 5.0) -> None:
         self._halt.set()
@@ -374,11 +394,7 @@ class TcpTransport(Transport):
 
     def _reader(self, rank: int, s: socket.socket) -> None:
         while not self._halt.is_set():
-            hdr = _Switchboard._read_exact(s, 8)
-            if hdr is None:
-                return
-            (ln,) = struct.unpack("!q", hdr)
-            body = _Switchboard._read_exact(s, ln)
+            body = read_frame(s)
             if body is None:
                 return
             self._inbox[rank].put(Envelope.from_bytes(body))
@@ -454,3 +470,19 @@ class TcpTransport(Transport):
                 out.append(q.get_nowait())
             except queue.Empty:
                 return out
+
+
+@register_transport
+class ProcTransport(ShmTransport):
+    """Parent-side fabric of the PROCESS world (core/procworld.py).
+
+    Selecting ``transport="proc"`` on an MPIJob runs every rank as a real
+    OS process.  The cross-process hop is the child's socket to its
+    per-rank proxy endpoint in the launcher process (framed with
+    ``read_frame``/``write_frame`` above, exactly like TcpTransport
+    frames); endpoint threads then route envelopes between ranks through
+    THIS queue fabric.  Structurally: the child owns only the plugin, the
+    launcher owns every transport byte — the paper's proxy split enforced
+    by a real address-space boundary instead of a thread convention."""
+
+    name = "proc"

@@ -22,6 +22,8 @@ from the dead rank.  Here:
 from __future__ import annotations
 
 import inspect
+import os
+import signal
 import threading
 import time
 from pathlib import Path
@@ -30,6 +32,32 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.coordinator import Membership
+from repro.core.procworld import RankProcessDied  # noqa: F401  (re-export:
+# the driver-facing "a rank's OS process vanished" error lives with the
+# process world but is detected and consumed here)
+
+
+def kill_rank_process(job, rank: int, sig: int = signal.SIGKILL) -> int:
+    """REAL fault injection for process worlds: signal the rank's OS
+    process (default SIGKILL — no cleanup, no goodbye; the endpoint sees a
+    torn socket and records the death immediately).  Returns the pid.
+
+    Raises ValueError for thread worlds, unknown ranks, or ranks whose
+    process already exited — a thread-world test wanting a deterministic
+    death raises RankKilled from the step instead.
+
+    The liveness check and the kill cannot be atomic with plain pids (the
+    victim could die and its pid be recycled in between); the check runs
+    immediately before the signal to keep that window at a few
+    microseconds.  Closing it fully needs pidfds (Linux >= 5.3) — fine
+    for a fault injector aimed at our OWN just-verified-alive children."""
+    proc = job._proc._procs.get(rank) if job._proc is not None else None
+    if proc is None or proc.pid is None or not proc.is_alive():
+        raise ValueError(
+            f"rank {rank} has no live OS process (thread world, not "
+            f"launched, or already exited); rank_pids={job.rank_pids()}")
+    os.kill(proc.pid, sig)
+    return proc.pid
 
 
 class HeartbeatMonitor:

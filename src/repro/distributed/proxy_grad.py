@@ -1,6 +1,6 @@
 """Data-parallel training over the paper's proxy-MPI core.
 
-Each MPI rank holds a full model replica (numpy/jax-on-CPU); gradients are
+Each MPI rank holds a full model replica (pure numpy); gradients are
 averaged with the RING allreduce implemented on MPI_Send/MPI_Recv through
 the proxies (repro.core.api.Allreduce) — so a checkpoint can land while
 gradient chunks are mid-ring, exercising the paper's in-flight drain on a
@@ -8,22 +8,24 @@ REAL training workload.  Optional int8 gradient compression with error
 feedback halves ring traffic (compressed chunks travel the ring;
 reduction happens in fp32 after dequantize).
 
+Pure numpy on purpose: rank applications run as FORKED OS processes in
+the process world (core/procworld.py), and XLA's runtime state is not
+fork-safe — the analytic gradient of this 2-layer MLP is exact, bitwise
+deterministic across thread and process substrates, and needs no jit.
+
 This is the integration point between the paper's contribution and the
 training framework: tests assert bitwise-identical resume, including
-restarts onto the other transport.
+restarts onto the other transport AND onto the other execution substrate.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import MPI
 from repro.distributed.compression import (ErrorFeedback, dequantize_int8,
                                            quantize_int8)
-from repro.optim.adamw import AdamWCfg
 
 
 def make_mlp_model(din: int, dh: int, dout: int):
@@ -36,19 +38,20 @@ def make_mlp_model(din: int, dh: int, dout: int):
             "w2": (rng.standard_normal((dh, dout)) / np.sqrt(dh)).astype(np.float32),
         }
 
-    @jax.jit
-    def loss_fn(params, x, y):
-        h = jnp.tanh(x @ params["w1"])
-        p = h @ params["w2"]
-        return jnp.mean((p - y) ** 2)
-
-    grad_fn = jax.jit(jax.grad(loss_fn))
-
     def loss_and_grad(params, batch):
+        # forward: loss = mean((tanh(x@w1)@w2 - y)^2); backward by hand
         x, y = batch
-        l = float(loss_fn(params, x, y))
-        g = jax.tree.map(np.asarray, grad_fn(params, x, y))
-        return l, g
+        h = np.tanh(x @ params["w1"])
+        p = h @ params["w2"]
+        r = p - y
+        loss = float(np.mean(r * r))
+        gp = (np.float32(2.0) / np.float32(r.size)) * r
+        gw2 = h.T @ gp
+        gh = gp @ params["w2"].T
+        gz = gh * (np.float32(1.0) - h * h)       # tanh' = 1 - tanh^2
+        gw1 = x.T @ gz
+        return loss, {"w1": gw1.astype(np.float32),
+                      "w2": gw2.astype(np.float32)}
 
     return init, loss_and_grad
 
@@ -62,8 +65,9 @@ def make_batch(seed: int, step: int, rank: int, n: int, din: int, dout: int):
     rng = np.random.default_rng((seed, step, rank))
     x = rng.standard_normal((n, din)).astype(np.float32)
     w = np.linspace(-1, 1, din * dout, dtype=np.float32).reshape(din, dout)
-    y = x @ w + 0.01 * rng.standard_normal((n, dout)).astype(np.float32)
-    return jnp.asarray(x), jnp.asarray(y)
+    y = (x @ w + np.float32(0.01)
+         * rng.standard_normal((n, dout)).astype(np.float32))
+    return x, y
 
 
 def allreduce_grads(mpi: MPI, grads: Dict[str, np.ndarray],

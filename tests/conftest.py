@@ -1,7 +1,45 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see ONE
-device; only launch/dryrun.py (its own subprocess) forces 512."""
+"""Shared fixtures + the CI transport/fault matrix knobs.
+
+NOTE: no XLA_FLAGS here — smoke tests must see ONE device; only
+launch/dryrun.py (its own subprocess) forces 512.
+
+REPRO_TRANSPORT=<shm|tcp|inproc|proc> forces every MPIJob — construction
+AND restart — onto one substrate: that is one leg of the CI transport
+matrix.  Tests that pin ``transport="proc"`` explicitly keep it (there the
+process world itself is under test).  The ``xt`` fixture maps an expected
+transport name to the effective one, so manifest/metadata assertions stay
+truthful under forcing.
+
+Per-test timeout: pytest-timeout when installed (CI installs it); a
+SIGALRM fallback otherwise — a hung or orphaned rank process fails the
+test instead of stalling the runner for the job timeout.  A session-end
+fixture reaps any leaked rank processes.
+"""
+import contextlib
+import os
+import signal
+import threading
+
 import numpy as np
 import pytest
+
+_FORCED = os.environ.get("REPRO_TRANSPORT") or None
+_TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "120"))
+_PIN = threading.local()
+
+
+@contextlib.contextmanager
+def exact_transports():
+    """Escape hatch from the matrix knob: inside this context MPIJob gets
+    EXACTLY the transport the test asked for.  Used by cross-substrate
+    parity tests whose thread-world reference half must not be rewritten
+    into a trivially-true proc-vs-proc comparison.  A no-op when no
+    override is installed."""
+    _PIN.on = True
+    try:
+        yield
+    finally:
+        _PIN.on = False
 
 
 @pytest.fixture(scope="session")
@@ -9,5 +47,105 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def xt():
+    """Effective transport name under the matrix knob: ``xt("shm")`` is
+    "shm" normally, but the forced transport when REPRO_TRANSPORT is set
+    (an explicit "proc" is never rewritten)."""
+    def _eff(name: str) -> str:
+        if name == "proc":
+            return name
+        return _FORCED or name
+    return _eff
+
+
+def _install_transport_override():
+    from repro.core.runtime import MPIJob
+    from repro.core.transport import TRANSPORTS
+    if _FORCED not in TRANSPORTS:
+        raise pytest.UsageError(
+            f"REPRO_TRANSPORT={_FORCED!r} is not a registered transport "
+            f"(have: {sorted(TRANSPORTS)})")
+
+    orig_init = MPIJob.__init__
+    orig_restart = MPIJob.restart.__func__
+
+    def forced_init(self, n_ranks, step_fn, init_fn, transport="shm", **kw):
+        if transport != "proc" and not getattr(_PIN, "on", False):
+            transport = _FORCED
+        orig_init(self, n_ranks, step_fn, init_fn, transport=transport, **kw)
+
+    def forced_restart(cls, ckpt_dir, step_fn, init_fn, transport="shm",
+                       **kw):
+        if transport != "proc" and not getattr(_PIN, "on", False):
+            transport = _FORCED
+        return orig_restart(cls, ckpt_dir, step_fn, init_fn,
+                            transport=transport, **kw)
+
+    MPIJob.__init__ = forced_init
+    MPIJob.restart = classmethod(forced_restart)
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-second integration tests")
+    config.addinivalue_line(
+        "markers", "timeout: per-test timeout (pytest-timeout)")
+    if _FORCED:
+        _install_transport_override()
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.pluginmanager.hasplugin("timeout"):
+        for item in items:
+            if item.get_closest_marker("timeout") is None:
+                item.add_marker(pytest.mark.timeout(_TIMEOUT))
+
+
+class ConftestTimeout(BaseException):
+    """Fallback-timeout interrupt.  A BaseException on purpose: the code
+    under test catches-and-retries plain TimeoutError (wait loops), which
+    would swallow the one-shot alarm and stall anyway."""
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    """SIGALRM fallback when pytest-timeout is absent: fail a hung test
+    after _TIMEOUT seconds instead of stalling the whole run (a rank
+    process that will never answer looks exactly like a hang)."""
+    if (item.config.pluginmanager.hasplugin("timeout")
+            or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise ConftestTimeout(
+            f"test exceeded {_TIMEOUT:g}s (conftest fallback timeout)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, _TIMEOUT)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _reap_rank_processes():
+    """Session-end reaper: no leaked rank process survives the test run.
+    job.stop() kills its own children; this catches whatever a crashed or
+    interrupted test left behind (and reaps zombies via join)."""
+    yield
+    import multiprocessing
+    leaked = multiprocessing.active_children()   # also joins finished ones
+    for p in leaked:
+        p.terminate()
+    for p in leaked:
+        p.join(2.0)
+        if p.is_alive():
+            p.kill()
+            p.join(5.0)
+    if leaked:
+        print(f"\n[conftest] reaped {len(leaked)} leaked rank process(es): "
+              + ", ".join(f"{p.name}(pid={p.pid})" for p in leaked))

@@ -41,7 +41,7 @@ def reference(n=3, steps=14):
 
 @pytest.mark.parametrize("t1,t2", [("shm", "tcp"), ("tcp", "shm"),
                                    ("shm", "shm")])
-def test_cross_transport_restart(tmp_path, t1, t2):
+def test_cross_transport_restart(tmp_path, xt, t1, t2):
     """Checkpoint under one 'MPI implementation', restart under another —
     the paper's §7 future-work claim."""
     n, steps = 3, 14
@@ -52,7 +52,7 @@ def test_cross_transport_restart(tmp_path, t1, t2):
     job.run(steps, timeout=60)
     job.stop()
     man = json.loads((tmp_path / "ck" / "MANIFEST.json").read_text())
-    assert man["meta"]["transport"] == t1
+    assert man["meta"]["transport"] == xt(t1)
 
     job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn, transport=t2)
     out = job2.run(steps, timeout=60)

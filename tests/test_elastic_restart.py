@@ -34,15 +34,17 @@ def _image_params(ckpt_dir, rank):
     (4, None, "shm", "tcp"),      # shrink: kill 1 of 4, restart at 3
     (2, 4, "tcp", "inproc"),      # grow: kill 1 of 2, restart at 4
 ])
-def test_kill_rank_reshape_resume(tmp_path, n0, target, t1, t2):
+def test_kill_rank_reshape_resume(tmp_path, xt, n0, target, t1, t2):
     steps, every = 14, 5
     init_fn, step_fn = make_dp_app()
     victim = n0 - 1
-    kill = {"armed": True}
 
     def killing_step(mpi, st, k):
-        if kill["armed"] and k == 8 and mpi.rank == victim:
-            kill["armed"] = False
+        # armed in membership generation 0 only: the post-reshape
+        # incarnation (generation 1) must run clean.  Generation-gated so
+        # the latch works identically when ranks are threads AND when they
+        # are forked OS processes (no shared mutable closure state).
+        if mpi.generation == 0 and k == 8 and mpi.rank == victim:
             raise RankKilled(f"rank {victim} killed at step {k}")
         return step_fn(mpi, st, k)
 
@@ -87,8 +89,8 @@ def test_kill_rank_reshape_resume(tmp_path, n0, target, t1, t2):
     assert elastic["new_world"] == new_world
     assert elastic["dead_ranks"] == [victim]
     assert elastic["rank_map"][str(victim)] is None
-    assert elastic["from_transport"] == t1
-    assert elastic["to_transport"] == t2
+    assert elastic["from_transport"] == xt(t1)
+    assert elastic["to_transport"] == xt(t2)
 
 
 def test_total_outage_restarts_full_world(tmp_path):
@@ -97,12 +99,12 @@ def test_total_outage_restarts_full_world(tmp_path):
     every image (a shrink-by-all would leave no survivors at all)."""
     steps, n = 12, 2
     init_fn, step_fn = make_dp_app()
-    kill = {"armed": True}
 
     def killing_step(mpi, st, k):
-        if kill["armed"] and k == 6:
-            if mpi.rank == n - 1:
-                kill["armed"] = False
+        # every rank of generation 0 dies at the same boundary; the
+        # generation gate disarms the restarted incarnation (works
+        # unchanged for thread ranks and forked process ranks)
+        if mpi.generation == 0 and k == 6:
             raise RankKilled(f"rank {mpi.rank} killed at step {k}")
         return step_fn(mpi, st, k)
 

@@ -49,9 +49,10 @@ def test_batched_send_ordering_per_src_dst(transport):
 
 def test_bulk_poll_amortizes_round_trips():
     """The receiver drains a burst with FAR fewer channel round trips than
-    messages — the point of CMD_POLL_ALL/CMD_POLL_WAIT."""
+    messages — the point of CMD_POLL_ALL/CMD_POLL_WAIT.  Measurements ride
+    in the returned state (a closure mutated inside a step would be lost
+    when the rank runs as a forked process)."""
     m = 100
-    stats = {}
 
     def step(mpi, st, k):
         if mpi.rank == 0:
@@ -63,19 +64,18 @@ def test_bulk_poll_amortizes_round_trips():
             t0 = mpi.channel.stats["round_trips"]
             for i in range(m):
                 mpi.Recv(source=0, tag=1)
-            stats["rt"] = mpi.channel.stats["round_trips"] - t0
+            st["rt"] = mpi.channel.stats["round_trips"] - t0
         return st
 
-    run_app(2, step)
-    assert stats["rt"] <= 10, \
-        f"{stats['rt']} round trips for {m} messages (bulk poll broken?)"
+    out, _ = run_app(2, step)
+    assert out[1]["rt"] <= 10, \
+        f"{out[1]['rt']} round trips for {m} messages (bulk poll broken?)"
 
 
 def test_sender_side_batching_round_trips():
     """The sender's burst costs ~m/MAX_BATCH queue hops and zero waiting
     round trips until the flush barrier."""
     m = 4 * MAX_BATCH
-    stats = {}
 
     def step(mpi, st, k):
         if mpi.rank == 0:
@@ -83,16 +83,16 @@ def test_sender_side_batching_round_trips():
             ab0 = mpi.channel.stats["async_batches"]
             for i in range(m):
                 mpi.Isend(b"x", dest=1, tag=1)
-            stats["rt"] = mpi.channel.stats["round_trips"] - rt0
-            stats["ab"] = mpi.channel.stats["async_batches"] - ab0
+            st["rt"] = mpi.channel.stats["round_trips"] - rt0
+            st["ab"] = mpi.channel.stats["async_batches"] - ab0
         else:
             for i in range(m):
                 mpi.Recv(source=0, tag=1)
         return st
 
-    run_app(2, step)
-    assert stats["rt"] == 0, "fire-and-forget sends must not round-trip"
-    assert stats["ab"] == m // MAX_BATCH
+    out, _ = run_app(2, step)
+    assert out[0]["rt"] == 0, "fire-and-forget sends must not round-trip"
+    assert out[0]["ab"] == m // MAX_BATCH
 
 
 # --------------------------------------------------------- deferred errors
@@ -232,7 +232,7 @@ def test_cross_transport_restart_mid_batch(tmp_path, t1, t2):
 # ------------------------------------------------ registry & transport fabric
 
 def test_transport_registry_lists_and_rejects():
-    assert {"shm", "tcp"} <= set(available_transports())
+    assert {"shm", "tcp", "inproc", "proc"} <= set(available_transports())
     with pytest.raises(ValueError, match="unknown transport"):
         make_transport("infiniband")
 
@@ -319,7 +319,9 @@ def test_job_stop_joins_all_threads(transport):
     for p in job.proxies:
         assert not p.is_alive(), "stop() must join proxy threads"
         assert p.channel.closed
-    if transport == "tcp":
+    # guard on the EFFECTIVE transport: the matrix knob may have rewritten
+    # the requested one (tcp internals only exist on a real tcp job)
+    if job.transport_name == "tcp":
         assert not job.transport.board.is_alive()
         for t in job.transport._readers:
             assert not t.is_alive()
