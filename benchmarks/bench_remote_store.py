@@ -1,0 +1,133 @@
+"""Cross-host chunk service: cold vs warm transfer fractions
+(DESIGN.md §11, BENCH_remote_store.json).
+
+The claim is INCREMENTAL TRANSFER, both directions, as deterministic
+ratios (wall times on a shared container are noise; bytes are not):
+
+  * save_upload_fraction_cold    — first save against an empty server
+    uploads everything (1.0);
+  * save_upload_fraction_warm    — with 3 of 16 leaves changed, the
+    batched HAS turns the rest into references: wire bytes uploaded /
+    wire bytes handled ~= 3/16;
+  * restore_fetch_fraction_cold  — a fresh host (empty cache dir)
+    fetches everything it reads (1.0);
+  * restore_fetch_fraction_warm  — the SAME host restoring the next
+    checkpoint fetches only the changed chunks (~3/16).
+
+Wall-clock rows (cold/warm restore, save) ride along for eyeballing.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, smoke_scale
+from repro.checkpoint import chunkstore
+from repro.checkpoint.chunkservice import ChunkServer
+from repro.checkpoint.manager import CheckpointManager
+
+N_LEAVES = 16
+CHANGED = 3
+
+
+def _state(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.random(shape, dtype=np.float32)
+            for i in range(N_LEAVES)}
+
+
+def run() -> None:
+    shape = smoke_scale((512, 512), (128, 128))
+    state = _state(shape)
+    nbytes = sum(x.nbytes for x in state.values())
+    import jax
+    tpl = jax.eval_shape(lambda: state)
+
+    with tempfile.TemporaryDirectory() as d:
+        d = Path(d)
+        server = ChunkServer(d / "server").start()
+        try:
+            store_a = chunkstore.open_store(
+                server.spec_for("bench", cache=d / "hostA"))
+            mgr_a = CheckpointManager(d / "root", async_write=False,
+                                      store=store_a)
+            t0 = time.perf_counter()
+            mgr_a.save(1, state)
+            t_cold_save = time.perf_counter() - t0
+            emit("remote_store/save_cold", t_cold_save * 1e6,
+                 f"MB={nbytes / 1e6:.0f};"
+                 f"uploaded={mgr_a.stats['last_bytes_uploaded']}")
+            emit("remote_store/save_upload_fraction_cold",
+                 mgr_a.remote_transfer_fraction(), "target=1.0")
+
+            # warm save: 3/16 leaves changed -> batched HAS references the
+            # rest, only the changed chunks ship
+            state2 = dict(state)
+            for i in range(CHANGED):
+                state2[f"w{i}"] = state[f"w{i}"] + 1.0
+            t0 = time.perf_counter()
+            mgr_a.save(2, state2)
+            t_warm_save = time.perf_counter() - t0
+            emit("remote_store/save_warm", t_warm_save * 1e6,
+                 f"changed={CHANGED}/{N_LEAVES};"
+                 f"uploaded={mgr_a.stats['last_bytes_uploaded']};"
+                 f"referenced_remote="
+                 f"{mgr_a.stats['last_bytes_referenced_remote']}")
+            emit("remote_store/save_upload_fraction_warm",
+                 mgr_a.remote_transfer_fraction(),
+                 f"target~={CHANGED / N_LEAVES:.4f}")
+
+            # cold restore: a "new host" with an empty cache dir reads the
+            # shared manifests and fetches every chunk it lacks
+            store_b = chunkstore.open_store(
+                server.spec_for("bench", cache=d / "hostB"))
+            mgr_b = CheckpointManager(d / "root", async_write=False,
+                                      store=store_b)
+            t0 = time.perf_counter()
+            out, _ = mgr_b.restore(tpl)
+            t_cold = time.perf_counter() - t0
+            fetched_cold = store_b.stats["bytes_fetched"]
+            read_cold = store_b.stats["bytes_read"]
+            emit("remote_store/restore_cold", t_cold * 1e6,
+                 f"fetched={fetched_cold}")
+            emit("remote_store/restore_fetch_fraction_cold",
+                 fetched_cold / read_cold if read_cold else 1.0,
+                 "target=1.0")
+            same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(jax.tree.leaves(state2),
+                                       jax.tree.leaves(out)))
+            emit("remote_store/cold_restore_bit_identical", float(same), "")
+
+            # warm restore: host A already holds every chunk of step 2 in
+            # its cache (it wrote them) -> zero fetches; and host B
+            # restoring a FURTHER incremental step fetches only the delta
+            state3 = dict(state2)
+            for i in range(CHANGED):
+                state3[f"w{i}"] = state2[f"w{i}"] + 1.0
+            mgr_a.save(3, state3)
+            f0, r0 = (store_b.stats["bytes_fetched"],
+                      store_b.stats["bytes_read"])
+            t0 = time.perf_counter()
+            out3, _ = mgr_b.restore(tpl)
+            t_warm = time.perf_counter() - t0
+            fetched = store_b.stats["bytes_fetched"] - f0
+            read = store_b.stats["bytes_read"] - r0
+            emit("remote_store/restore_warm", t_warm * 1e6,
+                 f"fetched={fetched};speedup_vs_cold_x="
+                 f"{t_cold / max(t_warm, 1e-9):.2f}")
+            emit("remote_store/restore_fetch_fraction_warm",
+                 fetched / read if read else 1.0,
+                 f"target~={CHANGED / N_LEAVES:.4f}")
+            same3 = all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(jax.tree.leaves(state3),
+                                        jax.tree.leaves(out3)))
+            emit("remote_store/warm_restore_bit_identical", float(same3), "")
+        finally:
+            server.stop()
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,10 @@ CI runners are noise):
     handled with 3 of 16 equal leaves changed); must stay <= the
     committed maximum.
   * chain/elastic bit-identity: must be exactly 1.0.
+  * remote-store transfer fractions (BENCH_remote_store.json): cold
+    save/restore through the chunk service move exactly 1.0 of their
+    bytes, warm ones at most the committed ceiling (~3/16), and both
+    restores are bit-identical.
 """
 from __future__ import annotations
 
@@ -77,10 +81,28 @@ def main() -> None:
               f"{fresh_frac:.4f} (ceiling {frac_max})")
 
     for name in ("ckpt_pipeline/chain_bit_identical",
-                 "ckpt_pipeline/elastic_chain_bit_identical"):
+                 "ckpt_pipeline/elastic_chain_bit_identical",
+                 "remote_store/cold_restore_bit_identical",
+                 "remote_store/warm_restore_bit_identical"):
         val = rows.get(name)
         if val is not None:
             check(name, val == 1.0, f"{val}")
+
+    remote = json.loads((REPO / "BENCH_remote_store.json").read_text())
+    rc = remote["contract"]
+    for name, ceiling in (
+            ("remote_store/save_upload_fraction_warm",
+             rc["save_upload_fraction_warm_max"]),
+            ("remote_store/restore_fetch_fraction_warm",
+             rc["restore_fetch_fraction_warm_max"])):
+        val = rows.get(name)
+        if val is not None:
+            check(name, val <= ceiling, f"{val:.4f} (ceiling {ceiling})")
+    for name in ("remote_store/save_upload_fraction_cold",
+                 "remote_store/restore_fetch_fraction_cold"):
+        val = rows.get(name)
+        if val is not None:
+            check(name, val == rc["cold_fractions_required"], f"{val}")
 
     missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
                               ("delta_write_fraction", fresh_frac))

@@ -16,8 +16,8 @@ import traceback
 from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_ckpt_pipeline,
-                        bench_drain, bench_proxy_overhead, bench_restart,
-                        bench_roofline)
+                        bench_drain, bench_proxy_overhead,
+                        bench_remote_store, bench_restart, bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
@@ -27,6 +27,7 @@ SUITES = {
     "proxy_overhead": bench_proxy_overhead.run,
     "allreduce": bench_allreduce.run,
     "ckpt_manager": bench_ckpt_manager.run,
+    "remote_store": bench_remote_store.run,
     "roofline": bench_roofline.run,
 }
 

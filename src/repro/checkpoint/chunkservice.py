@@ -1,0 +1,649 @@
+"""Cross-host chunk service — the networked half of the pluggable
+checkpoint store (DESIGN.md §11).
+
+The paper's proxy argument applied to STORAGE: checkpoint against a
+stable interface (``ChunkStoreBackend``), not an implementation (a host's
+filesystem).  PR 4 made every rank a process behind a socket; the chunk
+directory was the last host-local assumption.  This module removes it:
+
+  * ``ChunkServer`` — serves a backing ``ChunkStore`` over sockets,
+    reusing the process-world framing (``transport.read_frame`` /
+    ``write_frame``: 8-byte length + pickle) and the same versioned
+    command-batch shape the proxy wire protocol uses.  Commands:
+    HAS-many, PUT, GET(-many), REF, GC-live-set, SIZE, LIST, STATS.
+    A request frame is read IN FULL before anything is applied, and the
+    backing store commits with tmp-file + atomic rename — so a client
+    SIGKILLed mid-upload (a torn frame, read as EOF) can never leave a
+    partial chunk visible to ``has()``.
+  * ``RemoteChunkStore`` — the client backend.  Connects lazily and
+    re-connects after a fork (rank children each get their own socket),
+    one request/reply cycle per call under a lock.
+  * ``CachingChunkStore`` — a local ``ChunkStore`` cache layered over a
+    remote.  Saves upload only chunks the SERVER doesn't have (batched
+    HAS before upload); restores fetch only chunks the CACHE doesn't
+    have and pin them locally — a restart on a fresh host (empty cache
+    dir) transfers exactly the missing bytes.
+
+Coherence story: chunks are immutable and content-addressed, so cache
+and server can never disagree about a name's bytes — the only states are
+"absent" and "identical".  The asymmetric views follow from that:
+``has``/``has_many`` answer for the SERVER (the upload decision must be
+authoritative for other hosts' restores), ``get``/``sizes`` answer
+cache-first (reads want the nearest copy).  ``gc`` collects the CACHE
+only; reclaiming server space is an explicit ``gc_remote`` because a
+server may back several writers whose live sets the client can't see
+(server-side gc leases are the ROADMAP follow-on).
+
+Namespaces: a server partitions its root per namespace (one flat chunk
+dir each), so independent jobs sharing one server cannot observe each
+other through dedup or collect each other's chunks.
+
+Spec grammar (``chunkstore.open_store``):
+
+    remote://HOST:PORT[/NAMESPACE][?cache=DIR]
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import socket
+import struct
+import threading
+import urllib.parse
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.checkpoint.chunkstore import ChunkStore, ChunkStoreBackend
+from repro.core.transport import read_frame, write_frame
+
+#: versioned command batches, like the proxy wire protocol: a request is
+#: ``(CHUNK_PROTOCOL_VERSION, namespace, [(cmd, args), ...])`` and the
+#: reply is ``(True, [result, ...])`` or ``(False, exception)``
+CHUNK_PROTOCOL_VERSION = 1
+
+#: chunk names and namespaces are digest-shaped tokens; anything else is
+#: rejected server-side (a name is used as a path component)
+_SAFE_TOKEN = re.compile(r"^[A-Za-z0-9._-]+$")
+
+
+class ChunkServiceError(ConnectionError):
+    """Chunk-service wire failure (torn reply, refused connection,
+    protocol mismatch).  A ConnectionError subclass so every existing
+    ``except OSError`` around restore/validate treats an unreachable
+    server exactly like a missing local file."""
+
+
+def _check_token(tok: str, what: str) -> str:
+    # fullmatch (a trailing newline must not slip past a $-anchor) and no
+    # dot-only tokens: namespace "." would alias the server's default
+    # namespace and break cross-job isolation
+    if (not _SAFE_TOKEN.fullmatch(tok) or ".." in tok
+            or set(tok) == {"."}):
+        raise ValueError(f"illegal {what} {tok!r}")
+    return tok
+
+
+def parse_spec(spec: str) -> Tuple[str, int, str, Optional[str]]:
+    """``remote://host:port[/ns][?cache=DIR]`` -> (host, port, ns, cache).
+    The cache value is percent-decoded (make_spec quotes it — cache dirs
+    are user paths and may legally contain ``?``/``&``)."""
+    if not spec.startswith("remote://"):
+        raise ValueError(f"not a remote chunk-store spec: {spec!r}")
+    rest = spec[len("remote://"):]
+    cache: Optional[str] = None
+    if "?" in rest:
+        rest, query = rest.split("?", 1)
+        for kv in query.split("&"):
+            k, _, v = kv.partition("=")
+            if k == "cache" and v:
+                cache = urllib.parse.unquote(v)
+            else:
+                raise ValueError(f"unknown spec parameter {kv!r} in {spec!r}")
+    ns = ""
+    if "/" in rest:
+        rest, ns = rest.split("/", 1)
+        if ns:
+            _check_token(ns, "namespace")
+    host, _, port = rest.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"spec needs host:port, got {spec!r}")
+    return host, int(port), ns, cache
+
+
+def make_spec(host: str, port: int, namespace: str = "",
+              cache: Optional[str | Path] = None) -> str:
+    spec = f"remote://{host}:{port}"
+    if namespace:
+        spec += f"/{namespace}"
+    if cache:
+        spec += f"?cache={urllib.parse.quote(str(cache), safe='/')}"
+    return spec
+
+
+def store_from_spec(spec: str) -> ChunkStoreBackend:
+    host, port, ns, cache = parse_spec(spec)
+    remote = RemoteChunkStore(host, port, namespace=ns)
+    if cache is None:
+        return remote
+    return CachingChunkStore(cache, remote)
+
+
+# =========================================================================
+# server
+# =========================================================================
+
+class ChunkServer:
+    """Serve a directory of content-addressed chunks over sockets.
+
+    One accept thread + one thread per connection (rank children, writer
+    pools and restore pools each hold their own connection).  The backing
+    ``ChunkStore`` is thread-safe and its writes are atomic renames, so
+    concurrent PUTs of the same digest collapse to one file — the same
+    idempotence the local store gives racing processes.
+    """
+
+    def __init__(self, root: str | Path, host: str = "127.0.0.1",
+                 port: int = 0, advertise_host: Optional[str] = None):
+        self.root = Path(root)
+        self._stores: Dict[str, ChunkStore] = {}
+        self._lock = threading.Lock()
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen(64)
+        self._srv.settimeout(0.2)
+        bound_host, self.port = self._srv.getsockname()[:2]
+        # specs must carry an address CLIENTS can dial: a wildcard bind
+        # ("0.0.0.0"/"::") is not one — cross-host deployments pass the
+        # reachable name via advertise_host
+        self.host = advertise_host or bound_host
+        if self.host in ("0.0.0.0", "::"):
+            self.host = socket.gethostname()
+        self._halt = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._conns: List[socket.socket] = []
+        self._accept: Optional[threading.Thread] = None
+
+    @property
+    def spec(self) -> str:
+        return make_spec(self.host, self.port)
+
+    def spec_for(self, namespace: str = "",
+                 cache: Optional[str | Path] = None) -> str:
+        return make_spec(self.host, self.port, namespace, cache)
+
+    def backing(self, namespace: str = "") -> ChunkStore:
+        """The per-namespace backing store (the server's own view — tests
+        and ops poke it directly)."""
+        if namespace:
+            _check_token(namespace, "namespace")
+        with self._lock:
+            st = self._stores.get(namespace)
+            if st is None:
+                st = ChunkStore(self.root / namespace if namespace
+                                else self.root)
+                self._stores[namespace] = st
+        return st
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ChunkServer":
+        self._accept = threading.Thread(target=self._accept_loop,
+                                        daemon=True, name="chunk-server")
+        self._accept.start()
+        return self
+
+    def stop(self, join_timeout: float = 5.0) -> None:
+        self._halt.set()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        if self._accept is not None:
+            self._accept.join(join_timeout)
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            if t is not threading.current_thread():
+                t.join(join_timeout)
+
+    def __enter__(self) -> "ChunkServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------- serving
+    def _accept_loop(self) -> None:
+        while not self._halt.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:          # server socket closed by stop()
+                return
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 daemon=True, name="chunk-server-conn")
+            with self._lock:
+                self._conns.append(conn)
+                self._threads.append(t)
+            t.start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        """One connection: read a WHOLE request frame, apply, reply.  A
+        torn frame (client died mid-send) reads as EOF — the half-shipped
+        PUT is dropped on the floor, never applied."""
+        try:
+            while not self._halt.is_set():
+                blob = read_frame(conn)
+                if blob is None:
+                    return
+                try:
+                    version, ns, cmds = pickle.loads(blob)
+                    if version != CHUNK_PROTOCOL_VERSION:
+                        raise ChunkServiceError(
+                            f"client speaks chunk protocol v{version}, "
+                            f"server v{CHUNK_PROTOCOL_VERSION}")
+                    store = self.backing(ns)
+                    results = [self._execute(store, cmd, args)
+                               for cmd, args in cmds]
+                    reply = (True, results)
+                except Exception as e:      # noqa: BLE001 - shipped back
+                    reply = (False, e)
+                write_frame(conn, pickle.dumps(
+                    reply, protocol=pickle.HIGHEST_PROTOCOL))
+        except (OSError, pickle.PickleError):
+            return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            # prune: a long-lived server sheds each disconnected client
+            # (one socket per rank child / pool — they come and go)
+            me = threading.current_thread()
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+                if me in self._threads:
+                    self._threads.remove(me)
+
+    @staticmethod
+    def _execute(store: ChunkStore, cmd: str, args: tuple) -> Any:
+        if cmd == "has_many":
+            (names,) = args
+            out: Dict[str, int] = {}
+            for n in names:
+                _check_token(n, "chunk name")
+                if store.has(n):
+                    out[n] = store.size(n)
+            return out
+        if cmd == "put":
+            name, blob, raw = args
+            _check_token(name, "chunk name")
+            return store.put(name, blob, raw_bytes=raw)
+        if cmd == "get":
+            (name,) = args
+            _check_token(name, "chunk name")
+            return store.get(name)
+        if cmd == "get_many":
+            (names,) = args
+            out = {}
+            for n in names:
+                _check_token(n, "chunk name")
+                if store.has(n):
+                    out[n] = store.get(n)
+            return out
+        if cmd == "ref":
+            name, raw = args
+            store.ref(name, raw)
+            return None
+        if cmd == "gc":
+            (live,) = args
+            return store.gc(live)
+        if cmd == "size":
+            (name,) = args
+            _check_token(name, "chunk name")
+            return store.size(name)
+        if cmd == "list":
+            return sorted(store.list_chunks())
+        if cmd == "stats":
+            return dict(store.stats)
+        raise ValueError(f"unknown chunk-service command {cmd!r}")
+
+
+# =========================================================================
+# client backends
+# =========================================================================
+
+class RemoteChunkStore(ChunkStoreBackend):
+    """Socket client to a ``ChunkServer`` — a pure remote backend.
+
+    Fork-safe by construction: the connection is opened lazily and keyed
+    to the owning pid, so a forked rank child that inherited this object
+    transparently opens its OWN socket instead of interleaving frames on
+    the parent's.  One request/reply cycle at a time under a lock (the
+    writer pool serializes here; the server side fans out per
+    connection, so parallel clients scale, parallel calls on ONE client
+    pipeline through one socket)."""
+
+    wants_batched_has = True
+    root = None
+
+    def __init__(self, host: str, port: int, namespace: str = "",
+                 connect_timeout: float = 10.0):
+        self.host, self.port = host, int(port)
+        self.namespace = namespace
+        if namespace:
+            _check_token(namespace, "namespace")
+        self.connect_timeout = connect_timeout
+        self._sock: Optional[socket.socket] = None
+        self._pid: Optional[int] = None
+        self._lock = threading.RLock()
+        self.stats = {"chunks_written": 0, "chunks_referenced": 0,
+                      "bytes_written": 0, "bytes_referenced": 0,
+                      "chunks_removed": 0,
+                      "bytes_uploaded": 0, "bytes_fetched": 0,
+                      "round_trips": 0}
+
+    @property
+    def spec(self) -> str:
+        return make_spec(self.host, self.port, self.namespace)
+
+    # --------------------------------------------------------------- wire
+    def _conn(self) -> socket.socket:
+        if self._sock is None or self._pid != os.getpid():
+            try:
+                s = socket.create_connection(
+                    (self.host, self.port), timeout=self.connect_timeout)
+            except OSError as e:
+                raise ChunkServiceError(
+                    f"chunk server {self.host}:{self.port} unreachable: "
+                    f"{e}") from None
+            s.settimeout(None)
+            self._sock, self._pid = s, os.getpid()
+        return self._sock
+
+    def _request(self, cmds: Sequence[tuple]) -> list:
+        with self._lock:
+            s = self._conn()
+            try:
+                write_frame(s, pickle.dumps(
+                    (CHUNK_PROTOCOL_VERSION, self.namespace, list(cmds)),
+                    protocol=pickle.HIGHEST_PROTOCOL))
+                blob = read_frame(s)
+            except OSError as e:
+                self.close()
+                raise ChunkServiceError(
+                    f"chunk server {self.host}:{self.port} request "
+                    f"failed: {e}") from None
+            if blob is None:
+                self.close()
+                raise ChunkServiceError(
+                    f"chunk server {self.host}:{self.port} closed the "
+                    f"connection mid-reply")
+            self.stats["round_trips"] += 1
+            ok, payload = pickle.loads(blob)
+            if not ok:
+                raise payload
+            return payload
+
+    def _call(self, cmd: str, *args) -> Any:
+        return self._request([(cmd, args)])[0]
+
+    def close(self) -> None:
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+                self._pid = None
+
+    # ------------------------------------------------------------ backend
+    def has(self, name: str) -> bool:
+        return name in self._call("has_many", [name])
+
+    def has_many(self, names: Sequence[str]) -> Dict[str, int]:
+        return self._call("has_many", list(names))
+
+    def size(self, name: str) -> int:
+        return self._call("size", name)
+
+    def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
+        present = self.has_many(names)
+        return {n: present.get(n) for n in names}
+
+    def get(self, name: str) -> bytes:
+        blob = self._call("get", name)
+        self.stats["bytes_fetched"] += len(blob)
+        return blob
+
+    def get_many(self, names: Sequence[str]) -> Dict[str, bytes]:
+        out = self._call("get_many", list(names))
+        self.stats["bytes_fetched"] += sum(len(b) for b in out.values())
+        return out
+
+    def put(self, name: str, blob: bytes, raw_bytes: int = 0) -> bool:
+        wrote = self._call("put", name, bytes(blob), raw_bytes)
+        raw = raw_bytes or len(blob)
+        if wrote:
+            self.stats["chunks_written"] += 1
+            self.stats["bytes_written"] += raw
+            self.stats["bytes_uploaded"] += len(blob)
+        else:
+            self.stats["chunks_referenced"] += 1
+            self.stats["bytes_referenced"] += raw
+        return wrote
+
+    def ref(self, name: str, raw_bytes: int) -> None:
+        self._call("ref", name, raw_bytes)
+        self.stats["chunks_referenced"] += 1
+        self.stats["bytes_referenced"] += raw_bytes
+
+    def list_chunks(self) -> Set[str]:
+        return set(self._call("list"))
+
+    def gc(self, live: Iterable[str]) -> int:
+        """No-op (returns 0): a namespace may back several writers whose
+        live sets this client cannot see, so the AUTOMATIC per-save gc a
+        CheckpointManager runs must never reach the server — one
+        manager's live set would unlink every other writer's chunks.
+        Server reclamation is the explicit ``gc_remote`` (and server-side
+        gc leases are the ROADMAP follow-on)."""
+        return 0
+
+    def gc_remote(self, live: Iterable[str]) -> int:
+        """Explicit server-side GC-live-set — caller asserts it owns the
+        namespace."""
+        removed = self._call("gc", sorted(set(live)))
+        self.stats["chunks_removed"] += removed
+        return removed
+
+    def server_stats(self) -> dict:
+        return self._call("stats")
+
+
+class CachingChunkStore(ChunkStoreBackend):
+    """A local chunk cache layered over a ``RemoteChunkStore``.
+
+    SAVE: ``has``/``has_many`` are answered by the SERVER (authoritative
+    — another host's restore must be able to fetch every referenced
+    chunk), one batched round trip per save; only missing chunks upload
+    (``bytes_uploaded``), present ones are referenced
+    (``bytes_referenced_remote``, server-side wire bytes).  Every put
+    also lands in the cache, so the writing host restores locally.
+
+    RESTORE: ``get`` is cache-first; a miss fetches from the server AND
+    pins the blob into the cache (``bytes_fetched``), so the next restore
+    of an overlapping manifest moves only what changed — the incremental
+    property, now across hosts.
+
+    GC collects the CACHE only (see module docstring for why); use
+    ``gc_remote`` to reclaim the server when the caller owns the
+    namespace."""
+
+    wants_batched_has = True
+
+    def __init__(self, cache_root: str | Path, remote: RemoteChunkStore):
+        self.cache = ChunkStore(cache_root)
+        self.remote = remote
+        self.root = self.cache.root
+        self._lock = threading.Lock()
+        #: {name: server clen} for names the server is KNOWN to hold, and
+        #: the set it is known NOT to hold (as of the last query) — both
+        #: primed by has_many so the per-chunk puts/refs of a save ride
+        #: the ONE batched round trip save_shards already paid.  A stale
+        #: negative only costs a redundant idempotent upload; a positive
+        #: can never go stale (chunks are immutable, gc here is
+        #: cache-only; gc_remote clears both).
+        self._known_remote: Dict[str, int] = {}
+        self._known_absent: set = set()
+        self.stats = {"chunks_written": 0, "chunks_referenced": 0,
+                      "bytes_written": 0, "bytes_referenced": 0,
+                      "chunks_removed": 0,
+                      "bytes_uploaded": 0, "bytes_referenced_remote": 0,
+                      "bytes_fetched": 0, "bytes_read": 0,
+                      "cache_hits": 0, "cache_misses": 0}
+
+    @property
+    def spec(self) -> str:
+        return make_spec(self.remote.host, self.remote.port,
+                         self.remote.namespace, self.cache.root)
+
+    @property
+    def fetch_spec(self) -> str:
+        return self.remote.spec      # portable: no writer-local cache dir
+
+    def close(self) -> None:
+        self.remote.close()
+
+    # -------------------------------------------------- presence (server)
+    def _presence(self, name: str) -> Optional[int]:
+        with self._lock:
+            if name in self._known_remote:
+                return self._known_remote[name]
+            if name in self._known_absent:
+                return None
+        got = self.remote.has_many([name])
+        with self._lock:
+            self._known_remote.update(got)
+            if name not in got:
+                self._known_absent.add(name)
+        return got.get(name)
+
+    def has(self, name: str) -> bool:
+        return self._presence(name) is not None
+
+    def has_many(self, names: Sequence[str]) -> Dict[str, int]:
+        with self._lock:
+            known = {n: self._known_remote[n] for n in names
+                     if n in self._known_remote}
+            unknown = [n for n in names
+                       if n not in known and n not in self._known_absent]
+        if unknown:
+            got = self.remote.has_many(unknown)
+            with self._lock:
+                self._known_remote.update(got)
+                self._known_absent.update(n for n in unknown
+                                          if n not in got)
+            known.update(got)
+        return known
+
+    # ----------------------------------------------------- reads (cache)
+    def size(self, name: str) -> int:
+        if self.cache.has(name):
+            return self.cache.size(name)
+        clen = self._presence(name)
+        if clen is None:
+            raise FileNotFoundError(name)
+        return clen
+
+    def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
+        out: Dict[str, Optional[int]] = {}
+        misses = []
+        for n in names:
+            if self.cache.has(n):
+                out[n] = self.cache.size(n)
+            else:
+                misses.append(n)
+        if misses:
+            out.update(self.has_many(misses))
+        return {n: out.get(n) for n in names}
+
+    def get(self, name: str) -> bytes:
+        if self.cache.has(name):
+            blob = self.cache.get(name)
+            with self._lock:
+                self.stats["cache_hits"] += 1
+                self.stats["bytes_read"] += len(blob)
+            return blob
+        blob = self.remote.get(name)
+        self.cache.put(name, blob)          # pin: next restore is local
+        with self._lock:
+            self._known_remote.setdefault(name, len(blob))
+            self.stats["cache_misses"] += 1
+            self.stats["bytes_fetched"] += len(blob)
+            self.stats["bytes_read"] += len(blob)
+        return blob
+
+    # ---------------------------------------------------- writes (server)
+    def put(self, name: str, blob: bytes, raw_bytes: int = 0) -> bool:
+        raw = raw_bytes or len(blob)
+        if not self.cache.has(name):
+            self.cache.put(name, blob, raw_bytes=raw)
+        clen = self._presence(name)
+        if clen is not None:
+            with self._lock:
+                self.stats["chunks_referenced"] += 1
+                self.stats["bytes_referenced"] += raw
+                self.stats["bytes_referenced_remote"] += clen
+            return False
+        self.remote.put(name, blob, raw_bytes=raw)
+        with self._lock:
+            self._known_remote[name] = len(blob)
+            self._known_absent.discard(name)
+            self.stats["chunks_written"] += 1
+            self.stats["bytes_written"] += raw
+            self.stats["bytes_uploaded"] += len(blob)
+        return True
+
+    def ref(self, name: str, raw_bytes: int) -> None:
+        # counters only — no wire: a 13-of-16 incremental save must not
+        # pay 13 round trips to bump a server-side stat (pure
+        # RemoteChunkStore clients still forward REF; server stats then
+        # describe their traffic)
+        clen = self._presence(name)
+        with self._lock:
+            self.stats["chunks_referenced"] += 1
+            self.stats["bytes_referenced"] += raw_bytes
+            self.stats["bytes_referenced_remote"] += clen or 0
+
+    # -------------------------------------------------------------- admin
+    def list_chunks(self) -> Set[str]:
+        return self.cache.list_chunks() | self.remote.list_chunks()
+
+    def gc(self, live: Iterable[str]) -> int:
+        removed = self.cache.gc(live)
+        with self._lock:
+            self.stats["chunks_removed"] += removed
+        return removed
+
+    def gc_remote(self, live: Iterable[str]) -> int:
+        removed = self.remote.gc_remote(live)
+        with self._lock:
+            self._known_remote = {}
+            self._known_absent = set()
+        return removed

@@ -16,6 +16,12 @@ to the filename — no separate crc bookkeeping can drift out of sync.
 Writes are atomic (tmp file + rename) and idempotent: two writers racing
 on the same digest produce byte-identical content, so whichever rename
 lands last is indistinguishable from the first.
+
+Since PR 5 the store is PLUGGABLE (DESIGN.md §11): every consumer writes
+against the ``ChunkStoreBackend`` interface below, and ``open_store``
+resolves a *spec* — a directory path, a ``remote://host:port[/ns]``
+address (checkpoint/chunkservice.py), or an already-built backend — so a
+checkpoint can live behind a socket exactly like the MPI fabric does.
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ import hashlib
 import os
 import threading
 from pathlib import Path
-from typing import Iterable, Set
+from typing import Dict, Iterable, Optional, Sequence, Set
 
 
 def content_digest(buf) -> str:
@@ -31,7 +37,206 @@ def content_digest(buf) -> str:
     return hashlib.blake2b(buf, digest_size=16).hexdigest()
 
 
-class ChunkStore:
+def _fresh_stats() -> Dict[str, int]:
+    return {"chunks_written": 0, "chunks_referenced": 0,
+            "bytes_written": 0, "bytes_referenced": 0,
+            "chunks_removed": 0}
+
+
+class ChunkStoreBackend:
+    """The storage interface both checkpoint layers write against.
+
+    Implementations: ``ChunkStore`` (one local directory — below),
+    ``RemoteChunkStore`` (a socket client to a ``ChunkServer``) and
+    ``CachingChunkStore`` (local cache over a remote, fetch-on-miss) in
+    checkpoint/chunkservice.py.  All must be thread-safe: ``put`` runs
+    concurrently from writer-pool threads.
+
+    ``stats`` carries at least the counters in ``_fresh_stats`` —
+    ``bytes_written``/``bytes_referenced`` are in RAW (uncompressed)
+    bytes, the currency of ``delta_write_fraction``; networked backends
+    add wire-byte counters (``bytes_uploaded`` etc.) on top.
+    """
+
+    #: save pipelines group shard digests into ONE has_many round trip
+    #: before compressing/uploading when this is True (networked stores);
+    #: a local store answers has() with a stat call and skips the barrier
+    wants_batched_has = False
+
+    #: local directory the chunks land in, when there is one (used for the
+    #: manifest's relative ``chunk_dir``); None for a pure remote store
+    root: Optional[Path] = None
+
+    @property
+    def spec(self) -> str:
+        """Round-trippable description of this store: ``open_store(spec)``
+        in ANOTHER PROCESS builds an equivalent backend (the process world
+        hands it to rank children)."""
+        raise NotImplementedError
+
+    @property
+    def fetch_spec(self) -> str:
+        """The spec a THIRD-PARTY reader should use for fetch-on-miss —
+        what manifests record.  For a caching store this strips the
+        writer-host-local cache directory (another host must not try to
+        create/pin into the writer's path); defaults to ``spec``."""
+        return self.spec
+
+    def has(self, name: str) -> bool:
+        raise NotImplementedError
+
+    def size(self, name: str) -> int:
+        raise NotImplementedError
+
+    def get(self, name: str) -> bytes:
+        raise NotImplementedError
+
+    def put(self, name: str, blob: bytes, raw_bytes: int = 0) -> bool:
+        raise NotImplementedError
+
+    def ref(self, name: str, raw_bytes: int) -> None:
+        raise NotImplementedError
+
+    def list_chunks(self) -> Set[str]:
+        raise NotImplementedError
+
+    def gc(self, live: Iterable[str]) -> int:
+        raise NotImplementedError
+
+    # ---- batched queries (backends override with one-round-trip versions)
+    def has_many(self, names: Sequence[str]) -> Dict[str, int]:
+        """{name: stored size} for every name PRESENT — the upload
+        decision ("do I need to ship these bytes?")."""
+        out: Dict[str, int] = {}
+        for n in names:
+            if self.has(n):
+                out[n] = self.size(n)
+        return out
+
+    def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
+        """{name: readable size or None} — the validation view ("can a
+        restore through THIS store read the chunk?"); for a caching store
+        this consults the cache first, then the remote."""
+        return {n: (self.size(n) if self.has(n) else None) for n in names}
+
+    def close(self) -> None:
+        """Release any connection this backend holds (no-op for local)."""
+
+
+def open_store(spec, default=None) -> "ChunkStoreBackend":
+    """Resolve a store spec to a backend:
+
+      * an existing ``ChunkStoreBackend`` passes through untouched;
+      * ``"remote://host:port[/ns][?cache=DIR]"`` builds a
+        ``RemoteChunkStore`` (or ``CachingChunkStore`` with ``cache=``);
+      * anything else is a local directory -> ``ChunkStore``.
+
+    ``default`` is used when `spec` is None.  The CI remote-store leg
+    wraps THIS function (tests/conftest.py) to reroute local specs
+    through a shared ChunkServer — call it through the module
+    (``chunkstore.open_store``) so the override is seen.
+    """
+    if spec is None:
+        spec = default
+    if spec is None:
+        raise ValueError("no chunk store spec and no default")
+    if isinstance(spec, ChunkStoreBackend):
+        return spec
+    if isinstance(spec, str) and spec.startswith("remote://"):
+        from repro.checkpoint.chunkservice import store_from_spec
+        return store_from_spec(spec)
+    return ChunkStore(spec)
+
+
+class ChunkReader:
+    """Chunk access for ONE checkpoint manifest, in preference order:
+
+      1. an explicit ``store`` backend (a CheckpointManager's, or the
+         ``ckpt_store`` handed to an elastic restart) — covers
+         cache-then-fetch for caching backends;
+      2. the manifest's local ``chunk_dir`` (fast path: plain file io) —
+         ALSO consulted when the explicit store misses, so a
+         self-contained checkpoint written before a shared store was
+         adopted stays restorable;
+      3. on a miss everywhere else, a backend opened lazily from the
+         manifest's recorded ``store`` spec (fetch-on-miss: a reader on a
+         host that never saw this checkpoint pulls exactly the chunks it
+         lacks).
+
+    Works for BOTH manifest layers (tensor leaves and rank images) —
+    each records the same ``chunk_dir`` / ``store`` keys.
+    """
+
+    def __init__(self, ckpt_dir, man: dict,
+                 store: Optional[ChunkStoreBackend] = None):
+        self.dir = Path(ckpt_dir)
+        self.chunk_dir = man.get("chunk_dir", "chunks")
+        self.store = store
+        self._spec = man.get("store")
+        self._fallback: Optional[ChunkStoreBackend] = None
+
+    def _spec_store(self) -> Optional[ChunkStoreBackend]:
+        if self._fallback is None and self._spec:
+            self._fallback = open_store(self._spec)
+        return self._fallback
+
+    def path(self, name: str) -> Path:
+        return self.dir / self.chunk_dir / name
+
+    def get(self, name: str) -> bytes:
+        unreachable: Optional[ConnectionError] = None
+        if self.store is not None:
+            try:
+                return self.store.get(name)
+            except ConnectionError as e:
+                unreachable = e    # try local before giving up
+            except (OSError, KeyError):
+                pass       # fall through to the checkpoint's own chunks
+        try:
+            return self.path(name).read_bytes()
+        except FileNotFoundError:
+            if unreachable is not None:
+                # absent locally AND the store couldn't be asked: report
+                # the outage, not a phantom "chunk does not exist"
+                raise unreachable
+            fb = self._spec_store()
+            if fb is None:
+                raise
+            return fb.get(name)
+
+    def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
+        """{name: readable size or None}; one batched query against the
+        backend, the local directory covering whatever it misses (and
+        vice versa), the manifest's spec store last.  Raises
+        ConnectionError when a name is locally absent AND the backend
+        that should know about it is unreachable — "can't tell" must
+        never read as "definitely missing" (gc deletes on the latter)."""
+        out: Dict[str, Optional[int]] = {}
+        unreachable: Optional[ConnectionError] = None
+        if self.store is not None:
+            try:
+                out = dict(self.store.sizes(names))
+            except ConnectionError as e:
+                unreachable = e
+        misses = []
+        for n in names:
+            if out.get(n) is not None:
+                continue
+            try:
+                out[n] = self.path(n).stat().st_size
+            except OSError:
+                misses.append(n)
+        if misses:
+            fb = self._spec_store()     # last resort, like get()
+            if fb is not None:
+                out.update(fb.sizes(misses))
+                misses = [n for n in misses if out.get(n) is None]
+        if misses and unreachable is not None:
+            raise unreachable
+        return {n: out.get(n) for n in names}
+
+
+class ChunkStore(ChunkStoreBackend):
     """One flat directory of content-addressed chunk files.
 
     Thread-safe: ``put`` may be called concurrently from writer-pool
@@ -42,9 +247,11 @@ class ChunkStore:
     def __init__(self, root: str | Path):
         self.root = Path(root)
         self._lock = threading.Lock()
-        self.stats = {"chunks_written": 0, "chunks_referenced": 0,
-                      "bytes_written": 0, "bytes_referenced": 0,
-                      "chunks_removed": 0}
+        self.stats = _fresh_stats()
+
+    @property
+    def spec(self) -> str:
+        return str(self.root)
 
     # ------------------------------------------------------------------ io
     def path(self, name: str) -> Path:

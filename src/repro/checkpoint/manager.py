@@ -31,8 +31,8 @@ from typing import List, Optional
 
 import jax
 
+from repro.checkpoint import chunkstore
 from repro.checkpoint import serialization as ser
-from repro.checkpoint.chunkstore import ChunkStore
 from repro.checkpoint.resharding import restore_resharded
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
@@ -41,7 +41,8 @@ _STEP_RE = re.compile(r"^step_(\d+)$")
 class CheckpointManager:
     def __init__(self, root: str | Path, keep: int = 3,
                  async_write: bool = True, generation: int = 0,
-                 writer_threads: Optional[int] = None):
+                 writer_threads: Optional[int] = None,
+                 store=None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
@@ -49,8 +50,13 @@ class CheckpointManager:
         #: membership generation (elastic restart epoch) stamped into every
         #: manifest; the fault-tolerant driver bumps it on reshape
         self.generation = generation
-        #: content-addressed store shared by every step this manager writes
-        self.store = ChunkStore(self.root / "chunks")
+        #: content-addressed store shared by every step this manager
+        #: writes: a backend instance, a ``remote://`` spec, or a path
+        #: (default: a local directory under the manager root).  With a
+        #: caching backend, saves upload only chunks the server lacks and
+        #: restores fetch only chunks the cache lacks (DESIGN.md §11).
+        self.store = chunkstore.open_store(store,
+                                           default=self.root / "chunks")
         #: compress/write pool width (<=1 disables the parallel pipeline)
         self.writer_threads = (ser.DEFAULT_WORKERS if writer_threads is None
                                else writer_threads)
@@ -67,7 +73,15 @@ class CheckpointManager:
                       # incremental accounting, cumulative and per-save
                       "bytes_written": 0, "bytes_referenced": 0,
                       "last_bytes_written": 0, "last_bytes_referenced": 0,
-                      "chunks_gc_removed": 0}
+                      "chunks_gc_removed": 0,
+                      # cross-host transfer accounting (networked stores;
+                      # zero for local): wire bytes actually shipped vs
+                      # wire bytes the server already held
+                      "last_bytes_uploaded": 0,
+                      "last_bytes_referenced_remote": 0,
+                      # restore pipeline stage timings
+                      "restores": 0, "restore_io_s": 0.0,
+                      "restore_decompress_s": 0.0, "restore_device_s": 0.0}
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, meta: Optional[dict] = None) -> Path:
@@ -93,6 +107,8 @@ class CheckpointManager:
             t1 = time.time()
             w0 = self.store.stats["bytes_written"]
             r0 = self.store.stats["bytes_referenced"]
+            u0 = self.store.stats.get("bytes_uploaded", 0)
+            rr0 = self.store.stats.get("bytes_referenced_remote", 0)
             try:
                 ser.save_shards(ckpt_dir, host_state, meta=meta,
                                 store=self.store,
@@ -114,6 +130,10 @@ class CheckpointManager:
             self.stats["bytes_written"] = self.store.stats["bytes_written"]
             self.stats["bytes_referenced"] = \
                 self.store.stats["bytes_referenced"]
+            self.stats["last_bytes_uploaded"] = \
+                self.store.stats.get("bytes_uploaded", 0) - u0
+            self.stats["last_bytes_referenced_remote"] = \
+                self.store.stats.get("bytes_referenced_remote", 0) - rr0
             try:
                 self._gc()
             except BaseException as e:
@@ -148,6 +168,15 @@ class CheckpointManager:
                  + self.stats["last_bytes_referenced"])
         return self.stats["last_bytes_written"] / total if total else 1.0
 
+    def remote_transfer_fraction(self) -> float:
+        """Wire bytes uploaded / wire bytes handled for the LAST completed
+        save against a networked store (1.0 = the server had nothing,
+        ~0.0 = everything was already there).  1.0 for local stores, which
+        never transfer."""
+        total = (self.stats["last_bytes_uploaded"]
+                 + self.stats["last_bytes_referenced_remote"])
+        return self.stats["last_bytes_uploaded"] / total if total else 1.0
+
     # ---------------------------------------------------------------- restore
     def list_steps(self) -> List[int]:
         out = []
@@ -163,7 +192,7 @@ class CheckpointManager:
         a long history costs milliseconds, not a full re-read."""
         for step in reversed(self.list_steps()):
             d = self.root / f"step_{step:010d}"
-            if ser.validate(d):
+            if ser.validate(d, store=self.store):
                 return d
         return None
 
@@ -181,20 +210,27 @@ class CheckpointManager:
         guarantee).  An explicit `ckpt_dir` still raises."""
         if ckpt_dir is not None:
             state = restore_resharded(ckpt_dir, template, shardings,
-                                      mesh=mesh, rules=rules)
+                                      mesh=mesh, rules=rules,
+                                      store=self.store,
+                                      workers=self.writer_threads,
+                                      stats=self.stats)
+            self.stats["restores"] += 1
             return state, ser.load_manifest(ckpt_dir).get("meta", {})
         for step in reversed(self.list_steps()):
             d = self.root / f"step_{step:010d}"
-            if not ser.validate(d):
+            if not ser.validate(d, store=self.store):
                 continue
             try:
                 state = restore_resharded(d, template, shardings, mesh=mesh,
-                                          rules=rules)
+                                          rules=rules, store=self.store,
+                                          workers=self.writer_threads,
+                                          stats=self.stats)
             except (OSError, zlib.error, RuntimeError, ValueError):
                 # payload-level corruption the fast validate can't see
                 # (digest mismatch, truncated codec stream): skip this dir
                 self._known_valid.discard(d.name)
                 continue
+            self.stats["restores"] += 1
             return state, ser.load_manifest(d).get("meta", {})
         return None, None
 
@@ -212,8 +248,17 @@ class CheckpointManager:
         unlinked.  A chunk shared by a removed and a retained step survives
         (that is the point of content addressing)."""
         dirs = [self.root / f"step_{s:010d}" for s in self.list_steps()]
-        valid = [d for d in dirs
-                 if d.name in self._known_valid or ser.validate(d)]
+        try:
+            valid = [d for d in dirs
+                     if d.name in self._known_valid
+                     or ser.validate(d, store=self.store,
+                                     raise_unreachable=True)]
+        except ConnectionError:
+            # the chunk service can't be asked: every un-cached dir would
+            # read "invalid" and be DELETED on a transient outage — skip
+            # gc entirely this round (conservative, like an unreadable
+            # manifest below)
+            return
         self._known_valid = {d.name for d in valid}
         invalid = [d for d in dirs if d not in valid]
         excess = valid[:-self.keep] if self.keep else []
@@ -231,4 +276,7 @@ class CheckpointManager:
                 # unreadable manifest in a dir we chose to keep: be
                 # conservative and skip chunk gc entirely this round
                 return
-        self.stats["chunks_gc_removed"] += self.store.gc(live)
+        try:
+            self.stats["chunks_gc_removed"] += self.store.gc(live)
+        except ConnectionError:
+            pass    # service outage mid-gc: chunks persist, retry next round

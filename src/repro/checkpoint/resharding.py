@@ -14,31 +14,47 @@ from typing import Optional
 import jax
 import numpy as np
 
-from repro.checkpoint.serialization import (_leaf_paths, load_leaf,
+from repro.checkpoint.serialization import (_leaf_paths,
+                                            iter_restored_leaves,
                                             load_manifest)
 
 
 def restore_resharded(ckpt_dir: Path, template, shardings=None,
-                      verify: bool = True, mesh=None, rules=None):
+                      verify: bool = True, mesh=None, rules=None,
+                      store=None, workers=None, stats=None):
     """Restore `template`-shaped tree; if `shardings` (matching tree of
     NamedSharding) is given, every leaf is device_put with its NEW layout.
     Alternatively pass `mesh` (e.g. from ``elastic.choose_mesh``) plus the
     ``ShardingRules`` in `rules` and the layout is DERIVED per leaf for
     that arbitrary new mesh.  The saving mesh is irrelevant — only index
-    windows matter."""
+    windows matter.
+
+    Leaves stream through the bounded restore pool (`workers`, mirroring
+    the writer pool): device transfer of leaf k overlaps fetch+decompress
+    of the next leaves.  `store` routes chunk reads — a caching backend
+    fetches exactly the chunks its cache lacks (the fresh-host restart).
+    `stats` accumulates restore_io_s/restore_decompress_s/
+    restore_device_s."""
+    import time
     man = load_manifest(ckpt_dir)
     keys = [k for k, _ in _leaf_paths(template)]
     if shardings is None and mesh is not None:
         shardings = derive_shardings(template, mesh, rules)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(keys))
+    by_key = dict(zip(keys, shard_leaves))
     vals = []
-    for k, sh in zip(keys, shard_leaves):
-        host = load_leaf(ckpt_dir, man["leaves"][k], verify,
-                         codec=man.get("codec", "zstd"),
-                         chunk_dir=man.get("chunk_dir", "chunks"))
+    for k, host in iter_restored_leaves(ckpt_dir, man, keys, verify,
+                                        store=store, workers=workers,
+                                        stats=stats):
+        sh = by_key[k]
+        t0 = time.perf_counter()
         vals.append(jax.device_put(host, sh) if sh is not None
                     else jax.device_put(host))
+        if stats is not None:
+            stats["restore_device_s"] = \
+                stats.get("restore_device_s", 0.0) \
+                + (time.perf_counter() - t0)
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, vals)
 

@@ -2,37 +2,52 @@
 
 Each leaf of the state pytree is written as one chunk PER DEVICE SHARD
 (index-range-addressed, compressed), named by the digest of its
-uncompressed bytes and stored in a ``chunks/`` directory; a JSON manifest
-(v3) holds the tree structure, global shapes/dtypes and shard index maps,
+uncompressed bytes and stored through a ``ChunkStoreBackend`` — a local
+directory, or a socket chunk service with a local cache
+(checkpoint/chunkservice.py, DESIGN.md §11); a JSON manifest (v3) holds
+the tree structure, global shapes/dtypes and shard index maps,
 referencing chunks BY NAME.  A save where only a few leaves changed since
 the previous step writes only the changed chunks and hard-references the
 rest (DESIGN.md §9) — the incremental/differential checkpointing that
 dominates C/R cost at scale (MANA; Adam et al., PAPERS.md).
 
 The write path is a pipelined parallel writer: shard jobs
-(hash → store-hit check → compress → atomic write) run on a thread pool;
-zlib/zstd release the GIL during compression, and compression reads from
-memoryviews of the host snapshot (no ``tobytes`` copy).
+(hash → store-hit check → probe → compress → atomic write) run on a
+thread pool; zlib/zstd release the GIL during compression, and
+compression reads from memoryviews of the host snapshot (no ``tobytes``
+copy).  Multi-byte float shards are byte-transposed (shuffle filter)
+before the probe when that wins — recorded per chunk in the manifest and
+in the chunk extension.  Against a store that ``wants_batched_has``
+(networked), the hit checks for a whole save collapse into ONE
+``has_many`` round trip between the hash and compress stages.
 
-Restore reassembles logical arrays from chunks and lays them out for
-whatever mesh is current — the paper's cross-implementation restart at the
-tensor level.  Manifest v1 checkpoints (pre-chunk-store, one ``leaf*``
-file per shard with crc32s) are still readable.
+The restore path mirrors the writer: leaves are fetched + decompressed a
+bounded pool ahead of the consumer, so device transfer of leaf k overlaps
+fetch/decompress of leaf k+1; chunk reads go cache → local dir → the
+manifest's recorded store spec (fetch-on-miss).  Restore reassembles
+logical arrays from chunks and lays them out for whatever mesh is
+current — the paper's cross-implementation restart at the tensor level.
+Manifest v1 checkpoints (pre-chunk-store, one ``leaf*`` file per shard
+with crc32s) are still readable.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import time
 import zlib
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.checkpoint.chunkstore import ChunkStore, content_digest
+from repro.checkpoint import chunkstore
+from repro.checkpoint.chunkstore import (ChunkReader, ChunkStoreBackend,
+                                         content_digest)
 
 try:                                    # zstandard is optional: fall back to
     import zstandard                    # zlib so the core C/R path has no
@@ -68,7 +83,7 @@ DEFAULT_CODEC = "zstd" if HAVE_ZSTD else "zlib"
 
 #: default writer-pool width; compression releases the GIL so threads give
 #: real parallelism.  Kept modest: past the storage bandwidth more threads
-#: only add contention.
+#: only add contention.  The restore pool mirrors this.
 DEFAULT_WORKERS = min(8, os.cpu_count() or 1)
 
 #: adaptive compression: probe-compress this much of a chunk first, and if
@@ -80,9 +95,90 @@ DEFAULT_WORKERS = min(8, os.cpu_count() or 1)
 INCOMPRESSIBLE_SAMPLE = 1 << 16
 INCOMPRESSIBLE_RATIO = 0.9
 
+#: byte-shuffle probe economics, three gates in increasing cost:
+#:
+#:   1. TOP_BYTES — the filter's entire win is a low-entropy top
+#:      (sign+exponent) byte plane, so count distinct top bytes over the
+#:      sample (~20us) first; wide-range floats (many exponents in play:
+#:      unit-variance float32 weights measure 12-15 distinct) skip the
+#:      compression probe entirely and keep the raw path's zero cost.
+#:   2. the shuffled probe runs on a SMALLER sample (an eighth of the
+#:      plain one — the plane structure shows at any size);
+#:   3. the shuffled path is taken only when it beats the plain ratio by
+#:      a clear MARGIN — it costs a strided full-buffer copy plus a
+#:      compression pass over data the plain probe may have stored raw
+#:      for free.  Near-constant-exponent payloads (uniform/narrow-range
+#:      floats, most float64) probe 0.05-0.07+ better and pay off.
+BYTE_SHUFFLE_SAMPLE = 1 << 13
+BYTE_SHUFFLE_MARGIN = 0.04
+BYTE_SHUFFLE_TOP_BYTES = 8
+
 
 def _codec_ext(codec: str) -> str:
     return "zst" if codec == "zstd" else "zz"
+
+
+#: chunk extensions are authoritative at read time — a store can hold the
+#: same digest under several encodings and every one decodes to the same
+#: bytes.  Plain: ``zst``/``zz``; shuffled carries its byte width IN THE
+#: NAME (``zsts4``/``zzs8``), so a store hit can never be decoded with a
+#: width other than the one it was written with (the unshuffle inverts
+#: the writer's permutation and yields the original bytes whatever dtype
+#: the READER reassembles them into).
+_EXT_PLAIN = {"zst": "zstd", "zz": "zlib"}
+_EXT_SHUF = re.compile(r"^(zst|zz)s(\d+)$")
+
+
+# ------------------------------------------------------ byte-shuffle filter
+
+def _shuffle_itemsize(dtype) -> int:
+    """Element width when the byte-transpose filter applies (multi-byte
+    floats: sign/exponent bytes repeat across elements and compress well
+    once grouped; mantissa bytes stay random but now sit together), else
+    0.  bfloat16 is an extension dtype (kind 'V'), matched by name."""
+    if dtype.kind == "f" or dtype.name == "bfloat16":
+        return dtype.itemsize if dtype.itemsize > 1 else 0
+    return 0
+
+
+def _shuffled(buf, itemsize: int) -> bytes:
+    """Byte transpose: [e0b0 e0b1 e1b0 e1b1 ...] -> [all b0s][all b1s].
+    One copy, the same cost class as the ``tobytes`` the writer already
+    avoids elsewhere — paid only when the probe says it wins."""
+    a = np.frombuffer(buf, dtype=np.uint8)
+    return a.reshape(-1, itemsize).T.tobytes()
+
+
+def _unshuffled(raw: bytes, itemsize: int) -> bytes:
+    a = np.frombuffer(raw, dtype=np.uint8)
+    return a.reshape(itemsize, -1).T.tobytes()
+
+
+def _top_plane_narrow(buf, itemsize: int) -> bool:
+    """Cheap shuffle-probe gate: True when the top (sign+exponent on
+    little-endian) byte plane of the sample holds few distinct values —
+    the precondition for the transpose to win (BYTE_SHUFFLE_TOP_BYTES)."""
+    top = np.frombuffer(buf, dtype=np.uint8)[itemsize - 1::itemsize]
+    return np.unique(top).size <= BYTE_SHUFFLE_TOP_BYTES
+
+
+def decode_chunk(name: str, blob: bytes, codec: str) -> bytes:
+    """Chunk file bytes -> original uncompressed bytes, keyed by the chunk
+    extension (``raw``/``bin`` = stored as-is; ``zsts<N>``/``zzs<N>`` =
+    compressed, byte-shuffled with width N).  `codec` is only the
+    fallback for extensions outside the map (v3 manifests written before
+    the map)."""
+    ext = name.rsplit(".", 1)[-1]
+    if ext in ("raw", "bin"):
+        return blob
+    shuf = _EXT_SHUF.match(ext)
+    base = (_EXT_PLAIN[shuf.group(1)] if shuf
+            else _EXT_PLAIN.get(ext, codec))
+    _, dctx = _codec_pair(base)
+    raw = dctx.decompress(blob)
+    if shuf:
+        raw = _unshuffled(raw, int(shuf.group(2)))
+    return raw
 
 
 class HostArray:
@@ -158,26 +254,56 @@ def _as_buffer(data: np.ndarray):
         return data.view(np.uint8).data
 
 
-def _write_shard(store: ChunkStore, codec: str, ext: str, data: np.ndarray,
-                 idx: list, dev: int) -> Tuple[dict, tuple]:
-    """One pipeline job: hash -> store-hit check -> (probe ->) compress ->
-    write.  Runs on a pool thread; returns (manifest shard entry, stage
-    timings).  A chunk may land compressed (``.<codec ext>``) or raw
-    (``.raw``, incompressible payload) — the extension is authoritative at
-    read time, the digest covers the uncompressed bytes either way."""
+# ------------------------------------------------------------ write pipeline
+
+def _hit_candidates(digest: str, ext: str, itemsize: int) -> List[str]:
+    """Every name a previous save could have stored this content under
+    (order = preference).  The digest covers the UNSHUFFLED uncompressed
+    bytes, so all encodings of one content share one digest."""
+    names = [f"{digest}.{ext}s{itemsize}"] if itemsize else []
+    return names + [f"{digest}.{ext}", f"{digest}.raw"]
+
+
+def _shard_codec(name: str) -> Optional[str]:
+    """Per-chunk manifest codec record (e.g. ``"zstd+shuf4"``) for
+    filtered chunks; None when the manifest-level codec fully describes
+    the chunk.  Derived from the extension, which is authoritative."""
+    shuf = _EXT_SHUF.match(name.rsplit(".", 1)[-1])
+    return (f"{_EXT_PLAIN[shuf.group(1)]}+shuf{shuf.group(2)}"
+            if shuf else None)
+
+
+def _hash_shard(data: np.ndarray):
     t0 = time.perf_counter()
     buf = _as_buffer(data)
     digest = content_digest(buf)
+    return buf, digest, time.perf_counter() - t0
+
+
+def _finish_shard(store: ChunkStoreBackend, codec: str, ext: str,
+                  buf, digest: str, itemsize: int, idx: list, dev: int,
+                  presence: Optional[Dict[str, int]] = None
+                  ) -> Tuple[dict, tuple]:
+    """Store-hit check -> (probe ->) compress -> write for one hashed
+    shard.  `presence` ({name: clen}, from one batched has_many covering
+    the whole save) replaces per-chunk store.has round trips when the
+    backend is networked; None falls back to per-call checks."""
+    def entry(name: str, clen: int) -> dict:
+        e = {"chunk": name, "index": idx, "device": dev,
+             "clen": clen, "raw": buf.nbytes}
+        codec_rec = _shard_codec(name)
+        if codec_rec:
+            e["codec"] = codec_rec
+        return e
+
     t1 = time.perf_counter()
-    for ext_try in (ext, "raw"):         # incremental hit: reference only
-        name = f"{digest}.{ext_try}"
-        if store.has(name):
+    for name in _hit_candidates(digest, ext, itemsize):
+        clen = (presence.get(name) if presence is not None
+                else (store.size(name) if store.has(name) else None))
+        if clen is not None:             # incremental hit: reference only
             store.ref(name, buf.nbytes)
-            clen = store.size(name)
             t2 = t3 = time.perf_counter()
-            return ({"chunk": name, "index": idx, "device": dev,
-                     "clen": clen, "raw": buf.nbytes},
-                    (t1 - t0, t2 - t1, t3 - t2))
+            return entry(name, clen), (0.0, t2 - t1, t3 - t2)
     # compressor per job, created only when actually compressing: a
     # ZstdCompressor wraps one native context and is NOT safe for
     # concurrent use across pool threads (zlib's module function is)
@@ -185,23 +311,52 @@ def _write_shard(store: ChunkStore, codec: str, ext: str, data: np.ndarray,
     sample = (buf[:INCOMPRESSIBLE_SAMPLE]
               if buf.nbytes > INCOMPRESSIBLE_SAMPLE else buf)
     probe = cctx.compress(sample)
-    if len(probe) >= INCOMPRESSIBLE_RATIO * sample.nbytes:
+    shuf_ratio = None
+    if itemsize and buf.nbytes % itemsize == 0:
+        aligned = min(sample.nbytes, BYTE_SHUFFLE_SAMPLE)
+        aligned -= aligned % itemsize
+        if aligned and _top_plane_narrow(sample[:aligned], itemsize):
+            shuf_probe = cctx.compress(_shuffled(sample[:aligned],
+                                                 itemsize))
+            shuf_ratio = len(shuf_probe) / aligned
+    plain_ratio = len(probe) / sample.nbytes
+    whole = sample.nbytes == buf.nbytes
+    if (shuf_ratio is not None
+            and shuf_ratio < plain_ratio - BYTE_SHUFFLE_MARGIN
+            and shuf_ratio < INCOMPRESSIBLE_RATIO):
+        name = f"{digest}.{ext}s{itemsize}"
+        blob = cctx.compress(_shuffled(buf, itemsize))
+    elif plain_ratio >= INCOMPRESSIBLE_RATIO:
         name, blob = f"{digest}.raw", buf          # store uncompressed
-    elif sample.nbytes == buf.nbytes:
+    elif whole:
         name, blob = f"{digest}.{ext}", probe      # probe WAS the payload
     else:
         name, blob = f"{digest}.{ext}", cctx.compress(buf)
     t2 = time.perf_counter()
     store.put(name, blob, raw_bytes=buf.nbytes)
+    if presence is not None:
+        # a later duplicate-digest shard IN THIS SAVE references instead
+        # of re-compressing/re-uploading (the snapshot was pre-save)
+        presence[name] = len(blob)
     t3 = time.perf_counter()
-    return ({"chunk": name, "index": idx, "device": dev,
-             "clen": len(blob), "raw": buf.nbytes},
-            (t1 - t0, t2 - t1, t3 - t2))
+    return entry(name, len(blob)), (0.0, t2 - t1, t3 - t2)
+
+
+def _write_shard(store: ChunkStoreBackend, codec: str, ext: str,
+                 data: np.ndarray, idx: list, dev: int) -> Tuple[dict, tuple]:
+    """One single-pass pipeline job (local stores): hash -> store-hit
+    check -> (probe ->) compress -> write.  Runs on a pool thread;
+    returns (manifest shard entry, stage timings)."""
+    buf, digest, dh = _hash_shard(data)
+    itemsize = _shuffle_itemsize(data.dtype)
+    ent, (_, dc, dio) = _finish_shard(store, codec, ext, buf, digest,
+                                      itemsize, idx, dev)
+    return ent, (dh, dc, dio)
 
 
 def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None,
                 codec: Optional[str] = None,
-                store: Optional[ChunkStore] = None,
+                store: Optional[ChunkStoreBackend] = None,
                 workers: Optional[int] = None,
                 stats: Optional[dict] = None) -> dict:
     """Write every addressable shard of every leaf into the chunk store and
@@ -209,58 +364,88 @@ def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None,
 
     `store` defaults to ``ckpt_dir/chunks`` (a self-contained checkpoint);
     a CheckpointManager passes its root-level store so consecutive steps
-    share unchanged chunks.  `workers` sizes the compress/write pool
-    (<=1 runs inline).  `stats`, when given, accumulates per-stage timings
-    (hash_s/compress_s/io_s).
+    share unchanged chunks — possibly a remote/caching backend, whose spec
+    the manifest records for fetch-on-miss readers.  Against a store that
+    ``wants_batched_has`` the per-shard hit checks become one ``has_many``
+    round trip between the hash and compress stages.  `workers` sizes the
+    compress/write pool (<=1 runs inline).  `stats`, when given,
+    accumulates per-stage timings (hash_s/compress_s/io_s).
     """
     codec = codec or DEFAULT_CODEC
     _codec_pair(codec)                   # fail fast on an unknown codec
     ext = _codec_ext(codec)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     if store is None:
-        store = ChunkStore(ckpt_dir / "chunks")
+        store = chunkstore.open_store(None, default=ckpt_dir / "chunks")
     workers = DEFAULT_WORKERS if workers is None else workers
-    chunk_dir = os.path.relpath(store.root, ckpt_dir)
+    root = getattr(store, "root", None)
+    spec = getattr(store, "fetch_spec", "")
     leaves = _leaf_paths(state)
     manifest: Dict[str, Any] = {"version": 3, "codec": codec,
-                                "chunk_dir": chunk_dir, "leaves": {},
-                                "meta": meta or {}}
+                                "leaves": {}, "meta": meta or {}}
+    if root is not None:
+        manifest["chunk_dir"] = os.path.relpath(root, ckpt_dir)
+    if isinstance(spec, str) and spec.startswith("remote://"):
+        # fetch-on-miss: a reader without the writer's disk can rebuild
+        # chunk access from the manifest alone
+        manifest["store"] = spec
 
-    jobs: List[Tuple[str, Any]] = []     # (leaf_key, future-or-result)
-
-    def submit(pool, key, data, idx, dev):
-        if pool is None:
-            jobs.append((key, _write_shard(store, codec, ext, data, idx,
-                                           dev)))
+    shards: List[tuple] = []             # (leaf_key, data, idx, dev)
+    for key, leaf in leaves:
+        arr = leaf
+        if isinstance(arr, jax.Array):
+            arr = HostArray(arr)
+        entry: Dict[str, Any] = {}
+        if isinstance(arr, HostArray):
+            entry["shape"] = list(arr.shape)
+            entry["dtype"] = arr.dtype
+            # replicas were deduped at snapshot; dedup again here for
+            # HostArrays built by older callers
+            uniq: Dict[str, tuple] = {}
+            for idx, data, dev in arr.shards:
+                uniq.setdefault(json.dumps(idx), (idx, data, dev))
+            for idx, data, dev in uniq.values():
+                shards.append((key, data, idx, dev))
         else:
-            jobs.append((key, pool.submit(_write_shard, store, codec, ext,
-                                          data, idx, dev)))
+            data = np.asarray(arr)
+            entry["shape"] = list(data.shape)
+            entry["dtype"] = str(data.dtype)
+            shards.append((key, data, [[0, d] for d in data.shape], -1))
+        manifest["leaves"][key] = entry
 
     pool = ThreadPoolExecutor(max_workers=workers,
                               thread_name_prefix="ckpt-compress") \
         if workers > 1 else None
+    jobs: List[Tuple[str, Any]] = []     # (leaf_key, future-or-result)
     try:
-        for key, leaf in leaves:
-            arr = leaf
-            if isinstance(arr, jax.Array):
-                arr = HostArray(arr)
-            entry: Dict[str, Any] = {}
-            if isinstance(arr, HostArray):
-                entry["shape"] = list(arr.shape)
-                entry["dtype"] = arr.dtype
-                # replicas were deduped at snapshot; dedup again here for
-                # HostArrays built by older callers
-                uniq: Dict[str, tuple] = {}
-                for idx, data, dev in arr.shards:
-                    uniq.setdefault(json.dumps(idx), (idx, data, dev))
-                for idx, data, dev in uniq.values():
-                    submit(pool, key, data, idx, dev)
-            else:
-                data = np.asarray(arr)
-                entry["shape"] = list(data.shape)
-                entry["dtype"] = str(data.dtype)
-                submit(pool, key, data, [[0, d] for d in data.shape], -1)
-            manifest["leaves"][key] = entry
+        if getattr(store, "wants_batched_has", False):
+            # two-phase: hash everything (pool), ONE has_many round trip
+            # for every candidate name this save could reference, then
+            # compress/upload only the misses (pool again)
+            def hashed(data):
+                buf, digest, dh = _hash_shard(data)
+                return buf, digest, _shuffle_itemsize(data.dtype), dh
+            hs = [(key, (pool.submit(hashed, data) if pool
+                         else hashed(data)), idx, dev)
+                  for key, data, idx, dev in shards]
+            hs = [(key, h if isinstance(h, tuple) else h.result(), idx, dev)
+                  for key, h, idx, dev in hs]
+            names: List[str] = []
+            for _, (buf, digest, itemsize, _dh), _, _ in hs:
+                names.extend(_hit_candidates(digest, ext, itemsize))
+            presence = store.has_many(names)
+            for key, (buf, digest, itemsize, dh), idx, dev in hs:
+                if stats is not None:
+                    stats["hash_s"] = stats.get("hash_s", 0.0) + dh
+                args = (store, codec, ext, buf, digest, itemsize, idx, dev,
+                        presence)
+                jobs.append((key, pool.submit(_finish_shard, *args) if pool
+                             else _finish_shard(*args)))
+        else:
+            for key, data, idx, dev in shards:
+                args = (store, codec, ext, data, idx, dev)
+                jobs.append((key, pool.submit(_write_shard, *args) if pool
+                             else _write_shard(*args)))
         # collect in submission order so manifests are deterministic
         per_leaf: Dict[str, List[dict]] = {}
         for key, job in jobs:
@@ -271,8 +456,8 @@ def save_shards(ckpt_dir: Path, state, meta: Optional[dict] = None,
                 stats["hash_s"] = stats.get("hash_s", 0.0) + dh
                 stats["compress_s"] = stats.get("compress_s", 0.0) + dc
                 stats["io_s"] = stats.get("io_s", 0.0) + dio
-        for key, shards in per_leaf.items():
-            manifest["leaves"][key]["shards"] = shards
+        for key, leaf_shards in per_leaf.items():
+            manifest["leaves"][key]["shards"] = leaf_shards
     finally:
         if pool is not None:
             pool.shutdown(wait=True)
@@ -294,6 +479,8 @@ def manifest_chunks(man: dict) -> List[str]:
             for s in e.get("shards", ())]
 
 
+# --------------------------------------------------------------- chunk reads
+
 def _shard_path(ckpt_dir: Path, man_or_chunk_dir, s: dict) -> Path:
     """Resolve a shard entry to its file: v3 entries name a chunk in the
     manifest's chunk_dir; v1 entries name a file inside the step dir."""
@@ -307,31 +494,48 @@ def _shard_path(ckpt_dir: Path, man_or_chunk_dir, s: dict) -> Path:
 
 def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True,
               codec: Optional[str] = None,
-              chunk_dir: str = "chunks") -> np.ndarray:
+              chunk_dir: str = "chunks",
+              reader: Optional[ChunkReader] = None,
+              stats: Optional[dict] = None) -> np.ndarray:
     """Reassemble one logical array from its shard chunks.  `codec` must be
     the manifest's — pass ``manifest.get("codec", "zstd")`` (pre-codec
-    manifests were always zstd); guessing here would decompress with the
-    wrong codec.  `chunk_dir` is the manifest's (v3)."""
+    manifests were always zstd; per-shard ``codec`` records override it
+    for filtered chunks, and the chunk extension is authoritative).
+    `reader` routes chunk reads (explicit store / local dir /
+    fetch-on-miss); without one, reads are local files under `chunk_dir`.
+    `stats` accumulates restore_io_s / restore_decompress_s."""
     if codec is None:
         raise ValueError(
             'pass the manifest codec: manifest.get("codec", "zstd")')
-    _, dctx = _codec_pair(codec)
     shape = tuple(entry["shape"])
     # bfloat16 round-trips through jnp below; read raw bytes as uint16
     import jax.numpy as jnp
     jdt = jnp.dtype(entry["dtype"])
     out = np.zeros(shape, dtype=jdt)
     for s in entry["shards"]:
-        path = _shard_path(ckpt_dir, chunk_dir, s)
-        blob = path.read_bytes()
+        t0 = time.perf_counter()
+        if "chunk" in s and reader is not None:
+            blob = reader.get(s["chunk"])
+        else:
+            blob = _shard_path(ckpt_dir, chunk_dir, s).read_bytes()
+        t1 = time.perf_counter()
         if verify and "file" in s and zlib.crc32(blob) != s["crc32"]:
             raise IOError(f"{s['file']}: crc mismatch")
-        raw = (blob if s.get("chunk", "").endswith(".raw")
-               else dctx.decompress(blob))
-        if verify and "chunk" in s:
-            # chunks are self-validating: the name IS the content digest
-            if content_digest(raw) != s["chunk"].split(".")[0]:
-                raise IOError(f"{s['chunk']}: content digest mismatch")
+        if "chunk" in s:
+            raw = decode_chunk(s["chunk"], blob, codec)
+            if verify:
+                # chunks are self-validating: the name IS the digest of
+                # the unshuffled uncompressed content
+                if content_digest(raw) != s["chunk"].split(".")[0]:
+                    raise IOError(f"{s['chunk']}: content digest mismatch")
+        else:
+            raw = _codec_pair(codec)[1].decompress(blob)
+        t2 = time.perf_counter()
+        if stats is not None:
+            stats["restore_io_s"] = stats.get("restore_io_s", 0.0) \
+                + (t1 - t0)
+            stats["restore_decompress_s"] = \
+                stats.get("restore_decompress_s", 0.0) + (t2 - t1)
         idx = tuple(slice(a, b) for a, b in s["index"])
         window = out[idx].shape if idx else ()
         chunk = np.frombuffer(raw, dtype=jdt).reshape(window or shape)
@@ -342,60 +546,128 @@ def load_leaf(ckpt_dir: Path, entry: dict, verify: bool = True,
     return out
 
 
-def restore_tree(ckpt_dir: Path, template, verify: bool = True):
+def iter_restored_leaves(ckpt_dir: Path, man: dict, keys: Sequence[str],
+                         verify: bool = True,
+                         store: Optional[ChunkStoreBackend] = None,
+                         workers: Optional[int] = None,
+                         stats: Optional[dict] = None
+                         ) -> Iterator[Tuple[str, np.ndarray]]:
+    """Yield ``(key, host array)`` in `keys` order, fetching and
+    decompressing up to a bounded window of leaves AHEAD on a thread pool
+    that mirrors the writer pool — the consumer's device_put of leaf k
+    overlaps io+decompress of leaves k+1.. (the restore half of the
+    DESIGN.md §9 pipeline).  ``workers<=1`` restores serially."""
+    workers = DEFAULT_WORKERS if workers is None else workers
+    codec = man.get("codec", "zstd")
+    chunk_dir = man.get("chunk_dir", "chunks")
+    reader = ChunkReader(ckpt_dir, man, store)
+
+    def one(key: str):
+        # per-job stats dict: pool threads must not race on the shared one
+        st: dict = {}
+        arr = load_leaf(ckpt_dir, man["leaves"][key], verify, codec=codec,
+                        chunk_dir=chunk_dir, reader=reader, stats=st)
+        return arr, st
+
+    def merge(st: dict) -> None:
+        if stats is not None:
+            for k, v in st.items():
+                stats[k] = stats.get(k, 0.0) + v
+
+    if workers <= 1 or len(keys) <= 1:
+        for key in keys:
+            arr, st = one(key)
+            merge(st)
+            yield key, arr
+        return
+    with ThreadPoolExecutor(max_workers=workers,
+                            thread_name_prefix="ckpt-restore") as pool:
+        window: deque = deque()
+        ahead = max(2, workers * 2)          # bound host-memory in flight
+        pending = iter(keys)
+        for key in pending:
+            window.append((key, pool.submit(one, key)))
+            if len(window) >= ahead:
+                k, fut = window.popleft()
+                arr, st = fut.result()
+                merge(st)
+                yield k, arr
+        while window:
+            k, fut = window.popleft()
+            arr, st = fut.result()
+            merge(st)
+            yield k, arr
+
+
+def restore_tree(ckpt_dir: Path, template, verify: bool = True,
+                 store: Optional[ChunkStoreBackend] = None,
+                 workers: Optional[int] = None,
+                 stats: Optional[dict] = None):
     """Restore into the structure of `template` (values ignored; tree shape
-    and leaf order must match what was saved)."""
+    and leaf order must match what was saved).  Leaves stream through the
+    bounded restore pool; `store` routes chunk reads (fetch-on-miss for
+    caching backends)."""
     man = load_manifest(ckpt_dir)
     keys = [k for k, _ in _leaf_paths(template)]
     missing = [k for k in keys if k not in man["leaves"]]
     if missing:
         raise KeyError(f"checkpoint missing leaves: {missing[:5]}")
-    codec = man.get("codec", "zstd")
-    chunk_dir = man.get("chunk_dir", "chunks")
-    vals = [load_leaf(ckpt_dir, man["leaves"][k], verify, codec=codec,
-                      chunk_dir=chunk_dir)
-            for k in keys]
+    vals = [arr for _, arr in iter_restored_leaves(
+        ckpt_dir, man, keys, verify, store=store, workers=workers,
+        stats=stats)]
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, vals)
 
 
-def validate(ckpt_dir: Path, deep: bool = False) -> bool:
+def validate(ckpt_dir: Path, deep: bool = False,
+             store: Optional[ChunkStoreBackend] = None,
+             raise_unreachable: bool = False) -> bool:
     """Checkpoint-dir validity.
 
-    v3 fast path (the default): parse the manifest and stat every
-    referenced chunk (exists + recorded compressed length) — no blob is
-    read or decompressed, so ``latest_valid`` over a long history is
-    manifest-only.  ``deep=True`` additionally decompresses every chunk
-    and re-derives its content digest (what restore enforces anyway).
-    v1 dirs always get the full crc32 read (their manifests carry no
-    sizes)."""
+    v3 fast path (the default): parse the manifest and check every
+    referenced chunk's existence + recorded compressed length in ONE
+    batched query (local stats, or one has_many round trip against a
+    networked store) — no blob is read or decompressed, so
+    ``latest_valid`` over a long history is manifest-only.  ``deep=True``
+    additionally decompresses every chunk and re-derives its content
+    digest (what restore enforces anyway).  v1 dirs always get the full
+    crc32 read (their manifests carry no sizes).
+
+    An UNREACHABLE chunk service normally reads as invalid (callers fall
+    back to older checkpoints / fresh starts); pass
+    ``raise_unreachable=True`` where invalid triggers DELETION (gc) so a
+    transient outage can never be mistaken for corruption."""
     try:
         man = load_manifest(ckpt_dir)
+        reader = ChunkReader(ckpt_dir, man, store)
+        chunk_shards = []
         for entry in man["leaves"].values():
             for s in entry["shards"]:
-                path = _shard_path(ckpt_dir, man, s)
                 if "chunk" in s:
-                    if not path.is_file():
-                        return False
-                    if path.stat().st_size != s["clen"]:
-                        return False
-                    if deep:
-                        try:
-                            blob = path.read_bytes()
-                            if s["chunk"].endswith(".raw"):
-                                raw = blob
-                            else:
-                                _, dctx = _codec_pair(
-                                    man.get("codec", "zstd"))
-                                raw = dctx.decompress(blob)
-                        except Exception:    # any corruption-shaped failure
-                            return False
-                        if content_digest(raw) != s["chunk"].split(".")[0]:
-                            return False
+                    chunk_shards.append((entry, s))
                 else:
+                    path = _shard_path(ckpt_dir, man, s)
                     if zlib.crc32(path.read_bytes()) != s["crc32"]:
                         return False
+        sizes = reader.sizes([s["chunk"] for _, s in chunk_shards])
+        for entry, s in chunk_shards:
+            if sizes.get(s["chunk"]) != s["clen"]:
+                return False
+        if deep:
+            for entry, s in chunk_shards:
+                try:
+                    blob = reader.get(s["chunk"])
+                    raw = decode_chunk(s["chunk"], blob,
+                                       man.get("codec", "zstd"))
+                except ConnectionError:
+                    raise                # re-routed to the outer handler
+                except Exception:        # any corruption-shaped failure
+                    return False
+                if content_digest(raw) != s["chunk"].split(".")[0]:
+                    return False
         return True
     except (OSError, KeyError, json.JSONDecodeError, ValueError,
-            RuntimeError):
+            RuntimeError) as e:
+        if raise_unreachable and isinstance(e, ConnectionError):
+            raise
         return False

@@ -30,7 +30,9 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Iterable, Optional, Set
 
-from repro.checkpoint.chunkstore import ChunkStore, content_digest
+from repro.checkpoint import chunkstore
+from repro.checkpoint.chunkstore import (ChunkStore, ChunkStoreBackend,
+                                         content_digest)
 
 
 @dataclass
@@ -56,11 +58,13 @@ def _atomic_write(path: Path, data: bytes) -> None:
 
 
 def save_rank_image(ckpt_dir: Path, image: RankImage,
-                    store: Optional[ChunkStore] = None) -> dict:
+                    store: Optional[ChunkStoreBackend] = None) -> dict:
     """Write one rank's image as content-addressed parts.  `store` defaults
     to ``ckpt_dir/chunks`` (self-contained); the runtime passes a shared
-    store so consecutive checkpoints (and replicated payloads across ranks)
-    skip unchanged parts.  Returns the manifest entry."""
+    store — possibly a caching/remote backend, so a rank's unchanged
+    payload is never re-uploaded — so consecutive checkpoints (and
+    replicated payloads across ranks) skip unchanged parts.  Returns the
+    manifest entry."""
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     if store is None:
         store = ChunkStore(ckpt_dir / "chunks")
@@ -80,20 +84,26 @@ def save_rank_image(ckpt_dir: Path, image: RankImage,
 def commit_manifest(ckpt_dir: Path, entries: Dict[int, dict],
                     meta: Optional[dict] = None,
                     generation: int = 0,
-                    chunk_dir: str = "chunks") -> None:
+                    chunk_dir: Optional[str] = "chunks",
+                    store_spec: Optional[str] = None) -> None:
     """`n_ranks` is the SOURCE world; `generation` the membership epoch the
     job ran in — both are what an elastic restart (and its tests) read to
     report a topology change (DESIGN.md §8).  `chunk_dir` locates the
-    content-addressed store relative to `ckpt_dir`."""
+    content-addressed store relative to `ckpt_dir` (None for a rootless
+    remote store); a ``remote://`` `store_spec` is recorded so a reader
+    on another host can fetch the chunks it lacks."""
     manifest = {
         "version": 3,
         "time": time.time(),
         "n_ranks": len(entries),
         "generation": generation,
-        "chunk_dir": chunk_dir,
         "ranks": {str(r): e for r, e in sorted(entries.items())},
         "meta": meta or {},
     }
+    if chunk_dir is not None:
+        manifest["chunk_dir"] = chunk_dir
+    if store_spec and store_spec.startswith("remote://"):
+        manifest["store"] = store_spec
     _atomic_write(ckpt_dir / "MANIFEST.json",
                   json.dumps(manifest, indent=1).encode())
 
@@ -123,21 +133,25 @@ def live_chunks(ckpt_dirs: Iterable[Path]) -> Set[str]:
     return live
 
 
-def _read_part(ckpt_dir: Path, man: dict, part: dict,
+def _read_part(reader: chunkstore.ChunkReader, part: dict,
                verify: bool) -> bytes:
-    path = ckpt_dir / man.get("chunk_dir", "chunks") / part["chunk"]
-    blob = path.read_bytes()
+    blob = reader.get(part["chunk"])
     if verify and content_digest(blob) != part["chunk"].split(".")[0]:
         raise IOError(f"{part['chunk']}: content digest mismatch")
     return blob
 
 
-def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True) -> RankImage:
+def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True,
+                    store: Optional[ChunkStoreBackend] = None) -> RankImage:
+    """`store` routes part reads (an elastic restart passes its
+    ``ckpt_store`` so a fresh host fetches only the parts its cache
+    lacks); without one, reads go local-dir-then-manifest-spec."""
     man = load_manifest(ckpt_dir)
     ent = man["ranks"][str(rank)]
     if "parts" in ent:                        # v3: content-addressed parts
-        mpi = _read_part(ckpt_dir, man, ent["parts"]["mpi"], verify)
-        app = _read_part(ckpt_dir, man, ent["parts"]["app"], verify)
+        reader = chunkstore.ChunkReader(ckpt_dir, man, store)
+        mpi = _read_part(reader, ent["parts"]["mpi"], verify)
+        app = _read_part(reader, ent["parts"]["app"], verify)
         return RankImage(rank=ent["rank"], n_ranks=ent["n_ranks"],
                          step_idx=ent["step_idx"],
                          mpi_state=pickle.loads(mpi), app_state=app)
@@ -147,28 +161,30 @@ def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True) -> RankImage
     return RankImage.from_bytes(blob)
 
 
-def checkpoint_valid(ckpt_dir: Path, deep: bool = False) -> bool:
+def checkpoint_valid(ckpt_dir: Path, deep: bool = False,
+                     store: Optional[ChunkStoreBackend] = None) -> bool:
     """Fast path (default): manifest parses and every referenced chunk
-    exists with its recorded size — no payload reads.  ``deep=True``
-    re-derives every content digest (v3) / crc32 (v2)."""
+    exists with its recorded size — one batched query, no payload reads.
+    ``deep=True`` re-derives every content digest (v3) / crc32 (v2).
+    `store` routes chunk access like ``load_rank_image``."""
     try:
         man = load_manifest(ckpt_dir)
+        reader = chunkstore.ChunkReader(ckpt_dir, man, store)
+        parts = []
         for r, ent in man["ranks"].items():
             if "parts" in ent:
-                for part in ent["parts"].values():
-                    path = (ckpt_dir / man.get("chunk_dir", "chunks")
-                            / part["chunk"])
-                    if not path.is_file():
-                        return False
-                    if path.stat().st_size != part["bytes"]:
-                        return False
-                    if deep and (content_digest(path.read_bytes())
-                                 != part["chunk"].split(".")[0]):
-                        return False
+                parts.extend(ent["parts"].values())
             else:
                 blob = (ckpt_dir / ent["file"]).read_bytes()
                 if zlib.crc32(blob) != ent["crc32"]:
                     return False
+        sizes = reader.sizes([p["chunk"] for p in parts])
+        for part in parts:
+            if sizes.get(part["chunk"]) != part["bytes"]:
+                return False
+            if deep and (content_digest(reader.get(part["chunk"]))
+                         != part["chunk"].split(".")[0]):
+                return False
         return True
     except (OSError, KeyError, json.JSONDecodeError, ValueError):
         return False

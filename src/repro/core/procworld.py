@@ -44,7 +44,7 @@ Wire protocol additions (served by the endpoint, not by ProxyCore):
   ("coord", (method, args, kwargs))  whitelisted Coordinator RPC
   ("stats_add", (key, n))            per-rank stat into coord.stats
   ("straggler", (rank, seconds))     per-step duration -> StragglerTracker
-  ("ckpt_info", ())                  -> (ckpt_dir, chunk_store_root)
+  ("ckpt_info", ())                  -> (ckpt_dir, chunk_store_spec)
   ("ckpt_entry", (rank, entry, step))  manifest entry; parent commits last
   ("fire_trigger", ())               first rank at a checkpoint_at step
   ("finish", (rank, state_bytes))    normal completion (result to parent)
@@ -69,7 +69,7 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.checkpoint.chunkstore import ChunkStore
+from repro.checkpoint import chunkstore
 from repro.core.ckpt_protocol import RankImage, save_rank_image
 from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
                                     PHASE_PENDING, PHASE_RESUME, PHASE_RUN)
@@ -314,8 +314,12 @@ class ProcWorld:
             job.stragglers.record(r, seconds)
             return None
         if cmd == "ckpt_info":
+            # the store SPEC, not a directory: a child rebuilds an
+            # equivalent backend (its own socket for a remote/caching
+            # store — it speaks sockets to the chunk service exactly like
+            # it speaks sockets to everything else, DESIGN.md §11)
             with job._ckpt_lock:
-                return (str(job._ckpt_dir), str(job._ckpt_chunks.root))
+                return (str(job._ckpt_dir), job._ckpt_chunks.spec)
         if cmd == "ckpt_entry":
             r, entry, step = args
             job._commit_rank_entry(r, entry, step)
@@ -708,6 +712,21 @@ def _child_main(job, rank: int, port: int, n_steps: int,
         os._exit(code)
 
 
+#: per-child memo of opened chunk-store backends: consecutive checkpoints
+#: against a remote store reuse one connection instead of re-dialing the
+#: chunk server every boundary (populated only after the fork — the
+#: parent never writes it, so nothing stale is inherited)
+_CHILD_STORES: Dict[str, Any] = {}
+
+
+def _child_store(spec: str):
+    st = _CHILD_STORES.get(spec)
+    if st is None:
+        st = chunkstore.open_store(spec)
+        _CHILD_STORES[spec] = st
+    return st
+
+
 def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
                       state, step: int) -> bool:
     """Flush -> drain -> snapshot -> resume/exit, with the CHILD writing
@@ -725,12 +744,12 @@ def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
         f"rank {mpi.rank}: proxy channel not empty at snapshot"
     coord.note_empty_channel(mpi.rank)
     chan.call("stats_add", "drained_messages", len(mpi.cache))
-    ckpt_dir, store_root = chan.call("ckpt_info")
+    ckpt_dir, store_spec = chan.call("ckpt_info")
     image = RankImage(rank=mpi.rank, n_ranks=job.n, step_idx=step,
                       mpi_state=mpi.snapshot(),
                       app_state=pickle.dumps(state))
     entry = save_rank_image(Path(ckpt_dir), image,
-                            store=ChunkStore(store_root))
+                            store=_child_store(store_spec))
     chan.call("ckpt_entry", mpi.rank, entry, step)
     coord.ack_snapshot(mpi.rank, generation=mpi.generation)
     phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)

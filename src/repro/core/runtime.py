@@ -31,7 +31,8 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.checkpoint.chunkstore import ChunkStore
+from repro.checkpoint import chunkstore
+from repro.checkpoint.chunkstore import ChunkStoreBackend
 from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
@@ -52,16 +53,20 @@ class MPIJob:
                  heartbeat_timeout: float = 5.0,
                  membership: Optional[Membership] = None,
                  coord_timeout: float = 60.0,
-                 ckpt_store: Optional[str | Path] = None):
+                 ckpt_store: Optional[str | Path | ChunkStoreBackend]
+                 = None):
         self.n = n_ranks
         self.step_fn = step_fn
         self.init_fn = init_fn
         self.transport_name = transport
-        #: shared content-addressed chunk root for incremental rank images:
-        #: consecutive checkpoints (possibly in different dirs) reference
-        #: unchanged payloads instead of rewriting them (DESIGN.md §9).
-        #: None keeps every checkpoint dir self-contained.
-        self.ckpt_store = Path(ckpt_store) if ckpt_store else None
+        #: shared content-addressed chunk store for incremental rank
+        #: images: consecutive checkpoints (possibly in different dirs)
+        #: reference unchanged payloads instead of rewriting them
+        #: (DESIGN.md §9).  A directory path, a ``remote://host:port``
+        #: chunk-service spec (with ``?cache=DIR`` for a local cache —
+        #: DESIGN.md §11), or a built backend.  None keeps every
+        #: checkpoint dir self-contained.
+        self.ckpt_store = ckpt_store if ckpt_store else None
         self.coord = Coordinator(n_ranks, membership=membership,
                                  timeout=coord_timeout)
         self.transport = make_transport(transport)
@@ -94,7 +99,8 @@ class MPIJob:
         self.errors: Dict[int, BaseException] = {}
         self._err_lock = threading.Lock()
         self._ckpt_dir: Optional[Path] = None
-        self._ckpt_chunks: Optional[ChunkStore] = None
+        self._ckpt_chunks: Optional[ChunkStoreBackend] = None
+        self._ckpt_store_obj: Optional[ChunkStoreBackend] = None
         self._ckpt_meta: Dict[int, dict] = {}
         self._ckpt_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
@@ -235,10 +241,14 @@ class MPIJob:
                         "world_size": self.n}
                 if self.restore_info is not None:
                     meta["elastic"] = self.restore_info
+                root = getattr(self._ckpt_chunks, "root", None)
                 commit_manifest(self._ckpt_dir, self._ckpt_meta, meta=meta,
                                 generation=self.coord.generation,
-                                chunk_dir=os.path.relpath(
-                                    self._ckpt_chunks.root, self._ckpt_dir))
+                                chunk_dir=(os.path.relpath(
+                                    root, self._ckpt_dir)
+                                    if root is not None else None),
+                                store_spec=getattr(self._ckpt_chunks,
+                                                   "fetch_spec", None))
 
     def _wait_phase_alive(self, rank: int, *phases: str) -> str:
         """wait_phase that keeps the heartbeat beating: a rank parked here
@@ -288,8 +298,16 @@ class MPIJob:
         if over:
             raise RuntimeError("job already finished; nothing to checkpoint")
         self._ckpt_dir = Path(ckpt_dir)
-        self._ckpt_chunks = ChunkStore(self.ckpt_store
-                                       or self._ckpt_dir / "chunks")
+        if self.ckpt_store is not None:
+            # one backend for the job's lifetime: a remote store keeps its
+            # connection + presence knowledge across checkpoint boundaries
+            # (mirrors procworld._child_store on the child side)
+            if self._ckpt_store_obj is None:
+                self._ckpt_store_obj = chunkstore.open_store(self.ckpt_store)
+            self._ckpt_chunks = self._ckpt_store_obj
+        else:
+            self._ckpt_chunks = chunkstore.open_store(
+                None, default=self._ckpt_dir / "chunks")
         self._ckpt_meta = {}
         self.coord.request_checkpoint(resume=resume)
 
@@ -360,7 +378,8 @@ class MPIJob:
                 membership: Optional[Membership] = None,
                 heartbeat_timeout: float = 5.0,
                 coord_timeout: float = 60.0,
-                ckpt_store: Optional[str | Path] = None) -> "MPIJob":
+                ckpt_store: Optional[str | Path | ChunkStoreBackend]
+                = None) -> "MPIJob":
         """Reconstruct a job from a checkpoint on ANY transport — and, when
         `world_size` / `dead_ranks` reshape the world, for ANY topology:
 
@@ -398,11 +417,21 @@ class MPIJob:
         rank_map = make_rank_map(old_n, new_n, dead)
         sources: Dict[int, int] = {}
         images: Dict[int, RankImage] = {}    # grow clones reuse one load
+        # image reads route through the restart's store: on a fresh host
+        # (empty cache) only the parts the cache lacks are fetched from
+        # the chunk service; without a store the manifest's recorded spec
+        # still covers the local misses (DESIGN.md §11)
+        img_store = (chunkstore.open_store(ckpt_store)
+                     if ckpt_store is not None else None)
+        # the restored job's checkpoints reuse this backend (connection +
+        # presence knowledge already warm from the image loads)
+        job._ckpt_store_obj = img_store
         for r in range(new_n):
             src = survivors[r % len(survivors)]
             sources[r] = src
             if src not in images:
-                images[src] = load_rank_image(ckpt_dir, src)
+                images[src] = load_rank_image(ckpt_dir, src,
+                                              store=img_store)
             img = images[src]
             snap = img.mpi_state
             if reshaped:

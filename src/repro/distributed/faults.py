@@ -10,7 +10,13 @@ from the dead rank.  Here:
     from step boundaries AND from inside blocked calls (api._on_idle), so
     "parked in Recv" is alive and "thread gone" is dead within timeout_s.
   * StragglerTracker — per-rank step-duration EWMA; ranks slower than
-    ``factor`` x median are flagged (policy hook: reassign / exclude).
+    ``factor`` x median are flagged.  Since PR 5 the driver ACTS on the
+    flag: a rank flagged for ``straggler_windows`` consecutive monitor
+    polls is EXCLUDED at the next checkpoint boundary — the driver
+    requests an immediate checkpoint, waits for it to commit, then runs
+    the same bump→abort→reshaped-restart path a death takes.  Nothing is
+    lost (the boundary just checkpointed) and the slow rank stops gating
+    every collective.
   * FaultTolerantDriver — run an MPIJob with periodic checkpoints and a
     live monitor.  On a dead rank: bump the membership generation (zombie
     messages from the old world are rejected from that instant), abort the
@@ -144,7 +150,8 @@ class FaultTolerantDriver:
                            None] = None,
                  min_world_size: int = 1,
                  monitor_poll_s: float = 0.02,
-                 membership: Optional[Membership] = None):
+                 membership: Optional[Membership] = None,
+                 straggler_windows: int = 0):
         self.job_factory = job_factory
         self.restart_factory = restart_factory
         self.ckpt_root = Path(ckpt_root)
@@ -154,6 +161,11 @@ class FaultTolerantDriver:
         self.min_world_size = min_world_size
         self.monitor_poll_s = monitor_poll_s
         self.membership = membership
+        #: straggler policy (0 disables): a rank the StragglerTracker
+        #: flags for this many CONSECUTIVE monitor polls is excluded at
+        #: the next checkpoint boundary — checkpoint now, then treat it
+        #: like a death (bump -> abort -> reshaped restart without it)
+        self.straggler_windows = straggler_windows
         self.events: List[str] = []
         self._elastic_jobs = (
             len(inspect.signature(job_factory).parameters) >= 2)
@@ -162,16 +174,27 @@ class FaultTolerantDriver:
 
     # ------------------------------------------------------------- plumbing
     def _latest_valid(self) -> Optional[Path]:
-        from repro.core.ckpt_protocol import checkpoint_valid
+        from repro.core.ckpt_protocol import checkpoint_valid, load_manifest
         if not self.ckpt_root.exists():
             return None
-        cands = sorted(self.ckpt_root.iterdir())
+
+        def committed_at(d: Path) -> float:
+            # manifest commit time, not directory name: straggler-exclude
+            # checkpoints interleave with periodic at_N dirs, so
+            # lexicographic order no longer tracks recency
+            try:
+                return float(load_manifest(d).get("time", 0.0))
+            except Exception:
+                return -1.0
+
+        cands = sorted((d for d in self.ckpt_root.iterdir() if d.is_dir()),
+                       key=lambda d: (committed_at(d), d.name))
         for d in reversed(cands):
             # deep=True: restart is rare and correctness-critical — pay
             # the full digest scan so a size-preserving bit flip (invisible
             # to the manifest-only fast path) falls back to an older
             # checkpoint instead of failing the recovery mid-restart
-            if d.is_dir() and checkpoint_valid(d, deep=True):
+            if checkpoint_valid(d, deep=True):
                 return d
         return None
 
@@ -215,12 +238,15 @@ class FaultTolerantDriver:
         return tuple(sorted(set(job.failed_ranks())
                             | set(job.heartbeat.dead_ranks())))
 
-    def _declare_dead(self, job, dead: Tuple[int, ...]) -> Tuple[int, ...]:
+    def _declare_dead(self, job, dead: Tuple[int, ...],
+                      kind: str = "dead") -> Tuple[int, ...]:
         """Bump the membership generation for an observed death set.  A
         set covering the WHOLE world is an incarnation failure, not a
         shrink (a shrink-by-all would leave no survivors): keep the world
         size and restore every image.  Returns the dead set to carry into
-        the restart (empty for total outage)."""
+        the restart (empty for total outage).  `kind` labels the event
+        ("dead" for failures, "straggler" for policy exclusions — the
+        restart path is identical)."""
         observed = dead
         if len(dead) >= job.n:
             gen = self.membership.bump(world_size=job.n)
@@ -228,8 +254,45 @@ class FaultTolerantDriver:
         else:
             gen = self.membership.bump(
                 dead, world_size=self._next_world(job.n, dead))
-        self.events.append(f"dead:{list(observed)}:gen={gen}")
+        self.events.append(f"{kind}:{list(observed)}:gen={gen}")
         return dead
+
+    def _confirmed_stragglers(self, job, counts: Dict[int, int]
+                              ) -> Tuple[int, ...]:
+        """Update per-rank consecutive-flag counts from the tracker and
+        return ranks past the threshold (never so many that the world
+        would shrink below min_world_size)."""
+        flagged = set(job.stragglers.stragglers())
+        for r in list(counts):
+            if r not in flagged:
+                del counts[r]            # consecutive means consecutive
+        for r in flagged:
+            counts[r] = counts.get(r, 0) + 1
+        slow = sorted(r for r, c in counts.items()
+                      if c >= self.straggler_windows)
+        while slow and job.n - len(slow) < self.min_world_size:
+            slow.pop()
+        return tuple(slow)
+
+    def _exclude_stragglers(self, job, slow: Tuple[int, ...]) -> bool:
+        """The 'next checkpoint boundary' half of the straggler policy:
+        request an immediate checkpoint and wait for its manifest to
+        commit, so the reshaped restart resumes from the boundary the
+        exclusion happens at (zero recomputation).  False (skip the
+        exclusion this poll) when the job is finishing or a concurrent
+        checkpoint round holds the coordinator — both resolve by the
+        next poll."""
+        ck = self.ckpt_root / (
+            f"strag_g{self.membership.generation:04d}_{len(self.events)}")
+        try:
+            job.checkpoint(ck, resume=True)
+            # bounded: if a rank dies mid-checkpoint the wait times out
+            # and the next poll handles it as the death it is
+            job.wait_checkpoint(timeout=30.0)
+        except (RuntimeError, TimeoutError):
+            return False
+        self.events.append(f"ckpt:{ck.name}")
+        return True
 
     # ------------------------------------------------------------------ run
     def run(self, n_steps: int, transport_after_failure: str = "shm",
@@ -278,9 +341,19 @@ class FaultTolerantDriver:
             t.start()
             dead: Tuple[int, ...] = ()
             dying_gen = self.membership.generation
+            strag_counts: Dict[int, int] = {}
             deadline = time.monotonic() + timeout
             while t.is_alive():
                 dead = self._detect_dead(job)
+                if not dead and self.straggler_windows:
+                    slow = self._confirmed_stragglers(job, strag_counts)
+                    if slow and self._exclude_stragglers(job, slow):
+                        dead = self._declare_dead(job, slow,
+                                                  kind="straggler")
+                        job.abort(
+                            f"straggler ranks {list(slow)} excluded "
+                            f"(generation {self.membership.generation})")
+                        break
                 if dead:
                     # settling window: co-failing ranks (one crash taking
                     # the whole step down, a switch dying under several

@@ -10,6 +10,16 @@ process world itself is under test).  The ``xt`` fixture maps an expected
 transport name to the effective one, so manifest/metadata assertions stay
 truthful under forcing.
 
+REPRO_CKPT_STORE=remote is the storage leg of the matrix: a session-wide
+ChunkServer is started and ``chunkstore.open_store`` is wrapped so every
+LOCAL store spec (a CheckpointManager's chunks dir, an MPIJob's
+ckpt_store path) becomes a CachingChunkStore — same cache directory on
+disk (path-shaped assertions keep holding), but every put/get also talks
+to the server, and proc-world rank children dial it over their own
+sockets.  Each local path gets its own server NAMESPACE, so tests cannot
+observe each other through content dedup.  Explicit remote specs and
+prebuilt backends pass through untouched.
+
 Per-test timeout: pytest-timeout when installed (CI installs it); a
 SIGALRM fallback otherwise — a hung or orphaned rank process fails the
 test instead of stalling the runner for the job timeout.  A session-end
@@ -24,8 +34,10 @@ import numpy as np
 import pytest
 
 _FORCED = os.environ.get("REPRO_TRANSPORT") or None
+_FORCED_STORE = os.environ.get("REPRO_CKPT_STORE") or None
 _TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "120"))
 _PIN = threading.local()
+_CHUNK_SERVER = None
 
 
 @contextlib.contextmanager
@@ -86,12 +98,51 @@ def _install_transport_override():
     MPIJob.restart = classmethod(forced_restart)
 
 
+def _install_store_override():
+    """REPRO_CKPT_STORE=remote: run the checkpoint suites against a real
+    chunk service.  One session ChunkServer; every local store path is
+    rerouted to a CachingChunkStore over it, namespaced by the path (so
+    two tests writing content-identical state cannot dedup against each
+    other's uploads, and a ckpt_store reused across restarts WITHIN a
+    test keeps its namespace)."""
+    global _CHUNK_SERVER
+    import hashlib
+    import tempfile
+    from repro.checkpoint import chunkservice, chunkstore
+    if _FORCED_STORE != "remote":
+        raise pytest.UsageError(
+            f"REPRO_CKPT_STORE={_FORCED_STORE!r} not understood "
+            f"(only 'remote')")
+    backing = tempfile.mkdtemp(prefix="repro-chunkserver-")
+    _CHUNK_SERVER = chunkservice.ChunkServer(backing).start()
+    orig_open = chunkstore.open_store
+
+    def forced_open(spec, default=None):
+        store = orig_open(spec, default)
+        if type(store) is not chunkstore.ChunkStore:
+            return store            # explicit remote/caching: untouched
+        ns = hashlib.blake2b(str(store.root.resolve()).encode(),
+                             digest_size=8).hexdigest()
+        return orig_open(_CHUNK_SERVER.spec_for(ns, cache=store.root))
+
+    chunkstore.open_store = forced_open
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-second integration tests")
     config.addinivalue_line(
         "markers", "timeout: per-test timeout (pytest-timeout)")
     if _FORCED:
         _install_transport_override()
+    if _FORCED_STORE:
+        _install_store_override()
+
+
+def pytest_unconfigure(config):
+    if _CHUNK_SERVER is not None:
+        _CHUNK_SERVER.stop()
+        import shutil
+        shutil.rmtree(_CHUNK_SERVER.root, ignore_errors=True)
 
 
 def pytest_collection_modifyitems(config, items):

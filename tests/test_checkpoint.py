@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint.chunkstore import ChunkStore
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint import serialization as ser
 from repro.data.pipeline import TokenPipeline
@@ -122,6 +123,86 @@ def test_bitflip_detected_by_deep_validate_and_restore(tmp_path):
     assert not ser.validate(d, deep=True)    # deep: digest mismatch
     with pytest.raises(Exception):
         ser.restore_tree(d, jax.eval_shape(lambda: _state()))
+
+
+def test_byte_shuffle_filter_compresses_floats_and_roundtrips(tmp_path):
+    """Multi-byte float shards are byte-transposed before the probe when
+    that wins: the near-constant sign/exponent bytes group together and
+    chunks that used to be stored raw now compress.  The filter is
+    recorded per chunk (manifest codec field + extension) and the digest
+    still covers the UNSHUFFLED bytes, so dedup identity and
+    self-validation are unchanged."""
+    rng = np.random.default_rng(7)
+    st = {
+        # uniform floats: plain deflate ~1.0 (raw before this filter),
+        # shuffled well under the 0.9 probe ratio
+        "f32": rng.random((128, 128), dtype=np.float32),
+        "f64": rng.random((64, 64)),
+        "ints": np.arange(4096, dtype=np.int64),       # filter not applied
+    }
+    ser.save_shards(tmp_path, st, workers=1)
+    man = ser.load_manifest(tmp_path)
+    ext = ser._codec_ext(man["codec"])
+    for key, itemsize in (("f32", 4), ("f64", 8)):
+        s = man["leaves"][key]["shards"][0]
+        # shuffled encoding, width in the NAME (decoding can never guess)
+        assert s["chunk"].endswith(f".{ext}s{itemsize}"), key
+        assert s["codec"] == f"{man['codec']}+shuf{itemsize}"
+        assert s["clen"] < 0.9 * s["raw"], key         # it really shrank
+    s_int = man["leaves"]["ints"]["shards"][0]
+    assert "codec" not in s_int
+    assert ser.validate(tmp_path, deep=True)
+    out = ser.restore_tree(tmp_path, jax.eval_shape(lambda: dict(st)))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+    # a bit flip inside a SHUFFLED chunk is still caught by the digest
+    victim = tmp_path / man["chunk_dir"] \
+        / man["leaves"]["f32"]["shards"][0]["chunk"]
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    assert not ser.validate(tmp_path, deep=True)
+
+
+def test_identical_bytes_under_different_dtypes_roundtrip(tmp_path):
+    """Two leaves whose RAW BYTES are identical but whose dtypes have
+    different widths share a content digest; the shuffle width rides in
+    the chunk NAME, so each encoding decodes with the width it was
+    written with and both leaves restore bitwise (a reader-dtype-derived
+    width would unshuffle one of them into garbage)."""
+    rng = np.random.default_rng(9)
+    f32 = rng.random((64, 64), dtype=np.float32)
+    st = {"a": f32, "b": f32.view(np.float64)}      # same bytes, width 8
+    ser.save_shards(tmp_path, st, workers=1)
+    man = ser.load_manifest(tmp_path)
+    a, b = (man["leaves"][k]["shards"][0] for k in ("a", "b"))
+    assert a["chunk"].split(".")[0] == b["chunk"].split(".")[0]  # digest
+    assert ser.validate(tmp_path, deep=True)
+    out = ser.restore_tree(tmp_path, jax.eval_shape(lambda: dict(st)))
+    assert np.array_equal(out["a"], st["a"])
+    assert np.array_equal(out["b"], st["b"])
+
+
+def test_shuffled_and_plain_chunks_share_digest_identity(tmp_path):
+    """The SAME content saved under the pre-filter encoding is still a
+    store hit for the filtered writer (and vice versa): candidates cover
+    every encoding of one digest, so old stores keep deduping."""
+    rng = np.random.default_rng(8)
+    data = rng.random((64, 64), dtype=np.float32)
+    buf = ser._as_buffer(data)
+    digest = ser.content_digest(buf)
+    store = ChunkStore(tmp_path / "chunks")
+    # simulate a pre-PR-5 store: the chunk exists RAW under this digest
+    store.put(f"{digest}.raw", bytes(buf), raw_bytes=buf.nbytes)
+    ser.save_shards(tmp_path / "ck", {"w": data}, store=store, workers=1)
+    man = ser.load_manifest(tmp_path / "ck")
+    s = man["leaves"]["w"]["shards"][0]
+    assert s["chunk"] == f"{digest}.raw"        # referenced, not rewritten
+    assert store.stats["chunks_written"] == 1   # only the seeded put
+    out = ser.restore_tree(tmp_path / "ck",
+                           jax.eval_shape(lambda: {"w": data}))
+    assert np.array_equal(out["w"], data)
 
 
 def test_missing_manifest_is_invalid(tmp_path):

@@ -1,0 +1,496 @@
+"""The cross-host chunk service (DESIGN.md §11): a checkpoint store behind
+a socket, like everything else in this system.
+
+Covers the wire protocol (versioned batches, torn-frame atomicity), the
+caching client (upload-only-missing, fetch-on-miss, cache-only gc), the
+acceptance scenario — an elastic restart into an EMPTY cache dir ("new
+host") that transfers only the chunks the cache lacks, bit-identical to
+the local-store path — and real SIGKILL fault injection mid-chunk-upload
+in the process world.
+"""
+import os
+import pickle
+import signal
+import socket
+import struct
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import exact_transports
+
+from repro.checkpoint import chunkservice, chunkstore
+from repro.checkpoint.chunkservice import (CHUNK_PROTOCOL_VERSION,
+                                           CachingChunkStore,
+                                           ChunkServer, ChunkServiceError,
+                                           RemoteChunkStore, make_spec,
+                                           parse_spec)
+from repro.checkpoint.chunkstore import content_digest
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import MPIJob
+from repro.core.ckpt_protocol import (checkpoint_valid, load_manifest,
+                                      load_rank_image)
+from repro.distributed.faults import FaultTolerantDriver
+from repro.distributed.proxy_grad import make_dp_app
+
+
+@pytest.fixture
+def server(tmp_path):
+    srv = ChunkServer(tmp_path / "server").start()
+    yield srv
+    srv.stop()
+
+
+def _chunk(payload: bytes):
+    return f"{content_digest(payload)}.bin", payload
+
+
+# ------------------------------------------------------------ spec grammar
+
+def test_spec_round_trip():
+    for host, port, ns, cache in [("127.0.0.1", 9000, "", None),
+                                  ("10.0.0.7", 1234, "jobA", None),
+                                  ("127.0.0.1", 9000, "n-1", "/tmp/c")]:
+        spec = make_spec(host, port, ns, cache)
+        assert parse_spec(spec) == (host, port, ns, cache)
+    with pytest.raises(ValueError):
+        parse_spec("remote://nohostport")
+    with pytest.raises(ValueError):
+        parse_spec("remote://h:1/../escape")
+    with pytest.raises(ValueError):
+        parse_spec("remote://h:1?bogus=1")
+
+
+def test_open_store_resolves_all_spec_kinds(tmp_path, server):
+    local = chunkstore.open_store(tmp_path / "local")
+    if os.environ.get("REPRO_CKPT_STORE"):
+        # the matrix knob reroutes local paths through the session server
+        # (same cache dir on disk) — that IS the behavior under test there
+        assert isinstance(local, CachingChunkStore)
+        assert local.cache.root == tmp_path / "local"
+    else:
+        assert type(local) is chunkstore.ChunkStore
+    assert chunkstore.open_store(local) is local          # pass-through
+    remote = chunkstore.open_store(server.spec)
+    assert isinstance(remote, RemoteChunkStore)
+    caching = chunkstore.open_store(
+        server.spec_for("ns1", cache=tmp_path / "cache"))
+    assert isinstance(caching, CachingChunkStore)
+    # the spec round-trips THROUGH the store (what procworld children get)
+    again = chunkstore.open_store(caching.spec)
+    assert isinstance(again, CachingChunkStore)
+    assert again.remote.namespace == "ns1"
+    assert again.cache.root == tmp_path / "cache"
+
+
+# --------------------------------------------------------- protocol basics
+
+def test_server_put_get_ref_gc_list(server):
+    st = chunkstore.open_store(server.spec)
+    name_a, blob_a = _chunk(b"alpha" * 100)
+    name_b, blob_b = _chunk(b"beta" * 100)
+    assert st.put(name_a, blob_a)
+    assert not st.put(name_a, blob_a)        # idempotent: second is a ref
+    assert st.put(name_b, blob_b)
+    assert st.get(name_a) == blob_a
+    assert st.has(name_a) and not st.has("00ff.bin")
+    assert st.size(name_b) == len(blob_b)
+    assert st.has_many([name_a, name_b, "00ff.bin"]) == {
+        name_a: len(blob_a), name_b: len(blob_b)}
+    st.ref(name_a, 500)
+    assert st.list_chunks() == {name_a, name_b}
+    # AUTOMATIC gc must never reach the server (other writers may share
+    # the namespace); reclamation is the explicit GC-live-set command
+    assert st.gc([name_a]) == 0
+    assert st.list_chunks() == {name_a, name_b}
+    assert st.gc_remote([name_a]) == 1
+    assert st.list_chunks() == {name_a}
+    srv_stats = st.server_stats()
+    assert srv_stats["chunks_written"] == 2
+    assert srv_stats["chunks_removed"] == 1
+
+
+def test_namespaces_are_disjoint(server):
+    a = chunkstore.open_store(server.spec_for("jobA"))
+    b = chunkstore.open_store(server.spec_for("jobB"))
+    name, blob = _chunk(b"shared-content")
+    a.put(name, blob)
+    assert not b.has(name)                   # no cross-job dedup observable
+    assert b.list_chunks() == set()
+    b.put(name, blob)
+    assert b.gc_remote([]) == 1              # B's gc cannot touch A
+    assert a.has(name)
+    with pytest.raises(ValueError):          # "." would alias the default ns
+        chunkstore.open_store(make_spec("127.0.0.1", server.port, "."))
+
+
+def test_protocol_version_mismatch_rejected(server):
+    s = socket.create_connection((server.host, server.port))
+    bad = pickle.dumps((CHUNK_PROTOCOL_VERSION + 1, "", [("list", ())]))
+    s.sendall(struct.pack("!q", len(bad)) + bad)
+    from repro.core.transport import read_frame
+    ok, err = pickle.loads(read_frame(s))
+    assert not ok and isinstance(err, ChunkServiceError)
+    s.close()
+
+
+def test_unreachable_server_is_an_oserror(tmp_path):
+    srv = ChunkServer(tmp_path / "gone").start()
+    spec = srv.spec
+    srv.stop()
+    st = chunkstore.open_store(spec)
+    with pytest.raises(OSError):             # ChunkServiceError is one
+        st.has("aa.bin")
+
+
+def test_torn_put_frame_never_becomes_a_chunk(server):
+    """A client SIGKILLed mid-upload == a length-prefixed frame whose body
+    never fully arrives.  The server must drop it on the floor: nothing
+    half-written, nothing visible to has(), and the connection slot is
+    simply reaped — other clients keep working."""
+    name, blob = _chunk(os.urandom(1 << 16))
+    payload = pickle.dumps(
+        (CHUNK_PROTOCOL_VERSION, "", [("put", (name, blob, len(blob)))]),
+        protocol=pickle.HIGHEST_PROTOCOL)
+    s = socket.create_connection((server.host, server.port))
+    # full length header, half the body — then the "process dies"
+    s.sendall(struct.pack("!q", len(payload)) + payload[:len(payload) // 2])
+    s.close()
+    time.sleep(0.2)                          # let the server notice EOF
+    st = chunkstore.open_store(server.spec)
+    assert not st.has(name)
+    assert st.list_chunks() == set()
+    backing = server.backing()
+    if backing.root.is_dir():
+        assert not any(".tmp" in p.name for p in backing.root.iterdir())
+    # the service survived the torn client: a clean upload still lands
+    assert st.put(name, blob)
+    assert st.get(name) == blob
+
+
+# ------------------------------------------------------------ caching store
+
+def test_caching_store_uploads_only_missing_and_pins_on_fetch(tmp_path,
+                                                              server):
+    a = CachingChunkStore(tmp_path / "cacheA",
+                          RemoteChunkStore(server.host, server.port))
+    name1, blob1 = _chunk(b"one" * 1000)
+    name2, blob2 = _chunk(b"two" * 1000)
+    a.put(name1, blob1)
+    assert a.stats["bytes_uploaded"] == len(blob1)
+    # second writer (fresh cache, same server): put becomes a REFERENCE —
+    # the server already holds it, zero wire bytes shipped
+    b = CachingChunkStore(tmp_path / "cacheB",
+                          RemoteChunkStore(server.host, server.port))
+    assert not b.put(name1, blob1)
+    assert b.stats["bytes_uploaded"] == 0
+    assert b.stats["bytes_referenced_remote"] == len(blob1)
+    assert b.cache.has(name1)                # ...but the cache is warm now
+    b.put(name2, blob2)
+    # fetch-on-miss pins into the cache: first get fetches, second is local
+    c = CachingChunkStore(tmp_path / "cacheC",
+                          RemoteChunkStore(server.host, server.port))
+    assert c.get(name2) == blob2
+    assert c.stats["bytes_fetched"] == len(blob2)
+    assert c.get(name2) == blob2
+    assert c.stats["cache_hits"] == 1 and c.stats["cache_misses"] == 1
+    assert c.stats["bytes_fetched"] == len(blob2)      # no second fetch
+    # gc collects the CACHE only: the server still serves everyone
+    assert c.gc([]) == 1
+    assert not c.cache.has(name2)
+    assert c.remote.has(name2)
+    assert c.get(name2) == blob2             # refetches transparently
+
+
+# ----------------------------------------- acceptance: fresh-host restores
+
+N_LEAVES, CHANGED = 16, 3
+
+
+def _leaves(seed=0):
+    rng = np.random.default_rng(seed)
+    # uniform floats: the byte-shuffle filter compresses the near-constant
+    # exponent bytes, so these chunks are compressed, not raw
+    return {f"w{i}": rng.random((64, 64), dtype=np.float32)
+            for i in range(N_LEAVES)}
+
+
+def test_fresh_host_restore_transfers_only_missing_chunks(tmp_path, server):
+    """The PR acceptance scenario at the tensor layer: host A saves
+    through the chunk service; host B (empty cache dir) restores
+    bit-identically; after 3/16 leaves change, A's save uploads < 1.0 of
+    its bytes and B's next restore fetches < 1.0 of its bytes — exactly
+    the missing chunks, both directions."""
+    import jax
+    state1 = _leaves()
+    tpl = jax.eval_shape(lambda: state1)
+    spec_a = server.spec_for("job", cache=tmp_path / "hostA")
+    mgr_a = CheckpointManager(tmp_path / "root", async_write=False,
+                              store=chunkstore.open_store(spec_a))
+    mgr_a.save(1, state1)
+    assert mgr_a.stats["last_bytes_uploaded"] > 0
+    assert mgr_a.remote_transfer_fraction() == 1.0     # cold server
+
+    # local-store reference path (no service anywhere near it)
+    mgr_local = CheckpointManager(tmp_path / "local", async_write=False)
+    mgr_local.save(1, state1)
+    ref1, _ = mgr_local.restore(tpl)
+
+    # "host B": same manifests (tiny JSON on the shared root), EMPTY cache
+    store_b = chunkstore.open_store(
+        server.spec_for("job", cache=tmp_path / "hostB"))
+    mgr_b = CheckpointManager(tmp_path / "root", async_write=False,
+                              store=store_b)
+    out1, meta = mgr_b.restore(tpl)
+    assert meta["step"] == 1
+    for a, b in zip(jax.tree.leaves(ref1), jax.tree.leaves(out1)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    fetched_cold = store_b.stats["bytes_fetched"]
+    assert fetched_cold == store_b.stats["bytes_read"]  # everything moved
+
+    # ---- 3/16 leaves change; host A saves again
+    state2 = dict(state1)
+    for i in range(CHANGED):
+        state2[f"w{i}"] = state1[f"w{i}"] + 1.0
+    mgr_a.save(2, state2)
+    assert mgr_a.delta_write_fraction() == pytest.approx(
+        CHANGED / N_LEAVES)
+    frac_up = mgr_a.remote_transfer_fraction()
+    assert frac_up < 1.0                      # the acceptance bound
+    assert frac_up <= 0.30                    # ~3/16 of the wire bytes
+
+    # ---- restore the NEW step on host B: only the 3 changed chunks move
+    mgr_local.save(2, state2)
+    ref2, _ = mgr_local.restore(tpl)
+    r0 = store_b.stats["bytes_read"]
+    out2, meta = mgr_b.restore(tpl)
+    assert meta["step"] == 2
+    for a, b in zip(jax.tree.leaves(ref2), jax.tree.leaves(out2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    fetched = store_b.stats["bytes_fetched"] - fetched_cold
+    read = store_b.stats["bytes_read"] - r0
+    frac_fetch = fetched / read
+    assert frac_fetch < 1.0                   # the acceptance bound
+    assert frac_fetch <= 0.30
+    # restore-side pipeline stats were recorded
+    assert mgr_b.stats["restores"] == 2
+    assert mgr_b.stats["restore_io_s"] > 0.0
+    assert mgr_b.stats["restore_decompress_s"] > 0.0
+    assert mgr_b.stats["restore_device_s"] > 0.0
+
+
+def _pingpong_app():
+    def init_fn(mpi):
+        return {"acc": np.zeros(4, np.float64)}
+
+    def step_fn(mpi, st, k):
+        n, me = mpi.Comm_size(), mpi.Comm_rank()
+        mpi.Send(np.full(4, me * 100 + k, np.float64), (me + 1) % n,
+                 tag=k % 5)
+        if k > 0:
+            st["acc"] = st["acc"] + mpi.Recv(source=(me - 1) % n,
+                                             tag=(k - 1) % 5)
+        if k % 4 == 3:
+            st["sum"] = mpi.Allreduce(st["acc"].copy(), "sum")
+        return st
+    return init_fn, step_fn
+
+
+@pytest.mark.parametrize("target", ["shm", "proc"])
+def test_elastic_restart_into_empty_cache_bit_identical(tmp_path, server,
+                                                        target):
+    """MPI layer: a checkpoint written through the chunk service restores
+    into an ELASTIC N->N-1 restart on a host that never saw it (empty
+    cache dir, rank parts fetched from the service) — bit-identical to
+    the same reshape through the warm writer-side store, on thread and
+    process substrates alike."""
+    n, steps, boundary = 3, 14, 7
+    # the dp app is reshape-safe (collectives only — a ring app's
+    # point-to-point topology has no meaning after the world changes)
+    init_fn, step_fn = make_dp_app()
+    spec_w = server.spec_for("mpi", cache=tmp_path / "writer-cache")
+    job = MPIJob(n, step_fn, init_fn, ckpt_store=spec_w)
+    job.checkpoint_at(boundary, tmp_path / "ck", resume=False)
+    job.run(steps, timeout=60)
+    job.stop()
+    man = load_manifest(tmp_path / "ck")
+    assert man["store"].startswith("remote://")        # spec recorded
+
+    # reference: reshape through the WARM writer-side store
+    ref_job = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                             world_size=n - 1, dead_ranks=[n - 1],
+                             ckpt_store=spec_w)
+    ref = ref_job.run(steps, timeout=60)
+    ref_job.stop()
+
+    # "new host": empty cache dir; rank images fetched through the wire
+    cold_spec = server.spec_for("mpi", cache=tmp_path / "fresh-cache")
+    cold_store = chunkstore.open_store(cold_spec)
+    with exact_transports():
+        job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                              transport=target, world_size=n - 1,
+                              dead_ranks=[n - 1], ckpt_store=cold_store)
+    assert cold_store.stats["bytes_fetched"] > 0       # it really moved
+    out = job2.run(steps, timeout=60)
+    job2.stop()
+    for r in range(n - 1):
+        for key in ref[r]["params"]:
+            assert np.array_equal(out[r]["params"][key],
+                                  ref[r]["params"][key]), (target, r, key)
+
+
+def test_adopting_a_store_keeps_self_contained_checkpoints_restorable(
+        tmp_path, server):
+    """A checkpoint written WITHOUT a shared store (chunks inside the
+    dir) must stay restorable when a later restart supplies a
+    ckpt_store the chunks were never uploaded to: the reader falls back
+    from the store to the checkpoint's own chunk_dir."""
+    init_fn, step_fn = _pingpong_app()
+    job = MPIJob(2, step_fn, init_fn)               # self-contained
+    job.checkpoint_at(3, tmp_path / "ck", resume=False)
+    job.run(6, timeout=60)
+    job.stop()
+    adopted = server.spec_for("adopt", cache=tmp_path / "adopt-cache")
+    assert checkpoint_valid(tmp_path / "ck",
+                            store=chunkstore.open_store(adopted))
+    job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                          ckpt_store=adopted)
+    out = job2.run(6, timeout=60)
+    job2.stop()
+    ref_job = MPIJob.restart(tmp_path / "ck", step_fn, init_fn)
+    ref = ref_job.run(6, timeout=60)
+    ref_job.stop()
+    for r in range(2):
+        assert np.array_equal(out[r]["acc"], ref[r]["acc"])
+
+
+def test_unreachable_server_never_gcs_checkpoints(tmp_path):
+    """gc deletes on 'invalid'; a service outage makes every un-cached
+    checkpoint LOOK invalid.  The manager must treat 'can't tell' as
+    'skip this round' — a transient outage can never destroy the
+    manifests of checkpoints whose chunks still sit on the server."""
+    srv = ChunkServer(tmp_path / "srv").start()
+    state = _leaves()
+    spec = srv.spec_for("gc")                        # PURE remote: no cache
+    mgr = CheckpointManager(tmp_path / "root", keep=1, async_write=False,
+                            store=chunkstore.open_store(spec))
+    mgr.save(1, state)
+    mgr.save(2, state)                               # keep=1 gc while UP
+    assert mgr.list_steps() == [2]
+    srv.stop()
+    # a FRESH manager (no cached validity) during the outage: gc must be
+    # a no-op, not a mass rmtree of every "invalid-looking" dir
+    mgr2 = CheckpointManager(tmp_path / "root", keep=1, async_write=False,
+                             store=chunkstore.open_store(spec))
+    mgr2._gc()
+    assert mgr2.list_steps() == [2]
+    assert (tmp_path / "root" / "step_0000000002" / "MANIFEST.json").exists()
+    # the warm-cache manager survives its own gc too (store.gc outage)
+    mgr._gc()
+    assert mgr.list_steps() == [2]
+
+
+def test_checkpoint_valid_cold_cache_via_manifest_spec(tmp_path, server):
+    """A reader with NO local chunks and NO explicit store still
+    validates and loads through the manifest's recorded spec — and a dead
+    server degrades to 'invalid', never an exception."""
+    init_fn, step_fn = _pingpong_app()
+    spec = server.spec_for("val", cache=tmp_path / "cache")
+    job = MPIJob(2, step_fn, init_fn, ckpt_store=spec)
+    job.checkpoint_at(3, tmp_path / "ck", resume=False)
+    job.run(6, timeout=60)
+    job.stop()
+    # simulate the fresh host: the cache (chunk bytes) is gone, only the
+    # checkpoint dir (manifest) travelled
+    import shutil
+    shutil.rmtree(tmp_path / "cache")
+    man = load_manifest(tmp_path / "ck")
+    # the recorded spec is PORTABLE: no writer-local cache dir in it
+    assert man["store"].startswith("remote://") and "cache=" not in \
+        man["store"]
+    assert checkpoint_valid(tmp_path / "ck")
+    assert checkpoint_valid(tmp_path / "ck", deep=True)
+    img = load_rank_image(tmp_path / "ck", 0)
+    assert img.n_ranks == 2
+    assert not (tmp_path / "cache").exists()   # pure-remote reads: no pin
+    server.stop()
+    assert not checkpoint_valid(tmp_path / "ck")
+
+
+# ------------------------------------- SIGKILL mid-upload (process world)
+
+def test_proc_rank_sigkill_mid_chunk_upload_leaves_no_partial(tmp_path,
+                                                              monkeypatch):
+    """A proc-world rank is SIGKILLed in the MIDDLE of uploading a chunk
+    (half a PUT frame on the wire).  The torn frame must never become a
+    chunk visible to has(), the previous valid checkpoint must survive,
+    and the driver recovers reshaped through the same service."""
+    n, steps, ns = 3, 14, "kill"
+    server = ChunkServer(tmp_path / "server").start()
+    try:
+        spec = server.spec_for(ns, cache=tmp_path / "cache")
+        init_fn, dp_step = make_dp_app()
+        latch = tmp_path / "boom.latch"
+
+        orig_put = chunkservice.RemoteChunkStore.put
+
+        def torn_put(self, name, blob, raw_bytes=0):
+            # first upload after arming: ship HALF the frame, then die
+            # like a kill -9 — no unwind, no goodbye (children inherit
+            # this patch through the fork)
+            if os.environ.get("REPRO_TEST_TORN") and not latch.exists():
+                latch.touch()
+                payload = pickle.dumps(
+                    (CHUNK_PROTOCOL_VERSION, self.namespace,
+                     [("put", (name, bytes(blob), raw_bytes))]),
+                    protocol=pickle.HIGHEST_PROTOCOL)
+                s = self._conn()
+                s.sendall(struct.pack("!q", len(payload))
+                          + payload[:len(payload) // 2])
+                os.kill(os.getpid(), signal.SIGKILL)
+            return orig_put(self, name, blob, raw_bytes)
+
+        monkeypatch.setattr(chunkservice.RemoteChunkStore, "put", torn_put)
+
+        # seed a known-good checkpoint BEFORE arming the bomb
+        seed = MPIJob(n, dp_step, init_fn, transport="proc",
+                      ckpt_store=spec)
+        seed.checkpoint_at(4, tmp_path / "at_00000004", resume=False)
+        seed.run(steps, timeout=60)
+        seed.stop()
+        assert checkpoint_valid(tmp_path / "at_00000004", deep=True)
+
+        monkeypatch.setenv("REPRO_TEST_TORN", "1")
+        driver = FaultTolerantDriver(
+            job_factory=lambda ws, ms: MPIJob(
+                ws or n, dp_step, init_fn, transport="proc",
+                ckpt_store=spec, heartbeat_timeout=5.0, membership=ms,
+                coord_timeout=30.0),
+            restart_factory=lambda d, tr, ws, dead, ms: MPIJob.restart(
+                d, dp_step, init_fn, transport="proc", world_size=ws,
+                dead_ranks=dead, membership=ms, ckpt_store=spec,
+                heartbeat_timeout=5.0, coord_timeout=30.0),
+            ckpt_root=tmp_path, ckpt_every=4)
+        out = driver.run(steps, transport_after_failure="proc", timeout=90)
+
+        assert latch.exists(), "the torn upload must have happened"
+        assert len(out) == n - 1
+        assert any(e.startswith("dead:") for e in driver.events)
+        assert driver.events[-1] == "done"
+        # the previous checkpoint survived, fully valid, nothing gc'd
+        assert checkpoint_valid(tmp_path / "at_00000004", deep=True)
+        # and the SERVER holds no partial/corrupt chunk: every stored
+        # chunk's bytes re-derive its name, no tmp litter
+        backing = server.backing(ns)
+        names = backing.list_chunks()
+        assert names, "the service must have received real chunks"
+        for name in names:
+            assert content_digest(backing.get(name)) == name.split(".")[0]
+        assert not any(".tmp" in p.name for p in backing.root.iterdir())
+        # recovery re-checkpointed the reshaped world through the service
+        man8 = load_manifest(tmp_path / "at_00000008")
+        assert man8["n_ranks"] == n - 1 and man8["generation"] == 1
+    finally:
+        server.stop()

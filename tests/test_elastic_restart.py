@@ -127,6 +127,71 @@ def test_total_outage_restarts_full_world(tmp_path):
     assert driver.events[-1] == "done"
 
 
+def test_straggler_excluded_at_checkpoint_boundary(tmp_path):
+    """The straggler policy (ROADMAP item): a rank the StragglerTracker
+    flags for straggler_windows consecutive monitor polls is excluded at
+    the next checkpoint boundary — the driver commits an immediate
+    checkpoint, bumps the generation, aborts, and restarts the world
+    WITHOUT the slow rank, resuming from that just-written boundary."""
+    import time as _time
+    steps, n, victim = 30, 3, 2
+
+    # communicate every 10th step, not every step: under per-step
+    # collectives EVERY rank's step duration collapses to the slowest
+    # rank's (the allreduce wait), and per-step telemetry cannot tell who
+    # the straggler is — loosely-coupled phases are the workload the
+    # tracker's signal exists for
+    def init_fn(mpi):
+        return {"params": {"w": np.zeros(2, np.float64)}}
+
+    def lagging_step(mpi, st, k):
+        # generation-gated so the post-exclusion incarnation runs clean
+        # on every substrate (threads and forked processes alike)
+        _time.sleep(0.08 if (mpi.generation == 0 and mpi.rank == victim)
+                    else 0.001)
+        st = dict(st, params={"w": st["params"]["w"] + 1.0})
+        if k % 10 == 9:
+            st["sum"] = mpi.Allreduce(np.ones(2, np.float64), "sum")
+        return st
+
+    driver = FaultTolerantDriver(
+        job_factory=lambda ws, ms: MPIJob(ws or n, lagging_step, init_fn,
+                                          transport="shm", membership=ms,
+                                          heartbeat_timeout=5.0,
+                                          coord_timeout=30.0),
+        restart_factory=lambda d, tr, ws, dead, ms: MPIJob.restart(
+            d, lagging_step, init_fn, transport=tr, world_size=ws,
+            dead_ranks=dead, membership=ms, heartbeat_timeout=5.0,
+            coord_timeout=30.0),
+        # ckpt_every beyond the horizon: the ONLY checkpoint of
+        # generation 0 is the one the exclusion itself commits
+        ckpt_root=tmp_path, ckpt_every=100,
+        straggler_windows=3)
+    out = driver.run(steps, transport_after_failure="shm", timeout=90)
+
+    assert len(out) == n - 1
+    for r in range(n - 1):
+        # every step ran exactly once across the exclusion boundary, and
+        # the final allreduce summed over the RESHAPED world of 2
+        assert np.array_equal(out[r]["params"]["w"],
+                              np.full(2, float(steps)))
+        assert np.array_equal(out[r]["sum"], np.full(2, float(n - 1)))
+    # the policy fired: a straggler event (not a death), preceded by the
+    # boundary checkpoint it resumed from
+    assert any(e.startswith(f"straggler:[{victim}]") for e in driver.events)
+    assert any(e.startswith("ckpt:strag_g0000") for e in driver.events)
+    assert any(e.startswith("restart:strag_g0000")
+               and f"world={n - 1}" in e for e in driver.events)
+    assert driver.events[-1] == "done"
+    assert driver.membership.generation == 1
+    assert driver.membership.world_size == n - 1
+    # the exclusion checkpoint recorded the FULL pre-exclusion world
+    strag_ck = next(d for d in tmp_path.iterdir()
+                    if d.name.startswith("strag_g0000"))
+    man = load_manifest(strag_ck)
+    assert man["n_ranks"] == n and man["generation"] == 0
+
+
 # ----------------------------------------------------- bit-identical resume
 
 def test_elastic_restart_bit_identical_states(tmp_path):
