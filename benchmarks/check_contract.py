@@ -21,6 +21,10 @@ CI runners are noise):
     save/restore through the chunk service move exactly 1.0 of their
     bytes, warm ones at most the committed ceiling (~3/16), and both
     restores are bit-identical.
+  * data-plane speedups (BENCH_data_plane.json): scatter-gather framing
+    vs the in-bench PR-5 concat replica must stay above the committed
+    floor on tcp, the shm ring above its (higher) floor when the host
+    has POSIX shared memory, and cross-fabric results bit-identical.
 """
 from __future__ import annotations
 
@@ -103,6 +107,24 @@ def main() -> None:
         val = rows.get(name)
         if val is not None:
             check(name, val == rc["cold_fractions_required"], f"{val}")
+
+    dp = json.loads((REPO / "BENCH_data_plane.json").read_text())
+    dpc = dp["contract"]
+    for row, full_key, smoke_key in (
+            ("data_plane/sg_speedup_vs_legacy_x",
+             "sg_speedup_min_x", "ci_smoke_sg_speedup_min_x"),
+            ("data_plane/shmring_speedup_vs_legacy_x",
+             "shmring_speedup_min_x", "ci_smoke_shmring_speedup_min_x")):
+        val = rows.get(row)
+        if val is None:
+            continue            # suite not run / shm unavailable: no gate
+        floor = dpc[smoke_key if smoke else full_key]
+        check(row, val >= floor,
+              f"{val:.2f}x (floor {floor}x{' [smoke]' if smoke else ''})")
+    val = rows.get("data_plane/fabric_bit_identical")
+    if val is not None:
+        check("data_plane/fabric_bit_identical",
+              val == dpc["bit_identical_required"], f"{val}")
 
     missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
                               ("delta_write_fraction", fresh_frac))

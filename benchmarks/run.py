@@ -16,11 +16,12 @@ import traceback
 from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_ckpt_pipeline,
-                        bench_drain, bench_proxy_overhead,
+                        bench_data_plane, bench_drain, bench_proxy_overhead,
                         bench_remote_store, bench_restart, bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
+    "data_plane": bench_data_plane.run,
     "ckpt_overhead": bench_ckpt_overhead.run,
     "ckpt_pipeline": bench_ckpt_pipeline.run,
     "restart": bench_restart.run,

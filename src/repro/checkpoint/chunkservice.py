@@ -7,9 +7,14 @@ filesystem).  PR 4 made every rank a process behind a socket; the chunk
 directory was the last host-local assumption.  This module removes it:
 
   * ``ChunkServer`` — serves a backing ``ChunkStore`` over sockets,
-    reusing the process-world framing (``transport.read_frame`` /
-    ``write_frame``: 8-byte length + pickle) and the same versioned
-    command-batch shape the proxy wire protocol uses.  Commands:
+    reusing the process-world framing (``transport.write_frame_parts``
+    / ``read_frame_mv``: 8-byte length + scatter-gather pickle body)
+    and the same versioned command-batch shape the proxy wire protocol
+    uses.  Chunk blobs at or above ``_OOB_MIN`` travel as pickle
+    protocol-5 out-of-band buffers: a PUT gathers header + blob straight
+    from the caller's buffer into ``sendmsg`` and a GET reply is decoded
+    as a view over the one receive buffer — no intermediate ``bytes``
+    concatenation on either side, in either direction.  Commands:
     HAS-many, PUT, GET(-many), REF, GC-live-set, SIZE, LIST, STATS.
     A request frame is read IN FULL before anything is applied, and the
     backing store commits with tmp-file + atomic rename — so a client
@@ -55,12 +60,33 @@ from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.chunkstore import ChunkStore, ChunkStoreBackend
-from repro.core.transport import read_frame, write_frame
+from repro.core.transport import (dumps_parts, loads_body, read_frame_mv,
+                                  write_frame_parts)
 
 #: versioned command batches, like the proxy wire protocol: a request is
 #: ``(CHUNK_PROTOCOL_VERSION, namespace, [(cmd, args), ...])`` and the
-#: reply is ``(True, [result, ...])`` or ``(False, exception)``
+#: reply is ``(True, [result, ...])`` or ``(False, exception)``.  Still
+#: v1: the SG body encoding is self-describing (``loads_body`` accepts
+#: both plain-pickle and SG bodies), so the frame change needs no bump.
 CHUNK_PROTOCOL_VERSION = 1
+
+#: blobs at least this large ride out-of-band (``pickle.PickleBuffer``)
+#: in both directions; below it the plain in-band pickle is cheaper than
+#: an extra iovec entry
+_OOB_MIN = 1 << 16
+
+
+def _oob(blob) -> Any:
+    """Large blobs as zero-copy out-of-band buffers, small ones as bytes.
+    The receiving side sees a memoryview over its single receive buffer
+    for the former — ``_as_bytes`` converts at the API boundary."""
+    if len(blob) >= _OOB_MIN:
+        return pickle.PickleBuffer(blob)
+    return bytes(blob)
+
+
+def _as_bytes(blob) -> bytes:
+    return blob if isinstance(blob, bytes) else bytes(blob)
 
 #: chunk names and namespaces are digest-shaped tokens; anything else is
 #: rejected server-side (a name is used as a path component)
@@ -246,11 +272,11 @@ class ChunkServer:
         PUT is dropped on the floor, never applied."""
         try:
             while not self._halt.is_set():
-                blob = read_frame(conn)
+                blob = read_frame_mv(conn)
                 if blob is None:
                     return
                 try:
-                    version, ns, cmds = pickle.loads(blob)
+                    version, ns, cmds = loads_body(blob)
                     if version != CHUNK_PROTOCOL_VERSION:
                         raise ChunkServiceError(
                             f"client speaks chunk protocol v{version}, "
@@ -261,8 +287,7 @@ class ChunkServer:
                     reply = (True, results)
                 except Exception as e:      # noqa: BLE001 - shipped back
                     reply = (False, e)
-                write_frame(conn, pickle.dumps(
-                    reply, protocol=pickle.HIGHEST_PROTOCOL))
+                write_frame_parts(conn, dumps_parts(reply))
         except (OSError, pickle.PickleError):
             return
         finally:
@@ -292,18 +317,20 @@ class ChunkServer:
         if cmd == "put":
             name, blob, raw = args
             _check_token(name, "chunk name")
+            # blob may be a memoryview over the request's receive buffer
+            # (out-of-band PUT); the store writes any buffer object
             return store.put(name, blob, raw_bytes=raw)
         if cmd == "get":
             (name,) = args
             _check_token(name, "chunk name")
-            return store.get(name)
+            return _oob(store.get(name))
         if cmd == "get_many":
             (names,) = args
             out = {}
             for n in names:
                 _check_token(n, "chunk name")
                 if store.has(n):
-                    out[n] = store.get(n)
+                    out[n] = _oob(store.get(n))
             return out
         if cmd == "ref":
             name, raw = args
@@ -379,10 +406,9 @@ class RemoteChunkStore(ChunkStoreBackend):
         with self._lock:
             s = self._conn()
             try:
-                write_frame(s, pickle.dumps(
-                    (CHUNK_PROTOCOL_VERSION, self.namespace, list(cmds)),
-                    protocol=pickle.HIGHEST_PROTOCOL))
-                blob = read_frame(s)
+                write_frame_parts(s, dumps_parts(
+                    (CHUNK_PROTOCOL_VERSION, self.namespace, list(cmds))))
+                blob = read_frame_mv(s)
             except OSError as e:
                 self.close()
                 raise ChunkServiceError(
@@ -394,7 +420,7 @@ class RemoteChunkStore(ChunkStoreBackend):
                     f"chunk server {self.host}:{self.port} closed the "
                     f"connection mid-reply")
             self.stats["round_trips"] += 1
-            ok, payload = pickle.loads(blob)
+            ok, payload = loads_body(blob)
             if not ok:
                 raise payload
             return payload
@@ -427,17 +453,20 @@ class RemoteChunkStore(ChunkStoreBackend):
         return {n: present.get(n) for n in names}
 
     def get(self, name: str) -> bytes:
-        blob = self._call("get", name)
+        # out-of-band replies arrive as a memoryview over the receive
+        # buffer; the public API promises bytes
+        blob = _as_bytes(self._call("get", name))
         self.stats["bytes_fetched"] += len(blob)
         return blob
 
     def get_many(self, names: Sequence[str]) -> Dict[str, bytes]:
-        out = self._call("get_many", list(names))
+        out = {n: _as_bytes(b)
+               for n, b in self._call("get_many", list(names)).items()}
         self.stats["bytes_fetched"] += sum(len(b) for b in out.values())
         return out
 
     def put(self, name: str, blob: bytes, raw_bytes: int = 0) -> bool:
-        wrote = self._call("put", name, bytes(blob), raw_bytes)
+        wrote = self._call("put", name, _oob(blob), raw_bytes)
         raw = raw_bytes or len(blob)
         if wrote:
             self.stats["chunks_written"] += 1

@@ -24,6 +24,7 @@ batched wire protocol — DESIGN.md §3/§5):
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Any, Callable, List, Optional, Tuple
 
@@ -32,7 +33,7 @@ import numpy as np
 from repro.core.coordinator import Coordinator, PHASE_PENDING, PHASE_RUN
 from repro.core.drain import MessageCache, remap_cache_snapshot
 from repro.core.messages import (ANY_SOURCE, ANY_TAG, COLL_TAG_BASE, DATATYPES,
-                                 Status, pack, unpack)
+                                 Status, pack, payload_nbytes, unpack)
 from repro.core.proxy import (CMD_POLL_ALL, CMD_POLL_WAIT, CMD_REGISTER_COMM,
                               CMD_REGISTER_RANK, CMD_SEND,
                               CMD_UNREGISTER_COMM, ProxyChannel)
@@ -70,6 +71,23 @@ class CheckpointExit(Exception):
     """Raised out of the step loop when a checkpoint requested exit."""
 
 
+def _collective_op(fn):
+    """Attribute waiting inside this call to COLLECTIVE time (not plain
+    recv time): the compute/wait telemetry split (DESIGN.md §12) needs to
+    see through per-step collectives, where every rank's wall-clock step
+    collapses to the slowest rank's and durations alone cannot tell who
+    the straggler is.  Depth-counted so nested collectives (Allreduce ->
+    Reduce -> Bcast) attribute once."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        self._coll_depth += 1
+        try:
+            return fn(self, *args, **kwargs)
+        finally:
+            self._coll_depth -= 1
+    return wrapper
+
+
 class MPI:
     def __init__(self, rank: int, n_ranks: int, channel: ProxyChannel,
                  coordinator: Coordinator):
@@ -84,6 +102,12 @@ class MPI:
         self.received = 0
         self.bytes_sent = 0
         self.bytes_received = 0
+        # compute/wait split telemetry: µs this rank spent BLOCKED on the
+        # transport, attributed to collectives vs plain recv/poll by
+        # _coll_depth at the moment of the wait (see _collective_op)
+        self.wait_recv_us = 0
+        self.wait_coll_us = 0
+        self._coll_depth = 0
         self.coll_seq: dict = {COMM_WORLD: 0}
         self.step_idx = 0                 # maintained by the runtime
         #: membership generation this rank joined with — stamped on every
@@ -164,7 +188,7 @@ class MPI:
         self.channel.send_async(CMD_SEND, self._world_dst(dest, comm), tag,
                                 comm, payload, dtype, count)
         self.sent += 1
-        self.bytes_sent += len(payload)
+        self.bytes_sent += payload_nbytes(payload)
         self._maybe_report()
 
     def _pump_all(self) -> int:
@@ -176,15 +200,25 @@ class MPI:
     def _pump_wait(self) -> int:
         """Blocking bulk poll: the proxy parks on the transport up to
         _POLL_WAIT_S and replies with everything that arrived.  Buffered
-        sends piggyback first, so this also flushes."""
-        return self._absorb(self.channel.call(CMD_POLL_WAIT, _POLL_WAIT_S))
+        sends piggyback first, so this also flushes.  The time blocked here
+        IS the wait half of the compute/wait telemetry split."""
+        t0 = time.perf_counter()
+        try:
+            return self._absorb(self.channel.call(CMD_POLL_WAIT,
+                                                  _POLL_WAIT_S))
+        finally:
+            us = int((time.perf_counter() - t0) * 1e6)
+            if self._coll_depth:
+                self.wait_coll_us += us
+            else:
+                self.wait_recv_us += us
 
     def _absorb(self, envs: list) -> int:
         if not envs:
             return 0
         self.cache.put_many(envs)
         self.received += len(envs)
-        self.bytes_received += sum(len(e.payload) for e in envs)
+        self.bytes_received += sum(payload_nbytes(e.payload) for e in envs)
         self._maybe_report()
         return len(envs)
 
@@ -308,6 +342,7 @@ class MPI:
         self.coll_seq[comm] = seq + 1
         return COLL_TAG_BASE + (seq << 4) + op_code
 
+    @_collective_op
     def Barrier(self, comm: int = COMM_WORLD) -> None:
         """Binomial-tree barrier rooted at comm-rank 0: fold-in up the tree,
         release wave back down — 2·log2(n) critical-path hops, every token
@@ -336,6 +371,7 @@ class MPI:
                 self.Recv(source=me - k, tag=tag_out, comm=comm)
             k *= 2
 
+    @_collective_op
     def Bcast(self, value: Any, root: int = 0, comm: int = COMM_WORLD) -> Any:
         """Binomial-tree broadcast."""
         info = self.vids.comms[comm]
@@ -353,6 +389,7 @@ class MPI:
             k *= 2
         return value
 
+    @_collective_op
     def Scatter(self, values: Optional[List[Any]], root: int = 0,
                 comm: int = COMM_WORLD) -> Any:
         info = self.vids.comms[comm]
@@ -366,6 +403,7 @@ class MPI:
             return values[me]
         return self.Recv(source=root, tag=tag, comm=comm)
 
+    @_collective_op
     def Gather(self, value: Any, root: int = 0,
                comm: int = COMM_WORLD) -> Optional[List[Any]]:
         info = self.vids.comms[comm]
@@ -383,6 +421,7 @@ class MPI:
         self._send_raw(value, root, tag, comm)
         return None
 
+    @_collective_op
     def Allgather(self, value: Any, comm: int = COMM_WORLD) -> List[Any]:
         """Ring allgather (n-1 steps)."""
         info = self.vids.comms[comm]
@@ -397,6 +436,7 @@ class MPI:
             out[cur_idx] = cur
         return out
 
+    @_collective_op
     def Reduce(self, value: Any, op: str = "sum", root: int = 0,
                comm: int = COMM_WORLD) -> Any:
         """Binomial-tree reduce."""
@@ -419,6 +459,7 @@ class MPI:
             k *= 2
         return acc if rel == 0 else None
 
+    @_collective_op
     def Allreduce(self, value: Any, op: str = "sum",
                   comm: int = COMM_WORLD,
                   algo: Optional[str] = None) -> Any:
@@ -480,6 +521,7 @@ class MPI:
         self._send_raw(value, dest, sendtag, comm)
         return self.Recv(source=source, tag=recvtag, comm=comm)
 
+    @_collective_op
     def Alltoall(self, values: List[Any], comm: int = COMM_WORLD) -> List[Any]:
         """values[j] goes to comm-rank j; returns what each rank sent me."""
         info = self.vids.comms[comm]
@@ -494,6 +536,7 @@ class MPI:
             out[src] = self.Sendrecv(values[dst], dst, tag, src, tag, comm)
         return out
 
+    @_collective_op
     def Reduce_scatter(self, value: Any, op: str = "sum",
                        comm: int = COMM_WORLD) -> Any:
         """Ring reduce-scatter: rank i returns the fully-reduced block i of
@@ -567,6 +610,30 @@ class MPI:
         self.admin.append("comm_free", (), comm)
         self.channel.call(CMD_UNREGISTER_COMM, comm)
 
+    # -------------------------------------------------------------- telemetry
+    def wait_us_total(self) -> int:
+        """Total µs blocked on the transport (recv + collective); the
+        runtime differences this across a step to split wall time into
+        compute vs wait for the StragglerTracker."""
+        return self.wait_recv_us + self.wait_coll_us
+
+    def telemetry(self) -> dict:
+        """Per-rank data-plane counter snapshot (DESIGN.md §12): the
+        compute/wait split plus bytes moved per fabric.  Piggybacked to the
+        coordinator at step boundaries and surfaced via MPIJob.stats()."""
+        ch = getattr(self.channel, "stats", None) or {}
+        return {
+            "wait_recv_us": self.wait_recv_us,
+            "wait_coll_us": self.wait_coll_us,
+            "bytes_sent": self.bytes_sent,
+            "bytes_received": self.bytes_received,
+            "ring_bytes": int(ch.get("ring_bytes", 0)),
+            "round_trips": int(ch.get("round_trips", 0)),
+            "async_batches": int(ch.get("async_batches", 0)),
+            "sent": self.sent,
+            "received": self.received,
+        }
+
     # ------------------------------------------------------------- checkpoint
     def snapshot(self) -> dict:
         return {
@@ -579,6 +646,8 @@ class MPI:
             "received": self.received,
             "bytes_sent": self.bytes_sent,
             "bytes_received": self.bytes_received,
+            "wait_recv_us": self.wait_recv_us,
+            "wait_coll_us": self.wait_coll_us,
             "coll_seq": dict(self.coll_seq),
         }
 
@@ -595,6 +664,8 @@ class MPI:
         self.received = snap["received"]
         self.bytes_sent = snap.get("bytes_sent", 0)
         self.bytes_received = snap.get("bytes_received", 0)
+        self.wait_recv_us = snap.get("wait_recv_us", 0)
+        self.wait_coll_us = snap.get("wait_coll_us", 0)
         self.coll_seq = dict(snap["coll_seq"])
         self._initialized = True
         self._report()
@@ -634,6 +705,8 @@ def remap_mpi_snapshot(snap: dict, rank_map: RankMap, new_rank: int,
         "received": 0,
         "bytes_sent": snap.get("bytes_sent", 0),
         "bytes_received": snap.get("bytes_received", 0),
+        "wait_recv_us": snap.get("wait_recv_us", 0),
+        "wait_coll_us": snap.get("wait_coll_us", 0),
         "coll_seq": coll_seq,
     }
 

@@ -109,6 +109,10 @@ class Coordinator:
                       "drained_messages": 0, "checkpoints": 0,
                       "counter_reports": 0, "empty_channel_snapshots": 0,
                       "stale_rejected": 0}
+        #: per-generation data-plane telemetry: generation -> rank ->
+        #: latest counter dict (compute/wait split, bytes per fabric);
+        #: ranks overwrite their own slot, so memory is O(gens x ranks)
+        self._telemetry: Dict[int, Dict[int, dict]] = {}
 
     # ---- membership ---------------------------------------------------------
     @property
@@ -171,6 +175,33 @@ class Coordinator:
         endpoint via this, since they cannot touch the dict in-process."""
         with self._lock:
             self.stats[key] = self.stats.get(key, 0) + n
+
+    def report_telemetry(self, rank: int, counters: dict,
+                         generation: Optional[int] = None) -> None:
+        """Latest per-rank data-plane counters (MPI.telemetry()), keyed by
+        membership generation.  Piggybacks on the same stamped paths as
+        report_counters: a zombie rank from a superseded world is rejected,
+        not aggregated."""
+        self._check_gen(generation)
+        with self._lock:
+            gen = self.membership.generation if generation is None \
+                else generation
+            self._telemetry.setdefault(gen, {})[rank] = dict(counters)
+
+    def telemetry_summary(self, generation: Optional[int] = None) -> dict:
+        """Aggregate view for one generation (default: current): per-rank
+        counter dicts plus a numeric total across ranks."""
+        with self._lock:
+            gen = self.membership.generation if generation is None \
+                else generation
+            ranks = {r: dict(c) for r, c in
+                     self._telemetry.get(gen, {}).items()}
+        total: Dict[str, float] = {}
+        for c in ranks.values():
+            for k, v in c.items():
+                if isinstance(v, (int, float)):
+                    total[k] = total.get(k, 0) + v
+        return {"generation": gen, "ranks": ranks, "total": total}
 
     def note_empty_channel(self, rank: int) -> None:
         """Rank verified its proxy channel empty right before snapshotting

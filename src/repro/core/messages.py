@@ -39,7 +39,7 @@ class Envelope:
     tag: int
     comm_vid: int
     seq: int                 # per (src,dst) monotonically increasing
-    payload: bytes
+    payload: Any             # bytes (pickled value) or a known-dtype ndarray
     dtype: str = "MPI_BYTE"
     count: int = 0
 
@@ -51,18 +51,38 @@ class Envelope:
         return pickle.loads(b)
 
 
-def pack(obj: Any) -> tuple[bytes, str, int]:
-    """Application value -> (payload, mpi_dtype, count)."""
+def pack(obj: Any) -> tuple[Any, str, int]:
+    """Application value -> (payload, mpi_dtype, count).
+
+    Known-dtype ndarrays stay ARRAYS (a private contiguous copy — senders
+    may mutate their buffer right after a nonblocking send): on socket
+    paths they ride scatter-gather frames as pickle protocol-5 out-of-band
+    buffers instead of being pre-pickled into bytes, and the shm-ring
+    fabric parks them in shared memory behind a descriptor.  Everything
+    else pickles to opaque bytes exactly as before — the proxy still never
+    interprets application data."""
     if isinstance(obj, np.ndarray):
         dt = _NP_TO_MPI.get(obj.dtype)
         if dt is not None:
-            return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL), dt, obj.size
+            return np.ascontiguousarray(obj).copy(), dt, obj.size
     raw = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     return raw, "MPI_BYTE", len(raw)
 
 
 def unpack(env: Envelope) -> Any:
-    return pickle.loads(env.payload)
+    """Payload -> application value.  Array payloads come back writable —
+    copies only when the delivered view is readonly (e.g. decoded from an
+    immutable bytes body)."""
+    p = env.payload
+    if isinstance(p, np.ndarray):
+        return p if p.flags.writeable else p.copy()
+    return pickle.loads(p)
+
+
+def payload_nbytes(p: Any) -> int:
+    """Byte size of a payload, array or bytes (``len()`` on an ndarray
+    would count first-axis elements, not bytes)."""
+    return int(p.nbytes) if isinstance(p, np.ndarray) else len(p)
 
 
 @dataclass

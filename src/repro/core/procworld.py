@@ -43,7 +43,9 @@ Wire protocol additions (served by the endpoint, not by ProxyCore):
   ("ping", ())                       liveness + coord-state refresh
   ("coord", (method, args, kwargs))  whitelisted Coordinator RPC
   ("stats_add", (key, n))            per-rank stat into coord.stats
-  ("straggler", (rank, seconds))     per-step duration -> StragglerTracker
+  ("straggler", (rank, wall[, compute]))  per-step wall + compute split
+                                     -> StragglerTracker
+  ("telemetry", (rank, counters))    MPI.telemetry() counters -> coordinator
   ("ckpt_info", ())                  -> (ckpt_dir, chunk_store_spec)
   ("ckpt_entry", (rank, entry, step))  manifest entry; parent commits last
   ("fire_trigger", ())               first rank at a checkpoint_at step
@@ -69,13 +71,20 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
+import dataclasses
+
+import numpy as np
+
 from repro.checkpoint import chunkstore
 from repro.core.ckpt_protocol import RankImage, save_rank_image
 from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
                                     PHASE_PENDING, PHASE_RESUME, PHASE_RUN)
-from repro.core.proxy import (CMD_POLL_ALL, PROTOCOL_VERSION, ProtocolError,
-                              ProxyChannel, ProxyCore)
-from repro.core.transport import read_exact, read_frame, write_frame
+from repro.core.dataplane import RING_PAYLOAD_MIN, RingRef, ShmRing
+from repro.core.messages import Envelope
+from repro.core.proxy import (CMD_POLL_ALL, CMD_SEND, PROTOCOL_VERSION,
+                              ProtocolError, ProxyChannel, ProxyCore)
+from repro.core.transport import (dumps_parts, loads_body, read_exact,
+                                  read_frame_mv, write_frame_parts)
 
 _WORLD_SEQ = itertools.count()
 
@@ -132,6 +141,13 @@ class ProcWorld:
         self._halt = threading.Event()
         self._launched = False
         self.exit_codes: Dict[int, Optional[int]] = {}
+        # shared-memory tensor ring (shmring fabric): created BEFORE the
+        # children fork so the segment + lock are inherited by address
+        # space; None = ringless (plain proc, or /dev/shm unavailable —
+        # payloads then ship inline, slower but bit-identical)
+        self.ring: Optional[ShmRing] = (
+            ShmRing.create()
+            if getattr(job.transport, "use_ring", False) else None)
 
     # ------------------------------------------------------------- plumbing
     def pids(self) -> Dict[int, int]:
@@ -223,11 +239,11 @@ class ProcWorld:
         deferred: Optional[Exception] = None
         try:
             while True:
-                blob = read_frame(conn)
+                blob = read_frame_mv(conn)
                 if blob is None:
                     return                      # EOF / torn frame
                 job.heartbeat.ping(rank)
-                version, cmds, want_reply = pickle.loads(blob)
+                version, cmds, want_reply = loads_body(blob)
                 if version != PROTOCOL_VERSION:
                     err: Exception = ProtocolError(
                         f"child speaks v{version}, "
@@ -269,13 +285,14 @@ class ProcWorld:
                     f"mid-protocol (killed?); log: {self.log_path(rank)}"))
 
     def _reply(self, conn: socket.socket, ok: bool, value: Any) -> None:
+        # SG framing: poll replies carrying tensor envelopes ship the
+        # arrays as out-of-band buffers by gather write — no concatenation
+        # of header + pickled body, no pickling of the tensor bytes
         try:
-            payload = pickle.dumps((ok, value, self._coord_state()),
-                                   protocol=pickle.HIGHEST_PROTOCOL)
+            parts = dumps_parts((ok, value, self._coord_state()))
         except Exception as e:                 # unpicklable result
-            payload = pickle.dumps((False, _safe_exc(e), self._coord_state()),
-                                   protocol=pickle.HIGHEST_PROTOCOL)
-        write_frame(conn, payload)
+            parts = dumps_parts((False, _safe_exc(e), self._coord_state()))
+        write_frame_parts(conn, parts)
 
     def _execute(self, core: ProxyCore, rank: int, cmds) -> Any:
         """Run one batch: plain proxy commands go through the shared
@@ -310,8 +327,13 @@ class ProcWorld:
             job.coord.stat_add(key, n)
             return None
         if cmd == "straggler":
-            r, seconds = args
-            job.stragglers.record(r, seconds)
+            r, wall, *rest = args      # 2-arg form = wall-clock only
+            job.stragglers.record(r, wall,
+                                  compute=rest[0] if rest else None)
+            return None
+        if cmd == "telemetry":
+            r, counters = args
+            job.coord.report_telemetry(r, counters)
             return None
         if cmd == "ckpt_info":
             # the store SPEC, not a directory: a child rebuilds an
@@ -386,6 +408,11 @@ class ProcWorld:
             if time.monotonic() > deadline:
                 raise TimeoutError(f"rank-{alive[0]} did not finish")
             time.sleep(0.005)
+        # every child has exited, so no ring descriptor can be in flight:
+        # unlink the segment now (stop() covers the kill/timeout paths)
+        if self.ring is not None:
+            self.ring.destroy()
+            self.ring = None
         if job.errors:
             rank, err = next(iter(job.errors.items()))
             raise RuntimeError(f"rank {rank} failed: {err!r}") from err
@@ -422,11 +449,14 @@ class ProcWorld:
             self.exit_codes.setdefault(r, p.exitcode)
         for t in self._threads:
             t.join(5.0)
+        if self.ring is not None:
+            self.ring.destroy()
+            self.ring = None
 
 
 _ENDPOINT_CMDS = frozenset({
-    "ping", "coord", "stats_add", "straggler", "ckpt_info", "ckpt_entry",
-    "fire_trigger", "finish", "ckpt_exit", "fail",
+    "ping", "coord", "stats_add", "straggler", "telemetry", "ckpt_info",
+    "ckpt_entry", "fire_trigger", "finish", "ckpt_exit", "fail",
 })
 
 
@@ -440,14 +470,23 @@ class SocketChannel(ProxyChannel):
     Subclasses the real channel: batching, MAX_BATCH auto-flush, and the
     stats contract are INHERITED, so the plugin (api.MPI) — and the tests
     that assert on round_trips/async_batches — cannot tell it from the
-    queue channel.  Only the frame-transport hooks differ: frames are
-    pickled over the socket, and every reply refreshes ``coord_state``
-    for free, which keeps the child's view of the checkpoint FSM one
-    round trip fresh."""
+    queue channel.  Only the frame-transport hooks differ: SG frames over
+    the socket (tensor payloads as out-of-band buffers), and every reply
+    refreshes ``coord_state`` for free, which keeps the child's view of
+    the checkpoint FSM one round trip fresh.
 
-    def __init__(self, port: int, rank: int, connect_timeout: float = 10.0):
+    With a ring (shmring fabric) the hooks add the zero-copy rewrite:
+    outbound tensor payloads >= RING_PAYLOAD_MIN are parked in the shared
+    segment and the frame carries a RingRef descriptor; inbound envelopes
+    have their descriptors RESOLVED (copied out + slot freed) before
+    anything reaches the plugin — the MessageCache, and therefore any
+    checkpoint, can never hold a dangling descriptor."""
+
+    def __init__(self, port: int, rank: int, connect_timeout: float = 10.0,
+                 ring: Optional[ShmRing] = None):
         super().__init__()
         self.rank = rank
+        self.ring = ring
         self.sock = socket.create_connection(("127.0.0.1", port),
                                              timeout=connect_timeout)
         self.sock.settimeout(None)
@@ -458,22 +497,53 @@ class SocketChannel(ProxyChannel):
 
     # ---- frame transport hooks ---------------------------------------------
     def _push(self, frame: tuple) -> None:
+        ring = self.ring
+        if ring is not None:
+            version, cmds, want_reply = frame
+            out = None
+            for i, (cmd, args) in enumerate(cmds):
+                if cmd != CMD_SEND:
+                    continue
+                payload = args[3]      # (dst, tag, comm, payload, dt, count)
+                if (isinstance(payload, np.ndarray)
+                        and payload.nbytes >= RING_PAYLOAD_MIN):
+                    ref = ring.try_put(payload)
+                    if ref is not None:     # else ring full: ship inline
+                        if out is None:
+                            out = list(cmds)
+                        out[i] = (cmd, args[:3] + (ref,) + args[4:])
+                        self.stats["ring_bytes"] += payload.nbytes
+            if out is not None:
+                frame = (version, out, want_reply)
         try:
-            write_frame(self.sock, pickle.dumps(
-                frame, protocol=pickle.HIGHEST_PROTOCOL))
+            write_frame_parts(self.sock, dumps_parts(frame))
         except OSError:
             self.closed = True
             raise RuntimeError("proxy channel closed") from None
 
+    def _resolve(self, val: Any) -> Any:
+        """Swap RingRef payloads for the real tensors (freeing the slots).
+        Runs on every reply, BEFORE the value reaches the plugin."""
+        if isinstance(val, Envelope):
+            if isinstance(val.payload, RingRef):
+                return dataclasses.replace(
+                    val, payload=self.ring.read(val.payload))
+            return val
+        if isinstance(val, list):
+            return [self._resolve(v) for v in val]
+        return val
+
     def _await_reply(self) -> Any:
-        blob = read_frame(self.sock)
+        blob = read_frame_mv(self.sock)
         if blob is None:
             self.closed = True
             raise RuntimeError("proxy channel closed")
-        ok, val, state = pickle.loads(blob)
+        ok, val, state = loads_body(blob)
         self.coord_state = state
         if not ok:
             raise val
+        if self.ring is not None:
+            val = self._resolve(val)
         return val
 
     def poll_all_fast(self) -> Any:
@@ -626,7 +696,7 @@ def _child_main(job, rank: int, port: int, n_steps: int,
             except Exception:
                 pass
         from repro.core.api import MPI
-        chan = SocketChannel(port, rank)
+        chan = SocketChannel(port, rank, ring=getattr(job._proc, "ring", None))
         coord = CoordClient(chan, generation=job.coord.generation,
                             timeout=job.coord.timeout)
         mpi = MPI(rank, job.n, chan, coord)
@@ -665,10 +735,16 @@ def _child_main(job, rank: int, port: int, n_steps: int,
                 if agreed is None:
                     time.sleep(0.0002)
                     continue
+            w0 = mpi.wait_us_total()
             t_step = time.time()
             state = job.step_fn(mpi, state, step)
-            # straggler telemetry rides the async batch, like the sends
-            chan.send_async("straggler", rank, time.time() - t_step)
+            wall = time.time() - t_step
+            # compute/wait split: wall minus the time this step spent
+            # blocked on the transport (per-step collective waits included)
+            compute = max(wall - (mpi.wait_us_total() - w0) / 1e6, 0.0)
+            # telemetry rides the async batch, like the sends it accounts
+            chan.send_async("straggler", rank, wall, compute)
+            chan.send_async("telemetry", rank, mpi.telemetry())
             mpi.flush_async()
             step += 1
         mpi.flush()
@@ -742,6 +818,14 @@ def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
             time.sleep(0.0002)
     assert chan.is_empty(), \
         f"rank {mpi.rank}: proxy channel not empty at snapshot"
+    if chan.ring is not None:
+        # ring half of the invariant: Σsent == Σreceived counts envelopes
+        # AFTER descriptor resolution, so a drained network implies every
+        # ring slot was read back and freed — no checkpoint can capture a
+        # dangling descriptor
+        n_live = chan.ring.in_flight()
+        assert n_live == 0, \
+            f"rank {mpi.rank}: {n_live} ring slot(s) in flight at snapshot"
     coord.note_empty_channel(mpi.rank)
     chan.call("stats_add", "drained_messages", len(mpi.cache))
     ckpt_dir, store_spec = chan.call("ckpt_info")

@@ -84,8 +84,11 @@ class ProxyChannel:
         #: inbox-emptiness closure (Transport.peek bound to this rank).
         #: The plugin still never sees a transport — just an opaque hint.
         self.inbox_peek: Optional[Any] = None
+        # ring_bytes counts payload bytes rerouted through the shared-memory
+        # tensor ring (always 0 on this in-process base class; the process
+        # world's ring-aware SocketChannel bumps it — DESIGN.md §12)
         self.stats = {"round_trips": 0, "async_batches": 0, "commands": 0,
-                      "peek_misses": 0}
+                      "peek_misses": 0, "ring_bytes": 0}
 
     # ---- fire-and-forget path ---------------------------------------------
     def send_async(self, cmd: str, *args) -> None:

@@ -71,10 +71,12 @@ class MPIJob:
                                  timeout=coord_timeout)
         self.transport = make_transport(transport)
         self.transport.start(n_ranks)
-        if transport == "proc":
+        if getattr(self.transport, "proc_world", False):
             # PROCESS world (DESIGN.md §10): ranks are real OS processes
             # forked at run() time; their proxies are per-rank endpoint
-            # threads in THIS process (core/procworld.py).  No in-process
+            # threads in THIS process (core/procworld.py).  Keyed off the
+            # transport's `proc_world` attribute so ring-enabled variants
+            # ("shmring") inherit the whole launch path.  No in-process
             # plugin objects exist — snapshots restore in the children.
             from repro.core.procworld import ProcWorld
             self.channels: List[ProxyChannel] = []
@@ -159,13 +161,22 @@ class MPIJob:
                         # wait for agreement; serve nothing (at boundary)
                         time.sleep(0.0002)
                         continue
+                w0 = mpi.wait_us_total()
                 t_step = time.time()
                 state = self.step_fn(mpi, state, step)
                 # step-boundary liveness: push buffered fire-and-forget
                 # sends so peers blocked in Recv can see them (no round trip)
                 mpi.flush_async()
                 self.heartbeat.ping(rank)
-                self.stragglers.record(rank, time.time() - t_step)
+                wall = time.time() - t_step
+                # compute/wait split: wall minus time blocked on the
+                # transport this step — under per-step collectives the wall
+                # clocks collapse to the slowest rank, the compute split
+                # does not (DESIGN.md §12)
+                compute = max(wall - (mpi.wait_us_total() - w0) / 1e6, 0.0)
+                self.stragglers.record(rank, wall, compute=compute)
+                self.coord.report_telemetry(rank, mpi.telemetry(),
+                                            generation=mpi.generation)
                 step += 1
             mpi.flush()      # surface deferred send errors; empty the channel
             self.states[rank] = state
@@ -339,6 +350,20 @@ class MPIJob:
         out a timeout.  Used by the fault-tolerant driver the moment the
         heartbeat flags a dead rank (seconds, not Recv-timeout minutes)."""
         self.coord.abort(reason)
+
+    def stats(self) -> dict:
+        """Operator-facing job statistics (DESIGN.md §12): coordinator FSM
+        counters, the per-generation data-plane telemetry aggregate
+        (compute/wait split, bytes per fabric), and the straggler
+        tracker's per-rank wall/compute/wait report."""
+        return {
+            "transport": self.transport_name,
+            "world_size": self.n,
+            "generation": self.coord.generation,
+            "coordinator": dict(self.coord.stats),
+            "telemetry": self.coord.telemetry_summary(),
+            "stragglers": self.stragglers.report(),
+        }
 
     def rank_pids(self) -> Dict[int, int]:
         """PID-based membership view of a PROCESS world (rank -> pid of

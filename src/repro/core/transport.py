@@ -28,12 +28,13 @@ tests/test_drain_restart.py::test_cross_transport_restart.
 from __future__ import annotations
 
 import collections
+import pickle
 import queue
 import socket
 import struct
 import threading
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Type
+from typing import Any, Deque, Dict, List, Optional, Sequence, Type
 
 from repro.core.messages import Envelope
 
@@ -43,6 +44,21 @@ from repro.core.messages import Envelope
 # body.  The switchboard and TcpTransport clients frame pickled Envelopes
 # this way, and the PROCESS world (core/procworld.py) reuses the exact same
 # framing for the child <-> per-rank-endpoint wire protocol batches.
+#
+# Two body encodings share that outer framing (DESIGN.md §12):
+#
+#   * plain pickle — every body before PR 6; still what small frames use.
+#   * scatter-gather (SG) — bodies that begin with ``SG_MAGIC``: a pickle
+#     protocol-5 HEAD with its out-of-band buffers laid flat after it.
+#     Tensor payloads travel as raw buffers (no intermediate bytes
+#     concatenation on either side); ``write_frame_parts`` ships header +
+#     head + buffers with one writev-style ``sendmsg`` and
+#     ``read_frame_mv`` lands the whole body in ONE preallocated writable
+#     buffer via ``recv_into``, so received arrays are zero-concat views.
+#
+# ``loads_body`` dispatches on the magic, so SG-speaking endpoints accept
+# plain-pickle peers unchanged (pickle bodies of protocol >= 2 start with
+# b"\x80" — they can never alias the magic).
 
 def read_exact(conn: socket.socket, n: int) -> Optional[bytes]:
     """Read exactly `n` bytes; None on EOF/error (a torn or half-written
@@ -73,6 +89,133 @@ def read_frame(conn: socket.socket) -> Optional[bytes]:
 
 def write_frame(conn: socket.socket, body: bytes) -> None:
     conn.sendall(struct.pack("!q", len(body)) + body)
+
+
+# --------------------------------------------- scatter-gather body encoding
+
+SG_MAGIC = b"SGP5"
+
+# chunk iovecs below the kernel's per-sendmsg limit; 1024 is the floor
+# POSIX guarantees and far above any real batch here
+_IOV_MAX = min(int(getattr(socket, "IOV_MAX", 1024)), 1024)
+
+
+def dumps_parts(obj: Any) -> List[Any]:
+    """Serialize `obj` into SG body parts ``[meta, head, *buffers]``.
+
+    ``head`` is a pickle protocol-5 dump with every buffer-protocol payload
+    (ndarrays, PickleBuffer-wrapped blobs) exported OUT-OF-BAND — the
+    returned buffers are zero-copy views of the caller's data, so they must
+    be shipped before the caller mutates them (senders pass private copies;
+    see messages.pack).  ``meta`` carries the buffer table needed to split
+    the flat body back apart."""
+    pbufs: List[pickle.PickleBuffer] = []
+    head = pickle.dumps(obj, protocol=5, buffer_callback=pbufs.append)
+    if not pbufs:
+        # no out-of-band payloads: the plain pickle IS the body (a pickle
+        # can never lead with the magic, so readers stay unambiguous, and
+        # pre-SG peers can still parse bufferless replies)
+        return [head]
+    raws: List[memoryview] = []
+    for pb in pbufs:
+        try:
+            raws.append(pb.raw())
+        except BufferError:                 # non-contiguous exporter
+            raws.append(memoryview(bytes(pb)))
+    meta = (SG_MAGIC + struct.pack("!iq", len(raws), len(head))
+            + struct.pack("!%dq" % len(raws), *(r.nbytes for r in raws)))
+    return [meta, head, *raws]
+
+
+def loads_body(body) -> Any:
+    """Decode one frame body: SG when it leads with the magic, else plain
+    pickle.  Out-of-band buffers are reconstructed as views INTO `body` —
+    pass a writable buffer (``read_frame_mv``) to get writable arrays."""
+    mv = memoryview(body)
+    if mv.ndim != 1 or mv.format != "B":
+        mv = mv.cast("B")
+    if mv.nbytes >= 4 and bytes(mv[:4]) == SG_MAGIC:
+        nbufs, head_len = struct.unpack_from("!iq", mv, 4)
+        lens = struct.unpack_from("!%dq" % nbufs, mv, 16)
+        off = 16 + 8 * nbufs
+        head = mv[off:off + head_len]
+        pos = off + head_len
+        bufs = []
+        for ln in lens:
+            bufs.append(mv[pos:pos + ln])
+            pos += ln
+        return pickle.loads(head, buffers=bufs)
+    return pickle.loads(mv)
+
+
+def frame_iov(parts: Sequence[Any]) -> List[memoryview]:
+    """Length-prefix a parts list into an iovec (no concatenation): the
+    8-byte total plus one memoryview per part, ready for ``sendmsg_all``."""
+    views = []
+    for p in parts:
+        v = p if isinstance(p, memoryview) else memoryview(p)
+        if v.ndim != 1 or v.format != "B":
+            v = v.cast("B")
+        views.append(v)
+    total = sum(v.nbytes for v in views)
+    return [memoryview(struct.pack("!q", total)), *views]
+
+
+def sendmsg_all(conn: socket.socket, iov: Sequence[memoryview]) -> None:
+    """``sendall`` semantics over an iovec: one gather write when the OS
+    cooperates, looping over partial sends and IOV_MAX without ever
+    building the concatenated frame."""
+    bufs = [v for v in iov if v.nbytes]
+    if not hasattr(conn, "sendmsg"):        # pragma: no cover - posix has it
+        conn.sendall(b"".join(bufs))
+        return
+    i = 0
+    while i < len(bufs):
+        try:
+            n = conn.sendmsg(bufs[i:i + _IOV_MAX])
+        except socket.timeout:
+            continue
+        except InterruptedError:
+            continue
+        while n:
+            take = min(n, bufs[i].nbytes)
+            if take == bufs[i].nbytes:
+                i += 1
+            else:
+                bufs[i] = bufs[i][take:]
+            n -= take
+
+
+def write_frame_parts(conn: socket.socket, parts: Sequence[Any]) -> None:
+    """SG counterpart of ``write_frame``: frame = header + every part,
+    shipped by gather write — zero intermediate concatenations."""
+    sendmsg_all(conn, frame_iov(parts))
+
+
+def read_frame_mv(conn: socket.socket) -> Optional[memoryview]:
+    """SG counterpart of ``read_frame``: the whole body lands in one
+    preallocated WRITABLE buffer via ``recv_into`` (no per-chunk bytes
+    concatenation; arrays decoded from it by ``loads_body`` are writable
+    views).  None on EOF/torn frame, like ``read_frame``."""
+    hdr = read_exact(conn, 8)
+    if hdr is None:
+        return None
+    (ln,) = struct.unpack("!q", hdr)
+    if ln < 0:
+        return None
+    view = memoryview(bytearray(ln))
+    got = 0
+    while got < ln:
+        try:
+            k = conn.recv_into(view[got:])
+        except socket.timeout:
+            continue
+        except (OSError, ConnectionError):
+            return None
+        if not k:
+            return None
+        got += k
+    return view
 
 
 class Transport:
@@ -322,16 +465,19 @@ class _Switchboard(threading.Thread):
     def _pump(self, conn: socket.socket) -> None:
         try:
             while not self._halt.is_set():
-                body = read_frame(conn)
+                body = read_frame_mv(conn)
                 if body is None:
                     return
-                env = Envelope.from_bytes(body)
+                # decode only to route (payload buffers stay views into
+                # `body`); forward the RECEIVED bytes verbatim by gather
+                # write — the switchboard never reserializes or concats
+                env = loads_body(body)
                 with self.lock:
                     out = self.conns.get(env.dst)
                 if out is not None:
-                    frame = struct.pack("!q", len(body)) + body
+                    hdr = memoryview(struct.pack("!q", body.nbytes))
                     with self.lock:
-                        out.sendall(frame)
+                        sendmsg_all(out, [hdr, body])
         except (OSError, ConnectionError):
             return
 
@@ -394,10 +540,12 @@ class TcpTransport(Transport):
 
     def _reader(self, rank: int, s: socket.socket) -> None:
         while not self._halt.is_set():
-            body = read_frame(s)
+            body = read_frame_mv(s)
             if body is None:
                 return
-            self._inbox[rank].put(Envelope.from_bytes(body))
+            # arrays decoded here are writable zero-concat views into the
+            # frame buffer (see read_frame_mv)
+            self._inbox[rank].put(loads_body(body))
 
     def stop(self) -> None:
         self._halt.set()
@@ -414,29 +562,23 @@ class TcpTransport(Transport):
         for t in self._readers:
             t.join(5.0)
 
-    @staticmethod
-    def _frame(env: Envelope) -> bytes:
-        body = env.to_bytes()
-        return struct.pack("!q", len(body)) + body
-
     def send(self, env: Envelope) -> None:
-        frame = self._frame(env)
+        iov = frame_iov(dumps_parts(env))
         with self._send_locks[env.src]:
-            self._socks[env.src].sendall(frame)
+            sendmsg_all(self._socks[env.src], iov)
 
     def send_many(self, envs: Sequence[Envelope]) -> None:
-        """One writev-style write per source socket: frames for a whole
-        batch are concatenated and shipped with a single sendall under a
-        single lock acquisition."""
+        """One gather write per source socket: every frame of the batch
+        rides a single ``sendmsg`` under a single lock acquisition, tensor
+        payloads as out-of-band buffers — zero concatenations."""
         if not envs:
             return
-        by_src: Dict[int, List[bytes]] = {}
+        by_src: Dict[int, List[memoryview]] = {}
         for env in envs:
-            by_src.setdefault(env.src, []).append(self._frame(env))
-        for src, frames in by_src.items():
-            blob = b"".join(frames)
+            by_src.setdefault(env.src, []).extend(frame_iov(dumps_parts(env)))
+        for src, iov in by_src.items():
             with self._send_locks[src]:
-                self._socks[src].sendall(blob)
+                sendmsg_all(self._socks[src], iov)
 
     def poll(self, rank: int) -> Optional[Envelope]:
         try:
@@ -478,11 +620,34 @@ class ProcTransport(ShmTransport):
 
     Selecting ``transport="proc"`` on an MPIJob runs every rank as a real
     OS process.  The cross-process hop is the child's socket to its
-    per-rank proxy endpoint in the launcher process (framed with
-    ``read_frame``/``write_frame`` above, exactly like TcpTransport
-    frames); endpoint threads then route envelopes between ranks through
-    THIS queue fabric.  Structurally: the child owns only the plugin, the
-    launcher owns every transport byte — the paper's proxy split enforced
-    by a real address-space boundary instead of a thread convention."""
+    per-rank proxy endpoint in the launcher process (SG frames via
+    ``write_frame_parts``/``read_frame_mv`` above, exactly like
+    TcpTransport frames); endpoint threads then route envelopes between
+    ranks through THIS queue fabric.  Structurally: the child owns only
+    the plugin, the launcher owns every transport byte — the paper's proxy
+    split enforced by a real address-space boundary instead of a thread
+    convention."""
 
     name = "proc"
+    #: the runtime keys process-world behavior off this attribute (not the
+    #: name), so ring-enabled subclasses inherit the whole launch path
+    proc_world = True
+    #: whether the ProcWorld should create a shared-memory tensor ring
+    use_ring = False
+
+
+@register_transport
+class ShmRingTransport(ProcTransport):
+    """Process world + the zero-copy shared-memory tensor ring
+    (core/dataplane.py, DESIGN.md §12).
+
+    Identical to ``proc`` except tensor payloads >= RING_PAYLOAD_MIN are
+    parked in a pre-fork ``multiprocessing.shared_memory`` ring and the
+    socket frames carry only descriptors (slot, length, generation stamp,
+    dtype, shape) — the launcher-side endpoint and the receiving child never see
+    the tensor bytes on the wire.  Falls back to inline SG frames
+    payload-by-payload whenever the ring is full or unavailable, so
+    results are bit-identical to ``proc``/``tcp`` by construction."""
+
+    name = "shmring"
+    use_ring = True

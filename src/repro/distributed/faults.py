@@ -96,24 +96,62 @@ class HeartbeatMonitor:
 
 
 class StragglerTracker:
+    """Per-rank step-duration EWMA with an optional COMPUTE split.
+
+    Wall-clock durations alone go blind under per-step collectives: every
+    rank's step collapses to the slowest rank's (everyone waits in the
+    allreduce), so ``dur`` is near-uniform and the median test flags
+    nobody.  When the runtime also records the step's compute time (wall
+    minus µs blocked on the transport — api.MPI's wait telemetry,
+    DESIGN.md §12), detection runs on ``comp`` instead: the straggler is
+    the one rank COMPUTING slowly while its peers sit waiting for it.
+    Wall-only callers (and old snapshots) keep the original behavior."""
+
     def __init__(self, n_ranks: int, factor: float = 3.0, ema: float = 0.5):
         self.factor = factor
         self.ema = ema
         self.dur: Dict[int, float] = {}
+        self.comp: Dict[int, float] = {}
         self._lock = threading.Lock()
 
-    def record(self, rank: int, seconds: float) -> None:
+    def record(self, rank: int, seconds: float,
+               compute: Optional[float] = None) -> None:
         with self._lock:
             prev = self.dur.get(rank)
             self.dur[rank] = seconds if prev is None else \
                 self.ema * seconds + (1 - self.ema) * prev
+            if compute is not None:
+                prev = self.comp.get(rank)
+                self.comp[rank] = compute if prev is None else \
+                    self.ema * compute + (1 - self.ema) * prev
 
     def stragglers(self) -> List[int]:
         with self._lock:
+            if len(self.comp) >= 2:
+                # median floored so an almost-all-wait workload (median
+                # compute ~0) doesn't flag every rank that computes at all
+                med = max(float(np.median(list(self.comp.values()))), 1e-3)
+                return [r for r, d in self.comp.items()
+                        if d > self.factor * med]
             if len(self.dur) < 2:
                 return []
             med = float(np.median(list(self.dur.values())))
             return [r for r, d in self.dur.items() if d > self.factor * med]
+
+    def report(self) -> Dict[int, dict]:
+        """Per-rank wall/compute/wait EWMAs (seconds) for operator surfaces
+        (MPIJob.stats(), the driver's ``wait:`` events)."""
+        with self._lock:
+            out: Dict[int, dict] = {}
+            for r, wall in self.dur.items():
+                comp = self.comp.get(r)
+                out[r] = {
+                    "wall_s": wall,
+                    "compute_s": comp,
+                    "wait_s": (max(wall - comp, 0.0)
+                               if comp is not None else None),
+                }
+            return out
 
 
 class RankKilled(Exception):
@@ -348,6 +386,17 @@ class FaultTolerantDriver:
                 if not dead and self.straggler_windows:
                     slow = self._confirmed_stragglers(job, strag_counts)
                     if slow and self._exclude_stragglers(job, slow):
+                        # wait-time attribution record per excluded rank:
+                        # the telemetry evidence (compute vs wall) that
+                        # justified the exclusion, kept in the event log
+                        report = job.stragglers.report()
+                        for r in slow:
+                            rep = report.get(r, {})
+                            comp, wall = rep.get("compute_s"), rep.get("wall_s")
+                            self.events.append(
+                                f"wait:rank={r}"
+                                f":compute_s={comp if comp is None else round(comp, 4)}"
+                                f":wall_s={wall if wall is None else round(wall, 4)}")
                         dead = self._declare_dead(job, slow,
                                                   kind="straggler")
                         job.abort(

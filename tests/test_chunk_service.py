@@ -494,3 +494,44 @@ def test_proc_rank_sigkill_mid_chunk_upload_leaves_no_partial(tmp_path,
         assert man8["n_ranks"] == n - 1 and man8["generation"] == 1
     finally:
         server.stop()
+
+
+def test_remote_store_fork_safe_lazy_reconnect(server):
+    """Regression: a RemoteChunkStore created AND USED before a fork (the
+    parent's socket is live) must open its OWN connection in the child —
+    pid-keyed laziness — instead of interleaving frames on the inherited
+    parent socket.  Proc-world rank children hit exactly this: the parent
+    builds the store (and may validate a checkpoint through it) before
+    forking rank processes that save through the same handle."""
+    import multiprocessing
+
+    ns = "forksafe"
+    store = chunkservice.RemoteChunkStore(server.host, server.port,
+                                          namespace=ns)
+    pname, pblob = _chunk(b"parent" * 1000)
+    assert store.put(pname, pblob) is True        # parent socket now live
+    parent_sock = store._sock
+    assert parent_sock is not None
+
+    cname, cblob = _chunk(b"child" * 40000)       # large: rides out-of-band
+
+    def child():
+        ok = store.put(cname, cblob)              # must lazily reconnect
+        good = (ok is True
+                and store.get(cname) == cblob
+                and store.get(pname) == pblob
+                and store._sock is not parent_sock)
+        raise SystemExit(0 if good else 13)
+
+    p = multiprocessing.get_context("fork").Process(target=child)
+    p.start()
+    p.join(30)
+    assert p.exitcode == 0
+    # the parent's handle is untouched by the child's traffic: same
+    # socket, still working
+    assert store._sock is parent_sock
+    assert store.get(pname) == pblob
+    backing = server.backing(ns)
+    assert backing.has(pname) and backing.has(cname)
+    assert backing.get(cname) == cblob
+    store.close()

@@ -1,0 +1,397 @@
+"""The zero-copy data plane (DESIGN.md §12): scatter-gather framing,
+the shared-memory tensor ring, and per-rank compute/wait telemetry.
+
+Three layers under test, bottom-up:
+
+  * the SG codec — ``dumps_parts``/``loads_body`` split a message into a
+    pickle protocol-5 head plus out-of-band tensor buffers, framed by
+    ``write_frame_parts`` (one gathered ``sendmsg``) and decoded from the
+    single buffer ``read_frame_mv`` fills — no intermediate ``bytes``
+    concatenation in either direction, and bufferless bodies stay plain
+    pickle (pre-SG peers parse them);
+  * the shm ring — payloads >= RING_PAYLOAD_MIN park in a
+    ``multiprocessing.shared_memory`` segment and only a ``RingRef``
+    descriptor crosses the socket; reclamation is tied to delivery, so
+    the channel-empty-at-snapshot invariant extends to in-flight slots;
+  * telemetry — every rank's µs blocked in recv vs collectives rides the
+    existing endpoint protocol into the coordinator; the StragglerTracker
+    prefers the compute split, which sees through per-step collectives
+    (the blind spot the wall-clock EWMA had).
+
+Bit-parity across fabrics is the acceptance bar: the same workload must
+produce byte-identical tensors on shmring, tcp, and proc — including
+across a checkpoint/restart that switches fabric mid-stream.
+"""
+import pickle
+import socket
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from conftest import exact_transports
+
+from repro.core import MPIJob
+from repro.core.dataplane import (RING_PAYLOAD_MIN, RingRef, ShmRing,
+                                  shm_available)
+from repro.core.messages import Envelope, pack, payload_nbytes, unpack
+from repro.core.transport import (SG_MAGIC, dumps_parts, frame_iov,
+                                  loads_body, read_frame_mv, write_frame,
+                                  write_frame_parts)
+from repro.distributed.faults import FaultTolerantDriver, StragglerTracker
+
+needs_shm = pytest.mark.skipif(not shm_available(),
+                               reason="POSIX shared memory unavailable")
+
+
+# ============================================================== SG codec
+
+def test_sg_body_roundtrips_arrays_out_of_band():
+    obj = {"x": np.arange(1024, dtype=np.float32),
+           "y": np.ones((3, 5), dtype=np.float64), "tag": 7}
+    parts = dumps_parts(obj)
+    body = b"".join(bytes(memoryview(p).cast("B")) for p in parts)
+    assert body[:4] == SG_MAGIC          # arrays present -> SG encoding
+    back = loads_body(body)
+    assert back["tag"] == 7
+    assert np.array_equal(back["x"], obj["x"])
+    assert np.array_equal(back["y"], obj["y"])
+
+
+def test_bufferless_body_is_plain_pickle():
+    """No out-of-band payloads -> the body IS the pickle (a pre-SG reader
+    can still parse it) and a pickle can never alias the magic."""
+    parts = dumps_parts(("hello", [1, 2, 3]))
+    assert len(parts) == 1
+    assert pickle.loads(parts[0]) == ("hello", [1, 2, 3])
+    assert bytes(parts[0][:4]) != SG_MAGIC
+    assert loads_body(parts[0]) == ("hello", [1, 2, 3])
+
+
+def test_sg_frame_over_socket_yields_writable_arrays():
+    a, b = socket.socketpair()
+    try:
+        # well under the socketpair buffer: the write must complete with
+        # no reader scheduled yet (single-threaded test)
+        arr = np.random.default_rng(3).standard_normal(1 << 12)
+        write_frame_parts(a, dumps_parts({"w": arr}))
+        body = read_frame_mv(b)
+        got = loads_body(body)["w"]
+        assert np.array_equal(got, arr)
+        # decoded over the writable receive buffer: the app may mutate in
+        # place (unpack must not be forced into a defensive copy)
+        assert got.flags.writeable
+        got += 1.0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_legacy_writer_sg_reader_interop():
+    """Old-style write_frame (one pre-pickled body) is readable through
+    the new read_frame_mv + loads_body path."""
+    a, b = socket.socketpair()
+    try:
+        write_frame(a, pickle.dumps({"k": list(range(10))}))
+        assert loads_body(read_frame_mv(b)) == {"k": list(range(10))}
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_iov_total_matches_length_header():
+    parts = dumps_parts({"x": np.zeros(777, np.uint8), "n": 1})
+    iov = frame_iov(parts)
+    (total,) = struct.unpack("!q", bytes(iov[0]))
+    assert total == sum(v.nbytes for v in iov[1:])
+
+
+def test_pack_keeps_arrays_and_makes_private_copies():
+    src = np.arange(64, dtype=np.float32)
+    payload, dt, count = pack(src)
+    assert isinstance(payload, np.ndarray) and dt == "MPI_FLOAT"
+    assert count == 64 and payload_nbytes(payload) == 256
+    src += 100.0                          # sender mutates after "send"
+    assert payload[0] == 0.0              # the payload must not see it
+    env = Envelope(0, 1, 0, 0, 0, payload, dt, count)
+    out = unpack(env)
+    assert out.flags.writeable and np.array_equal(out, np.arange(64))
+
+
+def test_pack_pickles_unknown_types_as_before():
+    payload, dt, count = pack({"a": 1})
+    assert isinstance(payload, bytes) and dt == "MPI_BYTE"
+    assert payload_nbytes(payload) == len(payload) == count
+
+
+# ============================================================== shm ring
+
+@needs_shm
+def test_ring_put_read_reclaims_slot():
+    ring = ShmRing.create(slots=4, slot_bytes=1 << 16)
+    assert ring is not None
+    try:
+        arr = np.random.default_rng(0).standard_normal(512)
+        ref = ring.try_put(arr)
+        assert isinstance(ref, RingRef) and ring.in_flight() == 1
+        got = ring.read(ref)
+        assert np.array_equal(got, arr)
+        assert ring.in_flight() == 0      # delivery reclaimed the slot
+    finally:
+        ring.destroy()
+
+
+@needs_shm
+def test_ring_full_and_oversized_fall_back_to_none():
+    ring = ShmRing.create(slots=2, slot_bytes=1 << 12)
+    assert ring is not None
+    try:
+        assert ring.try_put(
+            np.zeros((1 << 12) + 1, np.uint8)) is None            # too big
+        refs = [ring.try_put(np.ones(16, np.float64)) for _ in range(2)]
+        assert all(r is not None for r in refs)
+        assert ring.try_put(np.ones(16, np.float64)) is None      # full
+        for r in refs:
+            ring.read(r)
+        assert ring.try_put(np.ones(16, np.float64)) is not None  # freed
+    finally:
+        ring.destroy()
+
+
+@needs_shm
+def test_ring_read_detects_stale_descriptor():
+    """The generation stamp catches both halves of use-after-reclaim: a
+    descriptor for a freed slot, and a descriptor whose slot was REUSED
+    by a later put (same slot id, newer generation) — the failure a
+    checkpoint restoring a captured RingRef would hit, were the drain
+    invariant ever broken."""
+    ring = ShmRing.create(slots=1, slot_bytes=1 << 12)
+    assert ring is not None
+    try:
+        stale = ring.try_put(np.arange(32, dtype=np.float64))
+        assert np.array_equal(ring.read(stale),
+                              np.arange(32, dtype=np.float64))
+        with pytest.raises(RuntimeError, match="reclamation"):
+            ring.read(stale)              # slot already freed
+        fresh = ring.try_put(np.zeros(8, np.float32))
+        assert fresh.slot == stale.slot and fresh.seq != stale.seq
+        with pytest.raises(RuntimeError, match="reclamation"):
+            ring.read(stale)              # slot reused by a later put
+        assert np.array_equal(ring.read(fresh), np.zeros(8, np.float32))
+    finally:
+        ring.destroy()
+
+
+# ================================================== cross-fabric parity
+
+def _tensor_app(n_elems):
+    """Sendrecv a multi-MB tensor around the ring every step, allreduce a
+    checksum: exercises both the point-to-point and collective paths with
+    payloads far above RING_PAYLOAD_MIN."""
+    def init_fn(mpi):
+        return {"digests": []}
+
+    def step_fn(mpi, st, k):
+        n, me = mpi.Comm_size(), mpi.Comm_rank()
+        rng = np.random.default_rng(1000 * (me + 1) + k)
+        x = rng.standard_normal(n_elems).astype(np.float32)
+        got = mpi.Sendrecv(x, (me + 1) % n, k % 5, (me - 1) % n, k % 5)
+        total = mpi.Allreduce(got[: 1 << 10].copy(), "sum")
+        st = dict(st)
+        st["digests"] = st["digests"] + [
+            (got.tobytes()[:256].hex(), total.tobytes()[:64].hex())]
+        return st
+
+    return init_fn, step_fn
+
+
+@pytest.mark.slow
+def test_multi_mb_tensors_bit_identical_across_fabrics():
+    n_elems = 1 << 18                     # 1 MiB float32 >= RING_PAYLOAD_MIN
+    assert n_elems * 4 >= RING_PAYLOAD_MIN
+    init_fn, step_fn = _tensor_app(n_elems)
+    fabrics = ["tcp", "proc"] + (["shmring"] if shm_available() else [])
+    outs = {}
+    with exact_transports():
+        for tr in fabrics:
+            job = MPIJob(2, step_fn, init_fn, transport=tr)
+            outs[tr] = job.run(3, timeout=90)
+            if tr == "shmring":
+                tele = job.stats()["telemetry"]["total"]
+                assert tele.get("ring_bytes", 0) > 0, \
+                    "shmring leg never used the ring"
+    ref = outs[fabrics[0]]
+    for tr in fabrics[1:]:
+        for r in range(2):
+            assert outs[tr][r]["digests"] == ref[r]["digests"], (tr, r)
+
+
+def test_bf16_payload_bit_identical_across_fabrics():
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    bf16 = np.dtype(ml_dtypes.bfloat16)
+
+    def init_fn(mpi):
+        return {}
+
+    def step_fn(mpi, st, k):
+        n, me = mpi.Comm_size(), mpi.Comm_rank()
+        x = (np.random.default_rng(me + 7 * k)
+             .standard_normal(1 << 16).astype(bf16))
+        got = mpi.Sendrecv(x, (me + 1) % n, 1, (me - 1) % n, 1)
+        st = dict(st, digest=got.tobytes().hex())
+        return st
+
+    fabrics = ["tcp", "proc"] + (["shmring"] if shm_available() else [])
+    outs = {}
+    with exact_transports():
+        for tr in fabrics:
+            outs[tr] = MPIJob(2, step_fn, init_fn,
+                              transport=tr).run(2, timeout=60)
+    for tr in fabrics[1:]:
+        for r in range(2):
+            assert outs[tr][r]["digest"] == outs[fabrics[0]][r]["digest"]
+
+
+@needs_shm
+@pytest.mark.slow
+def test_checkpoint_mid_stream_ring_to_tcp_bit_identical(tmp_path):
+    """Checkpoint a shmring job mid-stream (large tensors in flight every
+    step), restart the image on plain tcp, and land on byte-identical
+    results: the drain barrier provably leaves no ring descriptor inside
+    any channel image, or the tcp incarnation could never decode it."""
+    n_elems = 1 << 18
+    init_fn, step_fn = _tensor_app(n_elems)
+    with exact_transports():
+        ref = MPIJob(2, step_fn, init_fn, transport="tcp").run(6, timeout=90)
+
+        job = MPIJob(2, step_fn, init_fn, transport="shmring")
+        job.checkpoint_at(3, tmp_path / "ck", resume=True)
+        mid = job.run(6, timeout=90)
+        job.stop()
+        for r in range(2):                # uninterrupted shmring parity
+            assert mid[r]["digests"] == ref[r]["digests"]
+
+        job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                              transport="tcp")
+        out = job2.run(6, timeout=90)
+        job2.stop()
+    for r in range(2):
+        assert out[r]["digests"] == ref[r]["digests"]
+
+
+# =============================================================== telemetry
+
+def test_job_stats_expose_compute_wait_split():
+    def init_fn(mpi):
+        return {}
+
+    def step_fn(mpi, st, k):
+        time.sleep(0.002)
+        st = dict(st, s=float(mpi.Allreduce(np.float64(1.0), "sum")))
+        return st
+
+    job = MPIJob(2, step_fn, init_fn, transport="shm")
+    job.run(5, timeout=60)
+    st = job.stats()
+    assert st["world_size"] == 2 and st["generation"] == 0
+    tele = st["telemetry"]
+    assert sorted(tele["ranks"]) == [0, 1]
+    for r, c in tele["ranks"].items():
+        for key in ("wait_recv_us", "wait_coll_us", "bytes_sent",
+                    "bytes_received", "ring_bytes"):
+            assert key in c, (r, key)
+    # an allreduce-every-step workload blocks in collectives, and the
+    # totals aggregate across ranks
+    assert tele["total"]["wait_coll_us"] > 0
+    assert tele["total"]["bytes_sent"] > 0
+    strag = st["stragglers"]
+    for r in (0, 1):
+        assert strag[r]["compute_s"] is not None
+        assert strag[r]["wait_s"] >= 0.0
+
+
+def test_wait_telemetry_survives_checkpoint_restart(tmp_path):
+    def init_fn(mpi):
+        return {}
+
+    def step_fn(mpi, st, k):
+        st = dict(st, s=float(mpi.Allreduce(np.float64(1.0), "sum")))
+        return st
+
+    job = MPIJob(2, step_fn, init_fn, transport="shm")
+    job.checkpoint_at(3, tmp_path / "ck", resume=False)
+    job.run(6, timeout=60)
+    job.stop()
+    job2 = MPIJob.restart(tmp_path / "ck", step_fn, init_fn,
+                          transport="shm")
+    job2.run(6, timeout=60)
+    # counters resumed from the snapshot, not reset: the restarted ranks
+    # report totals covering the pre-checkpoint steps too
+    tele = job2.stats()["telemetry"]
+    assert tele["total"]["wait_coll_us"] > 0
+
+
+def test_straggler_tracker_prefers_compute_split():
+    """Wall-clock EWMAs are uniform under per-step collectives (everyone
+    waits for the slowest rank), so the legacy path flags nobody; the
+    compute split names the culprit."""
+    t = StragglerTracker(3, factor=3.0)
+    for _ in range(4):
+        for r in range(3):                # all walls identical: blind
+            t.record(r, 0.100, compute=0.090 if r == 2 else 0.002)
+    assert t.stragglers() == [2]
+    rep = t.report()
+    assert rep[2]["wait_s"] == pytest.approx(0.010, abs=1e-9)
+    assert rep[0]["wait_s"] == pytest.approx(0.098, abs=1e-9)
+
+    legacy = StragglerTracker(3, factor=3.0)
+    for _ in range(4):
+        for r in range(3):
+            legacy.record(r, 0.100)       # wall-only callers: old behavior
+    assert legacy.stragglers() == []
+    assert legacy.report()[0]["compute_s"] is None
+
+
+@pytest.mark.slow
+def test_straggler_detected_under_per_step_collectives(tmp_path):
+    """THE blind spot (ROADMAP): with an allreduce EVERY step, all walls
+    collapse to the victim's and wall-clock detection is structurally
+    blind.  The compute/wait split restores attribution: the driver
+    excludes the victim and logs the wait: evidence record."""
+    steps, n, victim = 30, 3, 2
+
+    def init_fn(mpi):
+        return {"params": {"w": np.zeros(2, np.float64)}}
+
+    def lagging_step(mpi, st, k):
+        time.sleep(0.06 if (mpi.generation == 0 and mpi.rank == victim)
+                   else 0.001)
+        st = dict(st, params={"w": st["params"]["w"] + 1.0})
+        st["sum"] = mpi.Allreduce(np.ones(2, np.float64), "sum")
+        return st
+
+    driver = FaultTolerantDriver(
+        job_factory=lambda ws, ms: MPIJob(ws or n, lagging_step, init_fn,
+                                          transport="shm", membership=ms,
+                                          heartbeat_timeout=5.0,
+                                          coord_timeout=30.0),
+        restart_factory=lambda d, tr, ws, dead, ms: MPIJob.restart(
+            d, lagging_step, init_fn, transport=tr, world_size=ws,
+            dead_ranks=dead, membership=ms, heartbeat_timeout=5.0,
+            coord_timeout=30.0),
+        ckpt_root=tmp_path, ckpt_every=100,
+        straggler_windows=3)
+    out = driver.run(steps, transport_after_failure="shm", timeout=90)
+
+    assert len(out) == n - 1
+    for r in range(n - 1):
+        assert np.array_equal(out[r]["params"]["w"],
+                              np.full(2, float(steps)))
+    assert any(e.startswith(f"straggler:[{victim}]") for e in driver.events)
+    # the evidence record: the victim computed ~all of its wall time
+    wait_ev = next(e for e in driver.events
+                   if e.startswith(f"wait:rank={victim}"))
+    fields = dict(f.split("=") for f in wait_ev.split(":")[1:])
+    assert float(fields["compute_s"]) > 0.5 * float(fields["wall_s"])
+    assert driver.events[-1] == "done"
