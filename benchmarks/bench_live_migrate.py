@@ -1,0 +1,155 @@
+"""Pre-copy live migration vs drain-checkpoint-restore (DESIGN.md §13).
+
+The claim under test: migrating a rank by streaming pre-copy rounds while
+the world keeps computing bounds the stop-the-world pause by the FINAL
+DIRTY DELTA, not by total state size — the VM live-migration argument
+applied to the proxy checkpoint stack.  The baseline is the only move the
+pre-§13 stack had: drain the world, checkpoint with exit, restart the
+whole world from images.
+
+Workload: 2 ranks, each holding a large cold payload (never dirtied after
+init — the pre-copy rounds stage it once) plus a small hot working set
+dirtied every step.  Both paths move state through a real chunk SERVER
+(the cross-host story migration exists for): the baseline uploads the
+whole world at pause time and the restarted "new host" (empty cache)
+fetches all of it back; migration uploads the cold bulk during pre-copy
+rounds — while ranks compute — and prefetches the destination cache, so
+the pause pays wire + disk only for the final dirty delta.  Both paths
+produce bit-identical final state; the contract is the pause ratio and
+the final-round wire fraction.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, smoke_scale
+from repro.checkpoint.chunkservice import ChunkServer
+from repro.core import MPIJob
+
+N = 2
+
+
+def _app(cold_elems: int, hot_elems: int, sleep_s: float):
+    rng = np.random.default_rng(7)
+    cold = rng.standard_normal(cold_elems)     # shared template; per-rank
+                                               # copy diverges by +rank
+
+    def init_fn(mpi):
+        r = mpi.rank
+        return {
+            "acc": np.zeros(32, dtype=np.float64),
+            "hot": np.full(hot_elems, float(r), dtype=np.float64),
+            "cold": cold + r,
+        }
+
+    def step_fn(mpi, state, step):
+        total = mpi.Allreduce(state["acc"][:4] + step)
+        state = dict(state)
+        state["acc"] = state["acc"].copy()
+        state["acc"][:4] += total
+        state["hot"] = state["hot"] + 0.5
+        time.sleep(sleep_s)
+        return state
+
+    return init_fn, step_fn
+
+
+def _run_async(job, n_steps):
+    box = {}
+
+    def runner():
+        try:
+            box["out"] = job.run(n_steps, timeout=600.0)
+        except BaseException as e:
+            box["err"] = e
+
+    t = threading.Thread(target=runner, daemon=True)
+    t.start()
+    box["thread"] = t
+    return box
+
+
+def _join(job, box):
+    box["thread"].join(600.0)
+    job.stop()
+    if "err" in box:
+        raise box["err"]
+    return box["out"]
+
+
+def run() -> None:
+    cold = smoke_scale(2 * 1024 * 1024, 64 * 1024)  # f64 elems: 16MB / 512KB
+    hot = smoke_scale(8192, 2048)                   # 64KB / 16KB
+    steps = smoke_scale(400, 160)
+    sleep_s = smoke_scale(0.005, 0.004)
+    init_fn, step_fn = _app(cold, hot, sleep_s)
+
+    # ---- live migration: stream rounds through the chunk server while
+    # the world runs, prefetch the destination cache, pause only for the
+    # final delta; the replacement hot-joins the live generation
+    with tempfile.TemporaryDirectory() as d:
+        d = Path(d)
+        server = ChunkServer(d / "server").start()
+        try:
+            job = MPIJob(N, step_fn, init_fn,
+                         ckpt_store=server.spec_for("mig",
+                                                    cache=d / "srcA"))
+            box = _run_async(job, steps)
+            time.sleep(0.3)                        # let the world warm up
+            rep = job.migrate(d / "ck", ranks=(0,),
+                              dest_cache=d / "destA", max_rounds=6,
+                              timeout=300.0)
+            migrated = _join(job, box)
+        finally:
+            server.stop()
+        emit("live_migrate/pause_migrate", rep["pause_s"] * 1e6,
+             f"rounds={len(rep['rounds'])},converged={rep['converged']}")
+        emit("live_migrate/final_round_wire_fraction",
+             rep["final_fraction"],
+             f"final_kb={rep['final_bytes'] / 1024:.0f},"
+             f"ckpt_kb={rep['total_bytes'] / 1024:.0f}")
+
+    # ---- baseline: drain -> checkpoint(exit) through the server ->
+    # restart the whole world on a "new host" (cold cache fetches all)
+    with tempfile.TemporaryDirectory() as d:
+        d = Path(d)
+        ck = d / "ck"
+        server = ChunkServer(d / "server").start()
+        try:
+            job = MPIJob(N, step_fn, init_fn,
+                         ckpt_store=server.spec_for("mig",
+                                                    cache=d / "srcB"))
+            box = _run_async(job, steps)
+            time.sleep(0.3)
+            t0 = time.time()
+            job.checkpoint(ck, resume=False)       # stop-the-world begins
+            _join(job, box)                        # every rank exits
+            job2 = MPIJob.restart(ck, step_fn, init_fn,
+                                  ckpt_store=server.spec_for(
+                                      "mig", cache=d / "destB"))
+            pause_restore = time.time() - t0       # world runnable again
+            restored = job2.run(steps, timeout=600.0)
+            job2.stop()
+        finally:
+            server.stop()
+        emit("live_migrate/pause_drain_restore", pause_restore * 1e6,
+             f"ckpt={ck.name}")
+
+    speedup = pause_restore / max(rep["pause_s"], 1e-9)
+    emit("live_migrate/pause_speedup_vs_drain_restore_x", speedup,
+         f"migrate={rep['pause_s'] * 1e3:.1f}ms,"
+         f"restore={pause_restore * 1e3:.1f}ms")
+
+    # both paths end bit-identical (migration is invisible to the app)
+    same = all(np.array_equal(migrated[r][k], restored[r][k])
+               for r in range(N) for k in migrated[r])
+    emit("live_migrate/migrate_vs_restore_bit_identical", float(same))
+
+
+if __name__ == "__main__":
+    run()

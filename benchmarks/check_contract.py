@@ -25,6 +25,12 @@ CI runners are noise):
     vs the in-bench PR-5 concat replica must stay above the committed
     floor on tcp, the shm ring above its (higher) floor when the host
     has POSIX shared memory, and cross-fabric results bit-identical.
+  * live migration (BENCH_live_migrate.json): migrate()'s stop-the-world
+    pause must beat the drain-checkpoint-restore baseline by the
+    committed floor (3x full size, a modest smoke floor — tiny states
+    are fixed-cost dominated), the final round must ship at most the
+    committed fraction of total checkpoint bytes, and the migrated
+    world's state must be bit-identical to the unmigrated control's.
 """
 from __future__ import annotations
 
@@ -125,6 +131,25 @@ def main() -> None:
     if val is not None:
         check("data_plane/fabric_bit_identical",
               val == dpc["bit_identical_required"], f"{val}")
+
+    mig = json.loads((REPO / "BENCH_live_migrate.json").read_text())
+    mc = mig["contract"]
+    val = rows.get("live_migrate/pause_speedup_vs_drain_restore_x")
+    if val is not None:
+        floor = mc["ci_smoke_pause_speedup_floor_x" if smoke
+                   else "pause_speedup_vs_drain_restore_min_x"]
+        check("live_migrate/pause_speedup_vs_drain_restore_x",
+              val >= floor,
+              f"{val:.2f}x (floor {floor}x{' [smoke]' if smoke else ''})")
+    val = rows.get("live_migrate/final_round_wire_fraction")
+    if val is not None:
+        check("live_migrate/final_round_wire_fraction",
+              val <= mc["final_round_wire_fraction_max"],
+              f"{val:.4f} (ceiling {mc['final_round_wire_fraction_max']})")
+    val = rows.get("live_migrate/migrate_vs_restore_bit_identical")
+    if val is not None:
+        check("live_migrate/migrate_vs_restore_bit_identical",
+              val == mc["bit_identical_required"], f"{val}")
 
     missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
                               ("delta_write_fraction", fresh_frac))

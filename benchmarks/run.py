@@ -16,8 +16,9 @@ import traceback
 from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_ckpt_pipeline,
-                        bench_data_plane, bench_drain, bench_proxy_overhead,
-                        bench_remote_store, bench_restart, bench_roofline)
+                        bench_data_plane, bench_drain, bench_live_migrate,
+                        bench_proxy_overhead, bench_remote_store,
+                        bench_restart, bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
@@ -29,6 +30,7 @@ SUITES = {
     "allreduce": bench_allreduce.run,
     "ckpt_manager": bench_ckpt_manager.run,
     "remote_store": bench_remote_store.run,
+    "live_migrate": bench_live_migrate.run,
     "roofline": bench_roofline.run,
 }
 

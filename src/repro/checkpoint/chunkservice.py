@@ -35,9 +35,14 @@ and server can never disagree about a name's bytes — the only states are
 ``has``/``has_many`` answer for the SERVER (the upload decision must be
 authoritative for other hosts' restores), ``get``/``sizes`` answer
 cache-first (reads want the nearest copy).  ``gc`` collects the CACHE
-only; reclaiming server space is an explicit ``gc_remote`` because a
-server may back several writers whose live sets the client can't see
-(server-side gc leases are the ROADMAP follow-on).
+only — a server may back several writers whose live sets the client
+can't see — but it also REGISTERS the caller's live set as a TTL
+**lease** on the server, which makes server-side reclamation safe
+without coordination: the explicit ``gc_remote`` and the server's own
+optional auto-sweep both refuse to collect any chunk covered by an
+unexpired lease, and the sweep additionally spares chunks younger than
+a grace window (covering the upload→lease gap — a migration round
+streamed but not yet committed can never be collected mid-flight).
 
 Namespaces: a server partitions its root per namespace (one flat chunk
 dir each), so independent jobs sharing one server cannot observe each
@@ -55,6 +60,7 @@ import re
 import socket
 import struct
 import threading
+import time
 import urllib.parse
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
@@ -167,12 +173,29 @@ class ChunkServer:
     ``ChunkStore`` is thread-safe and its writes are atomic renames, so
     concurrent PUTs of the same digest collapse to one file — the same
     idempotence the local store gives racing processes.
+
+    GC LEASES: clients register their live chunk sets under named TTL
+    leases (``lease``/``unlease`` commands; renewed automatically by every
+    client-side gc round).  The GC-live-set command then treats the union
+    of unexpired leases as live IN ADDITION to the caller's set, so one
+    writer's reclamation can never collect another's chunks — and a
+    migration pins each streamed-but-uncommitted round under its own
+    lease.  With ``auto_gc_interval`` set, the server also sweeps on its
+    own: a chunk is collected only when NO unexpired lease covers it AND
+    it is older than ``gc_grace`` seconds (the grace spares the
+    upload→lease gap of an in-flight save).
     """
 
     def __init__(self, root: str | Path, host: str = "127.0.0.1",
-                 port: int = 0, advertise_host: Optional[str] = None):
+                 port: int = 0, advertise_host: Optional[str] = None,
+                 auto_gc_interval: Optional[float] = None,
+                 gc_grace: float = 60.0):
         self.root = Path(root)
+        self.auto_gc_interval = auto_gc_interval
+        self.gc_grace = gc_grace
         self._stores: Dict[str, ChunkStore] = {}
+        #: {namespace: {lease_id: (monotonic expiry, frozenset(names))}}
+        self._leases: Dict[str, Dict[str, Tuple[float, frozenset]]] = {}
         self._lock = threading.Lock()
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -190,6 +213,7 @@ class ChunkServer:
         self._threads: List[threading.Thread] = []
         self._conns: List[socket.socket] = []
         self._accept: Optional[threading.Thread] = None
+        self._sweeper: Optional[threading.Thread] = None
 
     @property
     def spec(self) -> str:
@@ -217,6 +241,11 @@ class ChunkServer:
         self._accept = threading.Thread(target=self._accept_loop,
                                         daemon=True, name="chunk-server")
         self._accept.start()
+        if self.auto_gc_interval:
+            self._sweeper = threading.Thread(target=self._sweep_loop,
+                                             daemon=True,
+                                             name="chunk-server-gc")
+            self._sweeper.start()
         return self
 
     def stop(self, join_timeout: float = 5.0) -> None:
@@ -238,6 +267,8 @@ class ChunkServer:
                 pass
         if self._accept is not None:
             self._accept.join(join_timeout)
+        if self._sweeper is not None:
+            self._sweeper.join(join_timeout)
         with self._lock:
             threads = list(self._threads)
         for t in threads:
@@ -282,7 +313,7 @@ class ChunkServer:
                             f"client speaks chunk protocol v{version}, "
                             f"server v{CHUNK_PROTOCOL_VERSION}")
                     store = self.backing(ns)
-                    results = [self._execute(store, cmd, args)
+                    results = [self._execute(ns, store, cmd, args)
                                for cmd, args in cmds]
                     reply = (True, results)
                 except Exception as e:      # noqa: BLE001 - shipped back
@@ -304,8 +335,64 @@ class ChunkServer:
                 if me in self._threads:
                     self._threads.remove(me)
 
-    @staticmethod
-    def _execute(store: ChunkStore, cmd: str, args: tuple) -> Any:
+    # --------------------------------------------------------------- leases
+    def _lease_union(self, namespace: str) -> Set[str]:
+        """Union of chunk names covered by unexpired leases in the
+        namespace; expired leases are pruned as a side effect."""
+        now = time.monotonic()
+        out: Set[str] = set()
+        with self._lock:
+            table = self._leases.get(namespace)
+            if not table:
+                return out
+            for lid in [k for k, (exp, _) in table.items() if exp < now]:
+                del table[lid]
+            for _, names in table.values():
+                out.update(names)
+        return out
+
+    def sweep(self, grace: Optional[float] = None) -> int:
+        """Server-initiated reclamation across every namespace touched so
+        far: remove chunks covered by NO unexpired lease and older than
+        ``grace`` seconds (file mtime).  The grace window protects chunks
+        a client has uploaded but not yet covered with a lease or a
+        committed manifest — mid-save and mid-migration-round state.
+        Runs periodically when ``auto_gc_interval`` is set; callable
+        directly for deterministic tests/ops."""
+        grace = self.gc_grace if grace is None else grace
+        cutoff = time.time() - grace
+        removed_total = 0
+        with self._lock:
+            spaces = list(self._stores.items())
+        for ns, store in spaces:
+            protected = self._lease_union(ns)
+            removed = 0
+            for name in store.list_chunks():
+                if name in protected:
+                    continue
+                p = store.root / name
+                try:
+                    if p.stat().st_mtime > cutoff:
+                        continue
+                    p.unlink()
+                    removed += 1
+                except OSError:
+                    continue
+            if removed:
+                with store._lock:
+                    store.stats["chunks_removed"] += removed
+            removed_total += removed
+        return removed_total
+
+    def _sweep_loop(self) -> None:
+        while not self._halt.wait(self.auto_gc_interval):
+            try:
+                self.sweep()
+            except Exception:       # noqa: BLE001 - sweep must never die
+                pass
+
+    def _execute(self, ns: str, store: ChunkStore, cmd: str,
+                 args: tuple) -> Any:
         if cmd == "has_many":
             (names,) = args
             out: Dict[str, int] = {}
@@ -337,8 +424,32 @@ class ChunkServer:
             store.ref(name, raw)
             return None
         if cmd == "gc":
+            # the caller's live set PLUS every unexpired lease: explicit
+            # reclamation by one writer can never collect chunks another
+            # client has registered as live
             (live,) = args
-            return store.gc(live)
+            return store.gc(set(live) | self._lease_union(ns))
+        if cmd == "lease":
+            lease_id, names, ttl = args
+            _check_token(lease_id, "lease id")
+            names = frozenset(names)
+            for n in names:
+                _check_token(n, "chunk name")
+            with self._lock:
+                self._leases.setdefault(ns, {})[lease_id] = (
+                    time.monotonic() + float(ttl), names)
+            return len(names)
+        if cmd == "unlease":
+            (lease_id,) = args
+            with self._lock:
+                table = self._leases.get(ns, {})
+                return table.pop(lease_id, None) is not None
+        if cmd == "leases":
+            now = time.monotonic()
+            with self._lock:
+                table = dict(self._leases.get(ns, {}))
+            return {lid: {"ttl": exp - now, "chunks": len(names)}
+                    for lid, (exp, names) in table.items() if exp >= now}
         if cmd == "size":
             (name,) = args
             _check_token(name, "chunk name")
@@ -368,6 +479,11 @@ class RemoteChunkStore(ChunkStoreBackend):
     wants_batched_has = True
     root = None
 
+    #: default TTL for the client's automatic live-set lease — long
+    #: enough to bridge several save/gc rounds, short enough that a dead
+    #: client's pin drains away on its own
+    DEFAULT_LEASE_TTL = 600.0
+
     def __init__(self, host: str, port: int, namespace: str = "",
                  connect_timeout: float = 10.0):
         self.host, self.port = host, int(port)
@@ -377,6 +493,8 @@ class RemoteChunkStore(ChunkStoreBackend):
         self.connect_timeout = connect_timeout
         self._sock: Optional[socket.socket] = None
         self._pid: Optional[int] = None
+        self._lease_pid: Optional[int] = None
+        self._lease_name: Optional[str] = None
         self._lock = threading.RLock()
         self.stats = {"chunks_written": 0, "chunks_referenced": 0,
                       "bytes_written": 0, "bytes_referenced": 0,
@@ -486,20 +604,53 @@ class RemoteChunkStore(ChunkStoreBackend):
         return set(self._call("list"))
 
     def gc(self, live: Iterable[str]) -> int:
-        """No-op (returns 0): a namespace may back several writers whose
-        live sets this client cannot see, so the AUTOMATIC per-save gc a
-        CheckpointManager runs must never reach the server — one
-        manager's live set would unlink every other writer's chunks.
-        Server reclamation is the explicit ``gc_remote`` (and server-side
-        gc leases are the ROADMAP follow-on)."""
+        """Removes nothing server-side (returns 0): a namespace may back
+        several writers whose live sets this client cannot see, so the
+        AUTOMATIC per-save gc a CheckpointManager runs must never unlink
+        on the server.  It DOES register `live` as this client's TTL
+        lease, so server reclamation — another writer's ``gc_remote`` or
+        the server's auto-sweep — is safe without coordination.
+        Best-effort: an outage mid-renewal is swallowed (the previous
+        lease and the sweep grace window keep protecting until the
+        server is back)."""
+        try:
+            self.lease(live)
+        except (ChunkServiceError, OSError):
+            pass
         return 0
 
     def gc_remote(self, live: Iterable[str]) -> int:
         """Explicit server-side GC-live-set — caller asserts it owns the
-        namespace."""
+        namespace.  The server extends `live` with every unexpired lease,
+        so even this cannot collect chunks other clients registered."""
         removed = self._call("gc", sorted(set(live)))
         self.stats["chunks_removed"] += removed
         return removed
+
+    # -------------------------------------------------------------- leases
+    def _lease_id(self) -> str:
+        # pid-qualified and regenerated after fork: a forked child must
+        # renew ITS OWN lease, not clobber the parent's live set
+        if self._lease_name is None or self._lease_pid != os.getpid():
+            self._lease_pid = os.getpid()
+            self._lease_name = (
+                f"client-{os.getpid()}-{os.urandom(3).hex()}")
+        return self._lease_name
+
+    def lease(self, names: Iterable[str], ttl: Optional[float] = None,
+              lease_id: Optional[str] = None) -> int:
+        """Register/renew a TTL lease over `names`: until expiry no
+        server-side gc (explicit or auto-sweep) may collect them.  A
+        migration pins each streamed round under its own ``lease_id``."""
+        return self._call("lease", lease_id or self._lease_id(),
+                          sorted(set(names)),
+                          self.DEFAULT_LEASE_TTL if ttl is None else ttl)
+
+    def unlease(self, lease_id: Optional[str] = None) -> bool:
+        return self._call("unlease", lease_id or self._lease_id())
+
+    def leases(self) -> dict:
+        return self._call("leases")
 
     def server_stats(self) -> dict:
         return self._call("stats")
@@ -536,8 +687,9 @@ class CachingChunkStore(ChunkStoreBackend):
         #: primed by has_many so the per-chunk puts/refs of a save ride
         #: the ONE batched round trip save_shards already paid.  A stale
         #: negative only costs a redundant idempotent upload; a positive
-        #: can never go stale (chunks are immutable, gc here is
-        #: cache-only; gc_remote clears both).
+        #: stays valid as long as this client's live-set lease is renewed
+        #: (chunks are immutable and leased chunks are never collected;
+        #: gc_remote clears both memos).
         self._known_remote: Dict[str, int] = {}
         self._known_absent: set = set()
         self.stats = {"chunks_written": 0, "chunks_referenced": 0,
@@ -665,7 +817,14 @@ class CachingChunkStore(ChunkStoreBackend):
         return self.cache.list_chunks() | self.remote.list_chunks()
 
     def gc(self, live: Iterable[str]) -> int:
+        """Collect the CACHE only, and renew this client's server-side
+        lease over `live` (best-effort — see RemoteChunkStore.gc)."""
+        live = set(live)
         removed = self.cache.gc(live)
+        try:
+            self.remote.lease(live)
+        except (ChunkServiceError, OSError):
+            pass
         with self._lock:
             self.stats["chunks_removed"] += removed
         return removed
@@ -676,3 +835,10 @@ class CachingChunkStore(ChunkStoreBackend):
             self._known_remote = {}
             self._known_absent = set()
         return removed
+
+    def lease(self, names: Iterable[str], ttl: Optional[float] = None,
+              lease_id: Optional[str] = None) -> int:
+        return self.remote.lease(names, ttl, lease_id)
+
+    def unlease(self, lease_id: Optional[str] = None) -> bool:
+        return self.remote.unlease(lease_id)

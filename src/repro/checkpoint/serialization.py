@@ -86,14 +86,26 @@ DEFAULT_CODEC = "zstd" if HAVE_ZSTD else "zlib"
 #: only add contention.  The restore pool mirrors this.
 DEFAULT_WORKERS = min(8, os.cpu_count() or 1)
 
-#: adaptive compression: probe-compress this much of a chunk first, and if
+#: adaptive compression: probe-compress a sample of a chunk first, and if
 #: the probe stays above INCOMPRESSIBLE_RATIO store the chunk RAW (ext
 #: ``.raw``) — trained float32/bf16 weights are near-random bytes, and
 #: running deflate over them costs ~40ms/MB to save a few percent.  The
 #: chunk name (content digest of the UNCOMPRESSED bytes) is unchanged, so
 #: integrity and incremental dedup work identically for raw chunks.
+#:
+#: The sample is BOTH capped (INCOMPRESSIBLE_SAMPLE) and fractional
+#: (1/PROBE_FRACTION of the chunk, floored at PROBE_MIN_SAMPLE): a flat
+#: 64 KiB cap alone meant a chunk of exactly that size paid a FULL
+#: deflate pass just to decide "store raw" — on zlib fallback hosts the
+#: probe then cost as much as the seed writer's whole compression, and a
+#: 1-worker pool had no parallelism to win it back (the PR-6 smoke-floor
+#: regression).  Chunks at or below PROBE_MIN_SAMPLE are still probed
+#: whole, so a compressible small chunk keeps the probe-is-the-payload
+#: single pass.
 INCOMPRESSIBLE_SAMPLE = 1 << 16
 INCOMPRESSIBLE_RATIO = 0.9
+PROBE_MIN_SAMPLE = 1 << 13
+PROBE_FRACTION = 8
 
 #: byte-shuffle probe economics, three gates in increasing cost:
 #:
@@ -308,8 +320,9 @@ def _finish_shard(store: ChunkStoreBackend, codec: str, ext: str,
     # ZstdCompressor wraps one native context and is NOT safe for
     # concurrent use across pool threads (zlib's module function is)
     cctx, _ = _codec_pair(codec)
-    sample = (buf[:INCOMPRESSIBLE_SAMPLE]
-              if buf.nbytes > INCOMPRESSIBLE_SAMPLE else buf)
+    probe_len = min(INCOMPRESSIBLE_SAMPLE,
+                    max(PROBE_MIN_SAMPLE, buf.nbytes // PROBE_FRACTION))
+    sample = buf[:probe_len] if buf.nbytes > probe_len else buf
     probe = cctx.compress(sample)
     shuf_ratio = None
     if itemsize and buf.nbytes % itemsize == 0:

@@ -26,13 +26,14 @@ import os
 import pickle
 import time
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterable, Optional, Set
+from typing import Any, Dict, Iterable, Optional, Set
 
 from repro.checkpoint import chunkstore
 from repro.checkpoint.chunkstore import (ChunkStore, ChunkStoreBackend,
                                          content_digest)
+from repro.core.migrate import join_state
 
 
 @dataclass
@@ -42,9 +43,31 @@ class RankImage:
     step_idx: int
     mpi_state: dict              # api.MPI.snapshot()
     app_state: bytes             # pickled user state (opaque)
+    app_obj: Any = field(default=None, compare=False)
+    # ^ live user-state object, populated only by load_rank_image(); a
+    # leaf-split image materialises it from the joined leaves so callers
+    # restoring INTO memory skip a redundant re-pickle/re-unpickle pass —
+    # the hot-join pause is bounded by one traversal of the state, not
+    # three.  Never serialised (to_bytes drops it).
 
     def to_bytes(self) -> bytes:
-        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+        return pickle.dumps(
+            RankImage(self.rank, self.n_ranks, self.step_idx,
+                      self.mpi_state, self.app_state),
+            protocol=pickle.HIGHEST_PROTOCOL)
+
+    def state_obj(self, fresh: bool = False) -> Any:
+        """The app payload as a live object — the materialised leaves when
+        present (no re-pickle round-trip), else unpickled app_state.
+        `fresh` forces a private copy: a caller cloning ONE image onto
+        several ranks must not hand them aliases of the same arrays
+        (unpickling app_state is already a copy each time)."""
+        if self.app_obj is not None:
+            if fresh:
+                return pickle.loads(pickle.dumps(
+                    self.app_obj, protocol=pickle.HIGHEST_PROTOCOL))
+            return self.app_obj
+        return pickle.loads(self.app_state)
 
     @staticmethod
     def from_bytes(b: bytes) -> "RankImage":
@@ -58,21 +81,34 @@ def _atomic_write(path: Path, data: bytes) -> None:
 
 
 def save_rank_image(ckpt_dir: Path, image: RankImage,
-                    store: Optional[ChunkStoreBackend] = None) -> dict:
+                    store: Optional[ChunkStoreBackend] = None,
+                    app_leaves: Optional[Dict[str, bytes]] = None) -> dict:
     """Write one rank's image as content-addressed parts.  `store` defaults
     to ``ckpt_dir/chunks`` (self-contained); the runtime passes a shared
     store — possibly a caching/remote backend, so a rank's unchanged
     payload is never re-uploaded — so consecutive checkpoints (and
     replicated payloads across ranks) skip unchanged parts.  Returns the
-    manifest entry."""
+    manifest entry.
+
+    `app_leaves` (migration final, DESIGN.md §13): the app payload
+    pre-split into named leaf pickles (core/migrate.split_state) — each
+    leaf becomes its own ``app/<leaf>`` part, so leaves already streamed
+    by pre-copy rounds are store references and the stop-the-world save
+    ships only the final dirty delta.  gc/validation need no special
+    casing: leaf parts are ordinary entries in ``parts``."""
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     if store is None:
         store = ChunkStore(ckpt_dir / "chunks")
+    items = [("mpi", pickle.dumps(image.mpi_state,
+                                  protocol=pickle.HIGHEST_PROTOCOL))]
+    if app_leaves is not None:
+        items += [(f"app/{leaf}", blob)
+                  for leaf, blob in sorted(app_leaves.items())]
+    else:
+        items.append(("app", image.app_state))
     parts: Dict[str, dict] = {}
     total = 0
-    for part, blob in (("mpi", pickle.dumps(image.mpi_state,
-                                            protocol=pickle.HIGHEST_PROTOCOL)),
-                       ("app", image.app_state)):
+    for part, blob in items:
         name = f"{content_digest(blob)}.bin"
         store.put(name, blob)
         parts[part] = {"chunk": name, "bytes": len(blob)}
@@ -151,10 +187,24 @@ def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True,
     if "parts" in ent:                        # v3: content-addressed parts
         reader = chunkstore.ChunkReader(ckpt_dir, man, store)
         mpi = _read_part(reader, ent["parts"]["mpi"], verify)
-        app = _read_part(reader, ent["parts"]["app"], verify)
+        leaf_parts = {k[len("app/"):]: p for k, p in ent["parts"].items()
+                      if k.startswith("app/")}
+        app, obj = b"", None
+        if leaf_parts:                       # migration-final leaf split
+            blobs = {leaf: _read_part(reader, p, verify)
+                     for leaf, p in leaf_parts.items()}
+            # materialise the object instead of re-pickling the joined
+            # dict: every consumer restores INTO memory, and the hot-join
+            # pause should pay one traversal of the state, not three
+            obj = join_state(blobs)
+            if obj is None:      # a literal-None payload: app_obj can't
+                app = pickle.dumps(None)     # signal it, so fall back
+        else:
+            app = _read_part(reader, ent["parts"]["app"], verify)
         return RankImage(rank=ent["rank"], n_ranks=ent["n_ranks"],
                          step_idx=ent["step_idx"],
-                         mpi_state=pickle.loads(mpi), app_state=app)
+                         mpi_state=pickle.loads(mpi), app_state=app,
+                         app_obj=obj)
     blob = (ckpt_dir / ent["file"]).read_bytes()    # v2: monolithic image
     if verify and zlib.crc32(blob) != ent["crc32"]:
         raise IOError(f"rank {rank} image failed crc32 validation")

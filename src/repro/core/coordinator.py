@@ -24,6 +24,8 @@ PHASE_RUN = "run"
 PHASE_PENDING = "pending"      # ranks converge on a common checkpoint step
 PHASE_DRAIN = "drain"
 PHASE_SNAPSHOT = "snapshot"
+PHASE_JOIN = "join"            # migration final: replacements hot-join the
+                               # live generation before the world resumes
 PHASE_RESUME = "resume"
 PHASE_EXIT = "exit"
 
@@ -108,7 +110,17 @@ class Coordinator:
         self.stats = {"drain_rounds": 0, "drain_wall_s": 0.0,
                       "drained_messages": 0, "checkpoints": 0,
                       "counter_reports": 0, "empty_channel_snapshots": 0,
-                      "stale_rejected": 0}
+                      "stale_rejected": 0,
+                      "migrations": 0, "migrate_rounds": 0,
+                      "migrate_pause_s": 0.0}
+        # ---- live-migration state (DESIGN.md §13): pre-copy round counter
+        # ranks poll at step boundaries, their per-round stream reports,
+        # and the hot-join barrier for the stop-the-world final
+        self._mig_round = 0
+        self._mig_entries: Dict[int, dict] = {}
+        self._mig_final = False
+        self._join_expected: frozenset = frozenset()
+        self._joined: set = set()
         #: per-generation data-plane telemetry: generation -> rank ->
         #: latest counter dict (compute/wait split, bytes per fabric);
         #: ranks overwrite their own slot, so memory is O(gens x ranks)
@@ -293,8 +305,14 @@ class Coordinator:
         with self._lock:
             self._snap_ack.add(rank)
             if len(self._snap_ack) == self.n:
-                self.phase = (PHASE_RESUME if self._resume_after_snapshot
-                              else PHASE_EXIT)
+                if not self._resume_after_snapshot:
+                    self.phase = PHASE_EXIT
+                elif self._join_expected:
+                    # migration final: hold the world until every
+                    # replacement hot-joins the live generation
+                    self.phase = PHASE_JOIN
+                else:
+                    self.phase = PHASE_RESUME
                 self._lock.notify_all()
             self._lock.notify_all()
 
@@ -321,6 +339,103 @@ class Coordinator:
                         f"after {timeout:g}s")
                 self._lock.wait(left)
             return self.phase
+
+    # ---- live migration (pre-copy rounds + hot-join, DESIGN.md §13) ---------
+    @property
+    def mig_round(self) -> int:
+        """Current pre-copy round (0 = no migration streaming).  Ranks
+        poll this at step boundaries; seeing a round they have not
+        streamed yet, they digest-diff their state against the last
+        streamed manifest and ship only the dirty leaves — the world
+        keeps computing."""
+        return self._mig_round
+
+    @property
+    def migrating(self) -> bool:
+        """True between request_migration_final and the world resuming —
+        ranks save their images leaf-split so pre-copied chunks become
+        references."""
+        return self._mig_final
+
+    @property
+    def join_expected(self) -> frozenset:
+        return self._join_expected
+
+    def begin_round(self, round_no: int) -> None:
+        """Open pre-copy round `round_no`: every rank streams its dirty
+        leaf set at its next step boundary.  Only legal while RUNNING —
+        rounds never overlap the checkpoint FSM."""
+        with self._lock:
+            if self.phase != PHASE_RUN:
+                raise RuntimeError(
+                    f"migration round during phase {self.phase}")
+            self._mig_round = round_no
+            self._mig_entries = {}
+            self.stats["migrate_rounds"] += 1
+            self._lock.notify_all()
+
+    def report_round(self, rank: int, round_no: int, entry: dict,
+                     generation: Optional[int] = None) -> None:
+        """A rank finished streaming its dirty leaves for `round_no`.
+        Late reports from a superseded round are dropped (the driver has
+        already moved on)."""
+        self._check_gen(generation)
+        with self._lock:
+            if round_no == self._mig_round:
+                self._mig_entries[rank] = dict(entry)
+                self._lock.notify_all()
+
+    def wait_round(self, round_no: int,
+                   timeout: Optional[float] = None) -> Dict[int, dict]:
+        """Driver side: block until every rank streamed `round_no`."""
+        timeout = self.timeout if timeout is None else timeout
+        deadline = time.time() + timeout
+        with self._lock:
+            while (round_no == self._mig_round
+                   and len(self._mig_entries) < self.n):
+                if self.aborted is not None:
+                    raise JobAborted(self.aborted)
+                left = deadline - time.time()
+                if left <= 0:
+                    raise TimeoutError(
+                        f"migration round {round_no}: "
+                        f"{len(self._mig_entries)}/{self.n} ranks streamed "
+                        f"after {timeout:g}s")
+                self._lock.wait(left)
+            return {r: dict(e) for r, e in self._mig_entries.items()}
+
+    def request_migration_final(self, join_ranks: Sequence[int],
+                                resume: bool = True) -> None:
+        """The stop-the-world tail of migrate(): a normal checkpoint FSM
+        round except (a) ranks save leaf-split images (pre-copied chunks
+        become references — the pause pays only the final dirty delta)
+        and (b) after the last snapshot ack the phase goes to PHASE_JOIN
+        until each rank in `join_ranks` hot-joins via a replacement
+        restored from the just-committed manifest."""
+        with self._lock:
+            if self.phase != PHASE_RUN:
+                raise RuntimeError(
+                    f"migration final during phase {self.phase}")
+            self._join_expected = frozenset(join_ranks)
+            self._joined = set()
+            self._mig_final = True
+            self.stats["migrations"] += 1
+        self.request_checkpoint(resume=resume)
+
+    def hot_join(self, rank: int, generation: Optional[int] = None) -> None:
+        """A replacement rank checks into the RUNNING generation (the
+        join barrier): once every expected rank has joined, the world
+        resumes — no membership bump, no survivor-clone restart."""
+        self._check_gen(generation)
+        with self._lock:
+            self._joined.add(rank)
+            if (self.phase == PHASE_JOIN
+                    and self._joined >= self._join_expected):
+                self._mig_final = False
+                self._mig_round = 0
+                self._join_expected = frozenset()
+                self.phase = PHASE_RESUME
+            self._lock.notify_all()
 
     # ---- generic barrier -----------------------------------------------------
     def barrier(self, rank: int, timeout: Optional[float] = None,

@@ -54,7 +54,11 @@ Wire protocol additions (served by the endpoint, not by ProxyCore):
   ("fail", (rank, exc_bytes))        rank raised; parent records the error
 
 Every reply is ``(ok, value, coord_state)`` with ``coord_state =
-(phase, aborted_reason, ckpt_round, trigger_step, all_finished)``.
+(phase, aborted_reason, ckpt_round, trigger_step, all_finished,
+mig_round, mig_final_ranks)`` — the last two piggyback the live-migration
+FSM (DESIGN.md §13): the pre-copy round children stream at their next
+step boundary, and the ranks being migrated out at a migration final
+(``None`` outside one).
 """
 from __future__ import annotations
 
@@ -76,9 +80,12 @@ import dataclasses
 import numpy as np
 
 from repro.checkpoint import chunkstore
-from repro.core.ckpt_protocol import RankImage, save_rank_image
+from repro.core import migrate as migration
+from repro.core.ckpt_protocol import (RankImage, load_rank_image,
+                                      save_rank_image)
 from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
-                                    PHASE_PENDING, PHASE_RESUME, PHASE_RUN)
+                                    PHASE_JOIN, PHASE_PENDING, PHASE_RESUME,
+                                    PHASE_RUN)
 from repro.core.dataplane import RING_PAYLOAD_MIN, RingRef, ShmRing
 from repro.core.messages import Envelope
 from repro.core.proxy import (CMD_POLL_ALL, CMD_SEND, PROTOCOL_VERSION,
@@ -96,6 +103,7 @@ COORD_RPC_METHODS = frozenset({
     "drain_complete", "note_empty_channel", "ack_snapshot",
     "resume_running", "wait_phase", "report_counters", "mark_finished",
     "all_finished", "barrier", "check_aborted",
+    "report_round", "hot_join",
 })
 
 
@@ -135,6 +143,7 @@ class ProcWorld:
         self._seq = next(_WORLD_SEQ)
         self._procs: Dict[int, multiprocessing.Process] = {}
         self._conns: Dict[int, socket.socket] = {}
+        self._endpoints: Dict[int, threading.Thread] = {}
         self._threads: List[threading.Thread] = []
         self._done: set = set()            # ranks that reported a terminal RPC
         self._lock = threading.Lock()
@@ -198,11 +207,48 @@ class ProcWorld:
             p.start()
             self._procs[r] = p
 
-    def _accept_loop(self) -> None:
-        while not self._halt.is_set():
+    def spawn_replacements(self, ranks, n_steps: int,
+                           store_spec: Optional[str]) -> None:
+        """Fork a hot-join replacement child per migrated rank (DESIGN.md
+        §13): the leaver exited cleanly after its snapshot ack, so its
+        rank image is in the just-committed manifest — the replacement
+        restores from there through `store_spec` (the destination store:
+        fetch-on-miss pulls only what pre-copy didn't stage) and checks
+        in at the join barrier.  Called by MPIJob.migrate while the world
+        is parked in PHASE_JOIN."""
+        ctx = multiprocessing.get_context("fork")
+        ckpt_dir = str(self.job._ckpt_dir)
+        for r in ranks:
+            old = self._procs.get(r)
+            if old is not None:
+                old.join(10.0)        # leaver exits right after ckpt_exit
+            # the leaver's endpoint thread must finish its clean-exit check
+            # BEFORE the rank leaves _done — otherwise it would misread the
+            # leaver's own EOF as a mid-protocol death
             with self._lock:
-                if len(self._conns) >= self.n:
-                    return
+                ep = self._endpoints.get(r)
+            if ep is not None:
+                ep.join(10.0)
+            with self._lock:
+                # the rank is live again: a torn socket on the REPLACEMENT
+                # must be detected as a death, not excused by the leaver's
+                # clean goodbye
+                self._done.discard(r)
+            self.exit_codes.pop(r, None)
+            p = ctx.Process(target=_child_main,
+                            args=(self.job, r, self.port, n_steps,
+                                  str(self.log_path(r)),
+                                  (ckpt_dir, store_spec)),
+                            daemon=True, name=f"rank-{r}-joined")
+            p.start()
+            self._procs[r] = p
+
+    def _accept_loop(self) -> None:
+        # runs until stop(): a live migration forks replacement children
+        # mid-job (spawn_replacements), so the listener must keep accepting
+        # after the initial n ranks have connected — a reconnect for a rank
+        # simply replaces its conn entry and gets a fresh endpoint thread
+        while not self._halt.is_set():
             try:
                 conn, _ = self._srv.accept()
             except socket.timeout:
@@ -215,11 +261,12 @@ class ProcWorld:
                 conn.close()
                 continue
             rank = struct.unpack("!i", raw)[0]
-            with self._lock:
-                self._conns[rank] = conn
             t = threading.Thread(target=self._serve_rank, args=(rank, conn),
                                  daemon=True,
                                  name=f"procworld-{self._seq}-endpoint-{rank}")
+            with self._lock:
+                self._conns[rank] = conn
+                self._endpoints[rank] = t
             t.start()
             self._threads.append(t)
 
@@ -229,7 +276,8 @@ class ProcWorld:
         trig = self.job._trigger
         return (c.phase, c.aborted, c.ckpt_round,
                 trig[0] if trig is not None else None,
-                c.all_finished())
+                c.all_finished(), c.mig_round,
+                tuple(sorted(c.join_expected)) if c.migrating else None)
 
     def _serve_rank(self, rank: int, conn: socket.socket) -> None:
         """One rank's proxy endpoint: the process-world twin of
@@ -491,9 +539,9 @@ class SocketChannel(ProxyChannel):
                                              timeout=connect_timeout)
         self.sock.settimeout(None)
         self.sock.sendall(struct.pack("!i", rank))
-        #: (phase, aborted_reason, ckpt_round, trigger_step, all_finished)
-        #: — piggybacked on every reply
-        self.coord_state: tuple = (PHASE_RUN, None, 0, None, False)
+        #: (phase, aborted_reason, ckpt_round, trigger_step, all_finished,
+        #: mig_round, mig_final_ranks) — piggybacked on every reply
+        self.coord_state: tuple = (PHASE_RUN, None, 0, None, False, 0, None)
 
     # ---- frame transport hooks ---------------------------------------------
     def _push(self, frame: tuple) -> None:
@@ -591,6 +639,19 @@ class CoordClient:
     def trigger_step(self) -> Optional[int]:
         return self.chan.coord_state[3]
 
+    @property
+    def mig_round(self) -> int:
+        return self.chan.coord_state[5]
+
+    @property
+    def mig_final_ranks(self) -> Optional[tuple]:
+        """Ranks being migrated out at a migration final, None outside
+        one.  Safe to read from the cache: join_expected is set BEFORE
+        the checkpoint request goes out and stays stable until the join
+        barrier completes — any coord_state showing the pending phase of
+        a migration final already carries it."""
+        return self.chan.coord_state[6]
+
     def check_aborted(self) -> None:
         reason = self.chan.coord_state[1]
         if reason is not None:
@@ -635,6 +696,13 @@ class CoordClient:
     def mark_finished(self, rank):
         return self._rpc("mark_finished", rank)
 
+    def report_round(self, rank, round_no, entry, generation=None):
+        return self._rpc("report_round", rank, round_no, entry,
+                         generation=generation)
+
+    def hot_join(self, rank, generation=None):
+        return self._rpc("hot_join", rank, generation=generation)
+
     def all_finished(self):
         # cached: piggybacked on every reply, refreshed by the serving
         # loop's periodic ping — a finished rank must not burn a dedicated
@@ -672,10 +740,16 @@ def _redirect_io(log_path: str) -> Any:
 
 
 def _child_main(job, rank: int, port: int, n_steps: int,
-                log_path: str) -> None:
+                log_path: str,
+                mig_resume: Optional[tuple] = None) -> None:
     """The rank process entry point — the process-world twin of
     MPIJob._rank_main + _do_checkpoint, RPC'd through the SocketChannel.
-    Runs in a forked child; exits via os._exit (no inherited atexit)."""
+    Runs in a forked child; exits via os._exit (no inherited atexit).
+
+    `mig_resume` = ``(ckpt_dir, store_spec)`` marks a hot-join
+    replacement (DESIGN.md §13): restore this rank's image from the
+    just-committed migration manifest through the destination store,
+    announce at the join barrier, then run like any other rank."""
     code = 1
     chan = None
     logf = None
@@ -700,13 +774,37 @@ def _child_main(job, rank: int, port: int, n_steps: int,
         coord = CoordClient(chan, generation=job.coord.generation,
                             timeout=job.coord.timeout)
         mpi = MPI(rank, job.n, chan, coord)
-        if not job._restored:
+        if mig_resume is not None:
+            # hot-join replacement: the image is in the manifest the
+            # migration final just committed; reads route through the
+            # destination store so a cold cache fetches only the parts
+            # pre-copy rounds didn't stage
+            mr_dir, mr_spec = mig_resume
+            img = load_rank_image(
+                Path(mr_dir), rank,
+                store=_child_store(mr_spec) if mr_spec else None)
+            mpi.restore(img.mpi_state)
+            state = img.state_obj()
+            step = img.step_idx
+            coord.hot_join(rank, generation=mpi.generation)
+            phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)
+            if phase == PHASE_EXIT:
+                chan.call("ckpt_exit", rank, pickle.dumps(state))
+                code = 0
+                return
+            coord.resume_running(rank)
+            coord.wait_phase_alive(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
+        elif not job._restored:
             mpi.Init()
             state = job.init_fn(mpi)
+            step = job.start_steps[rank]
         else:
             mpi.restore(job._restore_snaps[rank])
             state = job.states[rank]
-        step = job.start_steps[rank]
+            step = job.start_steps[rank]
+        #: pre-copy streaming memo: last streamed round + digest baseline
+        mig_done = 0
+        mig_digests: Dict[str, str] = {}
         last_rt = -1
         while step < n_steps:
             # heartbeat + coord-state freshness: a communication-heavy step
@@ -723,6 +821,15 @@ def _child_main(job, rank: int, port: int, n_steps: int,
             if (trig is not None and step >= trig
                     and coord.phase == PHASE_RUN):
                 chan.call("fire_trigger")
+            # pre-copy streaming (DESIGN.md §13): a new migration round
+            # opened — ship the dirty leaves at this step boundary and
+            # keep computing (no drain, no pause)
+            mig_round = coord.mig_round
+            if (mig_round and mig_done < mig_round
+                    and coord.phase == PHASE_RUN):
+                mig_done = mig_round
+                _child_stream_round(chan, coord, mpi, state, step,
+                                    mig_round, mig_digests)
             if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
                 agreed = coord.propose_ckpt_step(rank, step)
                 mpi._proposed_gen = coord.ckpt_round
@@ -754,6 +861,14 @@ def _child_main(job, rank: int, port: int, n_steps: int,
         # (a finished rank idles at ~200 RPC/s, not a busy loop)
         while not coord.all_finished():
             coord.check_aborted()
+            mig_round = coord.mig_round
+            if (mig_round and mig_done < mig_round
+                    and coord.phase == PHASE_RUN):
+                # a finished rank still streams its (now static) state —
+                # rounds need every rank's entry to complete
+                mig_done = mig_round
+                _child_stream_round(chan, coord, mpi, state, step,
+                                    mig_round, mig_digests)
             if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
                 mpi.step_idx = step
                 agreed = coord.propose_ckpt_step(rank, step)
@@ -803,11 +918,30 @@ def _child_store(spec: str):
     return st
 
 
+def _child_stream_round(chan: SocketChannel, coord: CoordClient, mpi,
+                        state, step: int, round_no: int,
+                        digests: Dict[str, str]) -> None:
+    """One pre-copy round for this child (the process-world twin of
+    MPIJob._stream_round): digest-diff the app state against the last
+    streamed round, upload only the dirty leaves through the child's own
+    store connection, report the entry to the coordinator."""
+    _, store_spec = chan.call("ckpt_info")
+    entry, new_digests = migration.stream_round(
+        _child_store(store_spec), state, digests)
+    entry["step_idx"] = step
+    digests.clear()
+    digests.update(new_digests)
+    coord.report_round(mpi.rank, round_no, entry,
+                       generation=mpi.generation)
+
+
 def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
-                      state, step: int) -> bool:
+                      state, step: int):
     """Flush -> drain -> snapshot -> resume/exit, with the CHILD writing
     its own rank image into the shared chunk store and the parent
-    committing the manifest.  True if the job exits."""
+    committing the manifest.  Truthy when this child should exit: True
+    (checkpoint with resume=False) or "migrated" (migration final — a
+    hot-joined replacement process takes over this rank)."""
     mpi.flush()
     while coord.phase == PHASE_DRAIN:
         coord.check_aborted()
@@ -829,14 +963,31 @@ def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
     coord.note_empty_channel(mpi.rank)
     chan.call("stats_add", "drained_messages", len(mpi.cache))
     ckpt_dir, store_spec = chan.call("ckpt_info")
+    # migration final (DESIGN.md §13): save the app payload leaf-split so
+    # every leaf pre-copy already streamed is a store reference and the
+    # stop-the-world window ships only the final dirty delta.  The
+    # ckpt_info reply just refreshed coord_state, so the cached
+    # mig_final_ranks is current.
+    mig_ranks = coord.mig_final_ranks
+    leaves = migration.split_state(state) if mig_ranks is not None else None
     image = RankImage(rank=mpi.rank, n_ranks=job.n, step_idx=step,
                       mpi_state=mpi.snapshot(),
-                      app_state=pickle.dumps(state))
+                      app_state=(b"" if leaves is not None
+                                 else pickle.dumps(state)))
     entry = save_rank_image(Path(ckpt_dir), image,
-                            store=_child_store(store_spec))
+                            store=_child_store(store_spec),
+                            app_leaves=leaves)
     chan.call("ckpt_entry", mpi.rank, entry, step)
+    # leaver decision BEFORE the ack (same race as the thread world): the
+    # join barrier cannot complete before this rank acks, so the cached
+    # mig_final_ranks cannot have been cleared yet
+    leaver = mig_ranks is not None and mpi.rank in mig_ranks
     coord.ack_snapshot(mpi.rank, generation=mpi.generation)
-    phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)
+    if leaver:
+        return "migrated"
+    phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT, PHASE_JOIN)
+    if phase == PHASE_JOIN:          # survivor parked at the join barrier
+        phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)
     if phase == PHASE_EXIT:
         return True
     coord.resume_running(mpi.rank)

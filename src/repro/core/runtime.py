@@ -29,7 +29,7 @@ import pickle
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 from repro.checkpoint import chunkstore
 from repro.checkpoint.chunkstore import ChunkStoreBackend
@@ -37,9 +37,11 @@ from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
                                       save_rank_image)
+from repro.core import migrate as migration
 from repro.core.coordinator import (Coordinator, JobAborted, Membership,
-                                    PHASE_DRAIN, PHASE_EXIT, PHASE_PENDING,
-                                    PHASE_RESUME, PHASE_RUN, PHASE_SNAPSHOT)
+                                    PHASE_DRAIN, PHASE_EXIT, PHASE_JOIN,
+                                    PHASE_PENDING, PHASE_RESUME, PHASE_RUN,
+                                    PHASE_SNAPSHOT)
 from repro.core.proxy import MPIProxy, ProxyChannel
 from repro.core.transport import make_transport
 from repro.core.virtualization import make_rank_map
@@ -108,6 +110,15 @@ class MPIJob:
         self._threads: List[threading.Thread] = []
         self._restored = False
         self._trigger: Optional[tuple] = None   # (step, dir, resume)
+        #: live-migration (DESIGN.md §13) per-rank streaming state: the
+        #: chunk names shipped last round (the digest-diff baseline) and
+        #: the highest round each rank has streamed
+        self._mig_digests: Dict[int, Dict[str, str]] = {}
+        self._mig_rounds_done: Dict[int, int] = {}
+        #: ranks whose thread is a hot-joined replacement: start from
+        #: states[rank]/start_steps[rank] instead of init_fn
+        self._resume_ranks: set = set()
+        self._n_steps: Optional[int] = None
         #: set by an elastic restart: how this world was reshaped from the
         #: checkpointed one (recorded into the next manifest's meta)
         self.restore_info: Optional[dict] = None
@@ -124,11 +135,11 @@ class MPIJob:
     def _rank_main(self, rank: int, n_steps: int) -> None:
         mpi = self.mpis[rank]
         try:
-            if not self._restored:
+            if self._restored or rank in self._resume_ranks:
+                state = self.states[rank]
+            else:
                 mpi.Init()
                 state = self.init_fn(mpi)
-            else:
-                state = self.states[rank]
             # run() semantics are absolute: run(N) executes steps [start, N)
             step = self.start_steps[rank]
             end = n_steps
@@ -146,15 +157,25 @@ class MPIJob:
                         trig, self._trigger = self._trigger, None
                     if trig is not None:
                         self.checkpoint(trig[1], resume=trig[2])
+                # pre-copy streaming (DESIGN.md §13): a new migration
+                # round opened — ship this rank's dirty leaves at the step
+                # boundary and keep computing (no drain, no pause)
+                mig_round = self.coord.mig_round
+                if (mig_round
+                        and self._mig_rounds_done.get(rank, 0) < mig_round
+                        and self.coord.phase == PHASE_RUN):
+                    self._stream_round(rank, state, step, mig_round)
                 phase = self.coord.phase
                 if phase in (PHASE_PENDING, PHASE_DRAIN):
                     agreed = self.coord.propose_ckpt_step(rank, step)
                     mpi._proposed_gen = self.coord.ckpt_round
                     if agreed is not None and step >= agreed:
-                        should_exit = self._do_checkpoint(rank, mpi, state,
-                                                          step)
-                        if should_exit:
-                            self.states[rank] = state
+                        res = self._do_checkpoint(rank, mpi, state, step)
+                        if res:
+                            if res == "exit":
+                                self.states[rank] = state
+                            # "migrated": the replacement thread owns
+                            # states[rank] now — do not clobber it
                             return
                         continue
                     if agreed is None:
@@ -187,6 +208,13 @@ class MPIJob:
             while not self.coord.all_finished():
                 self.coord.check_aborted()
                 self.heartbeat.ping(rank)    # alive while serving the FSM
+                mig_round = self.coord.mig_round
+                if (mig_round
+                        and self._mig_rounds_done.get(rank, 0) < mig_round
+                        and self.coord.phase == PHASE_RUN):
+                    # a finished rank still streams its (now static) state
+                    # — rounds need every rank's entry to complete
+                    self._stream_round(rank, state, step, mig_round)
                 if self.coord.phase in (PHASE_PENDING, PHASE_DRAIN):
                     mpi.step_idx = step
                     agreed = self.coord.propose_ckpt_step(rank, step)
@@ -202,8 +230,11 @@ class MPIJob:
             raise
 
     def _do_checkpoint(self, rank: int, mpi: MPI, state: Any,
-                       step: int) -> bool:
-        """Flush -> drain -> snapshot -> resume/exit.  True if job exits."""
+                       step: int):
+        """Flush -> drain -> snapshot -> resume/exit.  Returns a truthy
+        reason when this rank's thread should end: "exit" (checkpoint
+        with resume=False) or "migrated" (migration final — a hot-joined
+        replacement thread takes over this rank)."""
         coord = self.coord
         # flush in-flight batches FIRST: every fire-and-forget send this
         # rank issued is on the transport and its exact counters are at the
@@ -224,17 +255,33 @@ class MPIJob:
         coord.note_empty_channel(rank)
         # messages that crossed the checkpoint boundary (restored from cache)
         coord.stat_add("drained_messages", len(mpi.cache))
-        # SNAPSHOT
+        # SNAPSHOT — a migration final saves the app payload leaf-split:
+        # every leaf pre-copy already streamed is a store reference, so
+        # the stop-the-world window ships only the final dirty delta
+        mig = coord.migrating
+        leaves = migration.split_state(state) if mig else None
         image = RankImage(rank=rank, n_ranks=self.n, step_idx=step,
                           mpi_state=mpi.snapshot(),
-                          app_state=pickle.dumps(state))
+                          app_state=(b"" if leaves is not None
+                                     else pickle.dumps(state)))
         entry = save_rank_image(self._ckpt_dir, image,
-                                store=self._ckpt_chunks)
+                                store=self._ckpt_chunks,
+                                app_leaves=leaves)
         self._commit_rank_entry(rank, entry, step)
+        # leaver decision BEFORE the ack: join_expected/migrating are
+        # stable until the join barrier completes, which cannot happen
+        # before this rank acks — reading them after the ack races the
+        # replacement's hot_join clearing them
+        leaver = mig and rank in coord.join_expected
         coord.ack_snapshot(rank, generation=mpi.generation)
-        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
+        if leaver:
+            return "migrated"
+        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT,
+                                       PHASE_JOIN)
+        if phase == PHASE_JOIN:      # survivor parked at the join barrier
+            phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
         if phase == PHASE_EXIT:
-            return True
+            return "exit"
         coord.resume_running(rank)
         self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
         return False
@@ -282,6 +329,7 @@ class MPIJob:
         # construction and run() must not count against the first pings
         for r in range(self.n):
             self.heartbeat.reset(r)
+        self._n_steps = n_steps
         if self._proc is not None:
             return self._proc.run(n_steps, timeout)
         self._threads = [
@@ -301,13 +349,7 @@ class MPIJob:
         return self.results
 
     # ------------------------------------------------------------ checkpoint
-    def checkpoint(self, ckpt_dir: str | Path, resume: bool = True) -> None:
-        """Asynchronous checkpoint request (any thread, any time)."""
-        over = (self._proc.finished() if self._proc is not None
-                else self.coord.all_finished()
-                and all(not t.is_alive() for t in self._threads))
-        if over:
-            raise RuntimeError("job already finished; nothing to checkpoint")
+    def _prepare_ckpt(self, ckpt_dir: str | Path) -> None:
         self._ckpt_dir = Path(ckpt_dir)
         if self.ckpt_store is not None:
             # one backend for the job's lifetime: a remote store keeps its
@@ -320,6 +362,15 @@ class MPIJob:
             self._ckpt_chunks = chunkstore.open_store(
                 None, default=self._ckpt_dir / "chunks")
         self._ckpt_meta = {}
+
+    def checkpoint(self, ckpt_dir: str | Path, resume: bool = True) -> None:
+        """Asynchronous checkpoint request (any thread, any time)."""
+        over = (self._proc.finished() if self._proc is not None
+                else self.coord.all_finished()
+                and all(not t.is_alive() for t in self._threads))
+        if over:
+            raise RuntimeError("job already finished; nothing to checkpoint")
+        self._prepare_ckpt(ckpt_dir)
         self.coord.request_checkpoint(resume=resume)
 
     def checkpoint_at(self, step: int, ckpt_dir: str | Path,
@@ -337,6 +388,210 @@ class MPIJob:
                     return
             time.sleep(0.001)
         raise TimeoutError("checkpoint did not complete")
+
+    # -------------------------------------------- live migration (§13)
+    def _stream_round(self, rank: int, state: Any, step: int,
+                      round_no: int) -> None:
+        """One pre-copy round for one rank, at a step boundary while the
+        world keeps running: digest-diff against the last streamed round,
+        upload only the dirty leaves, report the entry."""
+        entry, digests = migration.stream_round(
+            self._ckpt_chunks, state, self._mig_digests.get(rank, {}))
+        entry["step_idx"] = step
+        self._mig_digests[rank] = digests
+        self._mig_rounds_done[rank] = round_no
+        self.coord.report_round(rank, round_no, entry,
+                                generation=self.mpis[rank].generation)
+
+    def migrate(self, ckpt_dir: str | Path, ranks: Sequence[int] = (0,),
+                dest_cache: Optional[str | Path] = None,
+                max_rounds: int = 8, min_shrink: float = 0.25,
+                timeout: Optional[float] = None,
+                lease_ttl: float = 600.0) -> dict:
+        """Pre-copy live migration (DESIGN.md §13): move `ranks` to a
+        "new host" with the pause bounded by the final dirty delta, not
+        total state size.
+
+        Phase 1 (world keeps computing): stream rounds of app-state
+        chunks to the checkpoint store — each round ships only leaves
+        dirtied since the last (digest-diff); streamed-but-uncommitted
+        chunks are pinned under a gc lease; with `dest_cache` set and a
+        remote store, each round is also prefetched into the destination
+        cache.  Rounds stop when the dirty set reaches zero or stops
+        shrinking by at least `min_shrink` per round.
+
+        Phase 2 (stop-the-world): one checkpoint FSM pass with leaf-split
+        images (pre-copied leaves are references), then replacements for
+        `ranks` restore through the destination store (fetch-on-miss
+        pulls only what pre-copy didn't stage) and hot-join the RUNNING
+        generation at the join barrier — same generation, no restart.
+
+        Blocks the calling thread (drive it beside run() like the fault
+        driver does); returns a report with per-round dirty bytes, the
+        pause wall-time and the final-round wire fraction."""
+        coord = self.coord
+        timeout = coord.timeout if timeout is None else timeout
+        ranks = sorted(set(int(r) for r in ranks))
+        bad = [r for r in ranks if not 0 <= r < self.n]
+        if bad:
+            raise ValueError(f"migrate ranks {bad} outside world of {self.n}")
+        over = (self._proc.finished() if self._proc is not None
+                else self.coord.all_finished()
+                and all(not t.is_alive() for t in self._threads))
+        if over:
+            raise RuntimeError("job already finished; nothing to migrate")
+        self._prepare_ckpt(ckpt_dir)
+        store = self._ckpt_chunks
+        spec = (getattr(store, "fetch_spec", None)
+                or getattr(store, "spec", None))
+        remote_spec = str(spec) if (spec is not None and
+                                    str(spec).startswith("remote://")) \
+            else None
+        dest = None
+        if dest_cache is not None and remote_spec:
+            from repro.checkpoint.chunkservice import make_spec, parse_spec
+            host, port, ns, _ = parse_spec(remote_spec)
+            dest = chunkstore.open_store(make_spec(host, port, ns,
+                                                   dest_cache))
+        lease_id = f"migrate-{os.getpid()}-{os.urandom(3).hex()}"
+        rounds: List[dict] = []
+        prefetched: set = set()
+        staged: set = set()       # every chunk any pre-copy round shipped
+        # thread world: materialise the replacements' states at the
+        # destination DURING the rounds, so the pause patches only the
+        # final delta (process-world children restore in the forked
+        # replacement instead — the parent can't hand objects across)
+        staging: Optional[Dict[int, migration.StagedState]] = None
+        if self._proc is None:
+            staging = {r: migration.StagedState(dest or store)
+                       for r in ranks}
+        prev_dirty: Optional[int] = None
+        converged = False
+        for k in range(1, max_rounds + 1):
+            coord.begin_round(k)
+            entries = coord.wait_round(k, timeout=timeout)
+            migration.write_round_manifest(
+                self._ckpt_dir, k, entries, generation=coord.generation,
+                store_spec=remote_spec)
+            chunks = migration.entries_chunks(entries)
+            staged |= chunks
+            if hasattr(store, "lease"):
+                try:   # pin: a concurrent gc can never collect the round
+                    store.lease(chunks, ttl=lease_ttl, lease_id=lease_id)
+                except (ConnectionError, OSError):
+                    pass
+            dirty = sum(e.get("shipped_bytes", 0) for e in entries.values())
+            total = sum(e.get("total_bytes", 0) for e in entries.values())
+            rounds.append({"round": k, "dirty_bytes": dirty,
+                           "total_bytes": total})
+            if dest is not None:
+                # warm the destination while the world runs: the join-time
+                # fetch then misses only the final delta
+                for name in sorted(chunks - prefetched):
+                    try:
+                        dest.get(name)
+                    except (OSError, KeyError):
+                        pass
+                    prefetched.add(name)
+            if staging is not None:
+                for r in ranks:
+                    if r in entries:
+                        staging[r].absorb(entries[r])
+            if dirty == 0:
+                converged = True
+                break
+            if (prev_dirty is not None
+                    and dirty > (1.0 - min_shrink) * prev_dirty):
+                converged = True      # dirty set stopped shrinking: drain
+                break
+            prev_dirty = dirty
+        # ---- stop-the-world final delta + hot-join
+        t0 = time.time()
+        coord.request_migration_final(ranks)
+        coord.wait_phase(PHASE_JOIN, timeout=timeout)
+        self._spawn_replacements(ranks, dest or store, staging)
+        coord.wait_phase(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN,
+                         timeout=timeout)
+        pause = time.time() - t0
+        coord.stat_add("migrate_pause_s", pause)
+        # wire accounting from the committed manifest (substrate-free: in
+        # the process world children upload through their own store
+        # connections, so parent-side store counters see nothing): the
+        # final round shipped exactly the parts no pre-copy round staged
+        man = load_manifest(self._ckpt_dir)
+        parts = [p for e in man["ranks"].values()
+                 for p in e["parts"].values()]
+        total_ck = sum(p["bytes"] for p in parts)
+        final_bytes = sum(p["bytes"] for p in parts
+                          if p["chunk"] not in staged)
+        if hasattr(store, "unlease"):
+            try:   # rounds are covered by the committed manifest now
+                store.unlease(lease_id)
+            except (ConnectionError, OSError):
+                pass
+        return {"dir": str(self._ckpt_dir), "ranks": ranks,
+                "rounds": rounds, "converged": converged,
+                "pause_s": pause, "final_bytes": final_bytes,
+                "total_bytes": total_ck,
+                "final_fraction": (final_bytes / total_ck
+                                   if total_ck else 0.0)}
+
+    def _spawn_replacements(self, ranks: Sequence[int], img_store,
+                            staging=None) -> None:
+        """Start a replacement for each migrated rank: restore its app
+        state from the just-committed manifest THROUGH the destination
+        store (fetch-on-miss — the "new host" path), then hand the rank
+        to a thread that hot-joins the live generation.  MPI state stays
+        behind the proxy (the paper's argument): the plugin-side objects
+        survive the move untouched in the thread world, and the process
+        world replays them into the replacement child.  With `staging`
+        (migrate()'s per-rank StagedState) the pre-copied leaves are
+        already live objects; only the final delta is fetched here."""
+        if self._proc is not None:
+            spec = getattr(img_store, "spec", None)
+            self._proc.spawn_replacements(ranks, self._n_steps or 0,
+                                          str(spec) if spec else None)
+            return
+        man = load_manifest(self._ckpt_dir)
+        for r in ranks:
+            ent = man["ranks"][str(r)]
+            st = staging.get(r) if staging else None
+            if (st is not None
+                    and any(k.startswith("app/") for k in ent["parts"])):
+                self.states[r], _ = st.materialize(ent)
+                self.start_steps[r] = ent["step_idx"]
+            else:
+                img = load_rank_image(self._ckpt_dir, r, store=img_store)
+                self.states[r] = img.state_obj()
+                self.start_steps[r] = img.step_idx
+            self._resume_ranks.add(r)
+            self.heartbeat.reset(r)
+            t = threading.Thread(target=self._replacement_main,
+                                 args=(r, self._n_steps or 0),
+                                 daemon=True, name=f"rank-{r}-joined")
+            self._threads.append(t)
+            t.start()
+
+    def _replacement_main(self, rank: int, n_steps: int) -> None:
+        """A migrated rank's replacement: state already staged from the
+        committed manifest; announce at the join barrier, complete the
+        resume handshake the departed thread would have run, then behave
+        like any other rank."""
+        mpi = self.mpis[rank]
+        coord = self.coord
+        try:
+            coord.hot_join(rank, generation=mpi.generation)
+            phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
+            if phase == PHASE_EXIT:
+                return
+            coord.resume_running(rank)
+            self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING,
+                                   PHASE_DRAIN)
+        except BaseException as e:  # noqa: BLE001 - surfaced to driver
+            with self._err_lock:
+                self.errors[rank] = e
+            raise
+        self._rank_main(rank, n_steps)
 
     def failed_ranks(self) -> List[int]:
         """Thread-safe snapshot of ranks whose thread raised (the driver's
@@ -442,6 +697,7 @@ class MPIJob:
         rank_map = make_rank_map(old_n, new_n, dead)
         sources: Dict[int, int] = {}
         images: Dict[int, RankImage] = {}    # grow clones reuse one load
+        claimed: Set[int] = set()            # images whose obj is taken
         # image reads route through the restart's store: on a fresh host
         # (empty cache) only the parts the cache lacks are fetched from
         # the chunk service; without a store the manifest's recorded spec
@@ -469,7 +725,10 @@ class MPIJob:
                 job._restore_snaps[r] = snap
             else:
                 job.mpis[r].restore(snap)
-            job.states[r] = pickle.loads(img.app_state)
+            # first taker of an image gets the materialised object (no
+            # re-pickle pass); clones of the same image get private copies
+            job.states[r] = img.state_obj(fresh=src in claimed)
+            claimed.add(src)
             job.start_steps[r] = img.step_idx
         job._restored = True
         if reshaped:

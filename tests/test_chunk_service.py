@@ -126,6 +126,84 @@ def test_namespaces_are_disjoint(server):
         chunkstore.open_store(make_spec("127.0.0.1", server.port, "."))
 
 
+# --------------------------------------------------------------- gc leases
+
+def test_gc_leases_protect_other_writers(server):
+    """Two writers share one namespace.  A's AUTOMATIC gc registers its
+    live set as a TTL lease; B's explicit gc_remote afterwards cannot
+    collect A's chunks — only genuinely unreferenced ones."""
+    a = chunkstore.open_store(server.spec_for("shared"))
+    b = chunkstore.open_store(server.spec_for("shared"))
+    name_a, blob_a = _chunk(b"a-live" * 50)
+    name_b, blob_b = _chunk(b"b-live" * 50)
+    name_dead, blob_dead = _chunk(b"garbage" * 50)
+    a.put(name_a, blob_a)
+    b.put(name_b, blob_b)
+    b.put(name_dead, blob_dead)
+    assert a.gc([name_a]) == 0               # no removal; registers lease
+    assert b.gc_remote([name_b]) == 1        # only name_dead collected
+    assert a.has(name_a) and b.has(name_b) and not b.has(name_dead)
+    assert "chunks" in next(iter(a.leases().values()))
+    # unlease: A's chunk is fair game for the next reclamation
+    assert a.unlease()
+    assert b.gc_remote([name_b]) == 1
+    assert not a.has(name_a)
+
+
+def test_gc_lease_expiry_and_named_pins(server):
+    st = chunkstore.open_store(server.spec_for("ttl"))
+    other = chunkstore.open_store(server.spec_for("ttl"))
+    name, blob = _chunk(b"short-lived" * 30)
+    st.put(name, blob)
+    st.lease([name], ttl=0.05, lease_id="migrate-round-0")
+    assert other.gc_remote([]) == 0          # pinned: survives
+    time.sleep(0.12)
+    assert other.gc_remote([]) == 1          # lease expired: collected
+
+
+def test_server_sweep_honors_leases_and_grace(tmp_path):
+    """The server's own sweep collects only chunks that are BOTH
+    unleased AND older than the grace window — a streamed-but-uncommitted
+    migration round (leased) and an in-flight upload (young) survive."""
+    srv = ChunkServer(tmp_path / "srv").start()
+    try:
+        st = chunkstore.open_store(srv.spec_for("sweep"))
+        leased, lb = _chunk(b"leased" * 40)
+        fresh, fb = _chunk(b"fresh" * 40)
+        stale, sb = _chunk(b"stale" * 40)
+        for n, payload in [(leased, lb), (fresh, fb), (stale, sb)]:
+            st.put(n, payload)
+        st.lease([leased], lease_id="migrate-round-1")
+        old = time.time() - 3600
+        p = srv.backing("sweep").root / stale
+        os.utime(p, (old, old))
+        assert srv.sweep(grace=60.0) == 1    # only the aged unleased chunk
+        assert st.has(leased) and st.has(fresh) and not st.has(stale)
+        assert srv.sweep(grace=0.0) == 1     # fresh now eligible...
+        assert st.has(leased) and not st.has(fresh)   # ...lease still pins
+    finally:
+        srv.stop()
+
+
+def test_auto_sweep_thread(tmp_path):
+    srv = ChunkServer(tmp_path / "srv", auto_gc_interval=0.05,
+                      gc_grace=0.0).start()
+    try:
+        st = chunkstore.open_store(srv.spec_for("auto"))
+        keep, kb = _chunk(b"keep-me" * 20)
+        drop, db = _chunk(b"drop-me" * 20)
+        st.put(keep, kb)
+        st.put(drop, db)
+        st.lease([keep], lease_id="pin")
+        deadline = time.time() + 5.0
+        while st.has(drop) and time.time() < deadline:
+            time.sleep(0.05)
+        assert not st.has(drop)
+        assert st.has(keep)
+    finally:
+        srv.stop()
+
+
 def test_protocol_version_mismatch_rejected(server):
     s = socket.create_connection((server.host, server.port))
     bad = pickle.dumps((CHUNK_PROTOCOL_VERSION + 1, "", [("list", ())]))
