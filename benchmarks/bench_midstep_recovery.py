@@ -1,0 +1,201 @@
+"""Mid-collective recovery vs rollback-restart (DESIGN.md §14).
+
+The claim under test: when a rank dies INSIDE an allreduce, finishing the
+in-flight step over the survivors from the contribution ledger is an
+order of magnitude cheaper than the pre-§14 ladder — abort the world,
+restart the survivors from the last checkpoint, and recompute every step
+since.  Recovery cost is bounded by one collective's worth of wire
+traffic; rollback cost grows with the checkpoint interval.
+
+Workload: 3 thread-world ranks on the shm transport, each folding a
+seeded allreduce into an accumulator every step.  The victim dies at the
+LAST step via the hop hook (mid reduce-scatter, after its contribution is
+pinned), so the recovered survivors' final state is directly comparable
+to an unfaulted control:
+
+  * recovery leg — job.recover() completes the interrupted op centrally
+    from the ledger; the step finishes with zero recomputation and the
+    wall clock for the whole sub-FSM (collect -> quiesce -> patch ->
+    resume) is the cost.
+  * rollback leg — the same death handled the old way: abort, restart
+    the survivors from the mid-run checkpoint, re-run every lost step.
+  * ledger overhead — the price of the always-on pin: a tight allreduce
+    loop timed with the ledger enabled vs disabled.
+
+Bit-identity is part of the contract: the recovered world's state must
+equal the unfaulted control's exactly (central replay reproduces the
+ring/tree fold order bit for bit).
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, smoke_scale
+from repro.core import runtime
+from repro.core.runtime import MPIJob
+
+N = 3
+VICTIM = 1
+
+
+class _Killed(RuntimeError):
+    pass
+
+
+def _app(n_elems: int, sleep_s: float, kill_step: int = -1):
+    """Accumulator app; the victim dies entering reduce-scatter hop 0 of
+    step ``kill_step`` (after its contribution is pinned in the ledger)."""
+
+    def init_fn(mpi):
+        return {"seed": mpi.rank, "acc": np.zeros(n_elems), "steps": 0}
+
+    def step_fn(mpi, st, k):
+        if mpi.rank == VICTIM and k == kill_step and mpi.generation == 0:
+            def hook(phase, hop):
+                if (phase, hop) == ("rs", 0):
+                    raise _Killed(f"injected at step {k}")
+            mpi._hop_hook = hook
+        rng = np.random.default_rng(1000 * k + st["seed"])
+        x = rng.standard_normal(n_elems)
+        st["acc"] = st["acc"] + mpi.Allreduce(x, op="sum", algo="ring")
+        st["steps"] += 1
+        if sleep_s:
+            time.sleep(sleep_s)
+        return st
+
+    return init_fn, step_fn
+
+
+def _run_async(job, n_steps):
+    box = {}
+
+    def runner():
+        try:
+            box["out"] = job.run(n_steps, timeout=300.0)
+        except BaseException as e:
+            box["err"] = e
+
+    t = threading.Thread(target=runner, daemon=True)
+    t.start()
+    box["thread"] = t
+    return box
+
+
+def _await_death(job, timeout=60.0):
+    deadline = time.time() + timeout
+    while not job.failed_ranks():
+        if time.time() > deadline:
+            raise TimeoutError("victim never died")
+        time.sleep(0.002)
+
+
+def _await_all_stuck(job, timeout=60.0):
+    """Wait until every survivor has entered the victim's interrupted op
+    (its contribution is pinned) — the driver's settle window, made exact:
+    central completion needs all members' inputs in the ledger."""
+    deadline = time.time() + timeout
+    survivors = [r for r in range(N) if r != VICTIM]
+    while True:
+        keys = set(job.ledger.uncommitted_ops_of(VICTIM))
+        if keys and all(keys & set(job.ledger.uncommitted_ops_of(r))
+                        for r in survivors):
+            return
+        if time.time() > deadline:
+            raise TimeoutError("survivors never reached the stuck op")
+        time.sleep(0.002)
+
+
+def run() -> None:
+    n_elems = smoke_scale(65536, 4096)      # f64: 512KB / 32KB per rank
+    steps = smoke_scale(24, 10)
+    ckpt_step = steps // 2                  # rollback loses steps//2 steps
+    sleep_s = smoke_scale(0.004, 0.002)
+    kill_step = steps - 1
+
+    # ---- unfaulted control: the bit-identity reference
+    init_fn, step_fn = _app(n_elems, sleep_s)
+    job = MPIJob(N, step_fn, init_fn, transport="shm")
+    control = job.run(steps, timeout=300.0)
+    job.stop()
+
+    # ---- recovery leg: die mid-ring at the last step, finish the step
+    # over the survivors from the ledger — no bump, no restart
+    init_fn, killer = _app(n_elems, sleep_s, kill_step=kill_step)
+    job = MPIJob(N, killer, init_fn, transport="shm")
+    box = _run_async(job, steps)
+    _await_death(job)
+    _await_all_stuck(job)
+    rep = job.recover((VICTIM,), timeout=60.0)
+    box["thread"].join(300.0)
+    recovered = box.get("out")
+    job.stop()
+    if recovered is None:
+        raise RuntimeError(f"recovered run failed: {box.get('err')!r}")
+    recovery_s = rep["wall_s"]
+    emit("midstep_recovery/recovery_pause", recovery_s * 1e6,
+         f"completed={rep['completed_ops']},rerun={rep['rerun_ops']}")
+
+    same = all(
+        np.array_equal(recovered[r]["acc"], control[r]["acc"])
+        and recovered[r]["steps"] == steps
+        for r in range(N) if r != VICTIM)
+    emit("midstep_recovery/recovered_step_bit_identical", float(same))
+
+    # ---- rollback leg: the same death, pre-§14 ladder — abort the
+    # world, restart the survivors from the mid-run checkpoint, re-run
+    # every lost step
+    with tempfile.TemporaryDirectory() as d:
+        ck = Path(d) / "ck"
+        init_fn, killer = _app(n_elems, sleep_s, kill_step=kill_step)
+        job = MPIJob(N, killer, init_fn, transport="shm")
+        job.checkpoint_at(ckpt_step, ck)
+        box = _run_async(job, steps)
+        _await_death(job)
+        t0 = time.time()
+        job.abort("dead rank: rollback baseline")
+        box["thread"].join(300.0)
+        job.stop()
+        init_fn, step_fn = _app(n_elems, sleep_s)
+        job2 = MPIJob.restart(ck, step_fn, init_fn, transport="shm",
+                              dead_ranks=(VICTIM,))
+        out2 = job2.run(steps, timeout=300.0)
+        rollback_s = time.time() - t0
+        job2.stop()
+        if any(o["steps"] != steps for o in out2):
+            raise RuntimeError("rollback leg did not reach the end")
+    emit("midstep_recovery/rollback_restart", rollback_s * 1e6,
+         f"lost_steps={steps - ckpt_step}")
+
+    speedup = rollback_s / max(recovery_s, 1e-9)
+    emit("midstep_recovery/recovery_speedup_vs_rollback_x", speedup,
+         f"recover={recovery_s * 1e3:.1f}ms,"
+         f"rollback={rollback_s * 1e3:.1f}ms")
+
+    # ---- ledger overhead: a tight allreduce loop (no think time) with
+    # the always-on contribution pin vs without it
+    tight = smoke_scale(60, 20)
+    init_fn, step_fn = _app(n_elems, 0.0)
+    times = {}
+    saved = runtime.LEDGER_ENABLED
+    try:
+        for enabled in (False, True):
+            runtime.LEDGER_ENABLED = enabled
+            job = MPIJob(N, step_fn, init_fn, transport="shm")
+            t0 = time.time()
+            job.run(tight, timeout=300.0)
+            times[enabled] = time.time() - t0
+            job.stop()
+    finally:
+        runtime.LEDGER_ENABLED = saved
+    frac = max(0.0, times[True] / max(times[False], 1e-9) - 1.0)
+    emit("midstep_recovery/ledger_overhead_fraction", frac,
+         f"on={times[True] * 1e3:.0f}ms,off={times[False] * 1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,12 @@ CI runners are noise):
     are fixed-cost dominated), the final round must ship at most the
     committed fraction of total checkpoint bytes, and the migrated
     world's state must be bit-identical to the unmigrated control's.
+  * mid-collective recovery (BENCH_midstep_recovery.json): finishing a
+    dead rank's in-flight allreduce from the contribution ledger must
+    beat the abort-restart-recompute rollback by the committed floor
+    (3x full size), the always-on ledger pin must cost at most the
+    committed fraction over a tight allreduce loop, and the recovered
+    survivors' state must be bit-identical to the unfaulted control's.
 """
 from __future__ import annotations
 
@@ -150,6 +156,25 @@ def main() -> None:
     if val is not None:
         check("live_migrate/migrate_vs_restore_bit_identical",
               val == mc["bit_identical_required"], f"{val}")
+
+    rec = json.loads((REPO / "BENCH_midstep_recovery.json").read_text())
+    rcc = rec["contract"]
+    val = rows.get("midstep_recovery/recovery_speedup_vs_rollback_x")
+    if val is not None:
+        floor = rcc["ci_smoke_recovery_speedup_floor_x" if smoke
+                    else "recovery_speedup_vs_rollback_min_x"]
+        check("midstep_recovery/recovery_speedup_vs_rollback_x",
+              val >= floor,
+              f"{val:.2f}x (floor {floor}x{' [smoke]' if smoke else ''})")
+    val = rows.get("midstep_recovery/ledger_overhead_fraction")
+    if val is not None:
+        check("midstep_recovery/ledger_overhead_fraction",
+              val <= rcc["ledger_overhead_fraction_max"],
+              f"{val:.4f} (ceiling {rcc['ledger_overhead_fraction_max']})")
+    val = rows.get("midstep_recovery/recovered_step_bit_identical")
+    if val is not None:
+        check("midstep_recovery/recovered_step_bit_identical",
+              val == rcc["bit_identical_required"], f"{val}")
 
     missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
                               ("delta_write_fraction", fresh_frac))

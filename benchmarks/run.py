@@ -17,8 +17,8 @@ from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_ckpt_pipeline,
                         bench_data_plane, bench_drain, bench_live_migrate,
-                        bench_proxy_overhead, bench_remote_store,
-                        bench_restart, bench_roofline)
+                        bench_midstep_recovery, bench_proxy_overhead,
+                        bench_remote_store, bench_restart, bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
@@ -31,6 +31,7 @@ SUITES = {
     "ckpt_manager": bench_ckpt_manager.run,
     "remote_store": bench_remote_store.run,
     "live_migrate": bench_live_migrate.run,
+    "midstep_recovery": bench_midstep_recovery.run,
     "roofline": bench_roofline.run,
 }
 

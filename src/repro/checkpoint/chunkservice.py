@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import os
 import pickle
+import random
 import re
 import socket
 import struct
@@ -66,6 +67,7 @@ from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.chunkstore import ChunkStore, ChunkStoreBackend
+from repro.core import tunables
 from repro.core.transport import (dumps_parts, loads_body, read_frame_mv,
                                   write_frame_parts)
 
@@ -474,7 +476,18 @@ class RemoteChunkStore(ChunkStoreBackend):
     the parent's.  One request/reply cycle at a time under a lock (the
     writer pool serializes here; the server side fans out per
     connection, so parallel clients scale, parallel calls on ONE client
-    pipeline through one socket)."""
+    pipeline through one socket).
+
+    Connection-layer failures (dial refused, torn write/read, EOF
+    mid-reply) are retried up to ``REPRO_CHUNK_RETRIES`` attempts with
+    doubling, jittered backoff from ``REPRO_CHUNK_RETRY_BASE_S`` — a
+    chunk server bounced under the client (crash + restart, rolling
+    upgrade) costs a short stall instead of a failed checkpoint.  Whole
+    requests are replayed: every command is idempotent (content-addressed
+    PUT, read-only GET/HAS, set-valued REF/LEASE), so a reply lost on the
+    wire re-executes safely.  Errors the SERVER raised are never retried
+    — those arrive on a healthy round trip and retrying cannot change
+    them."""
 
     wants_batched_has = True
     root = None
@@ -500,7 +513,7 @@ class RemoteChunkStore(ChunkStoreBackend):
                       "bytes_written": 0, "bytes_referenced": 0,
                       "chunks_removed": 0,
                       "bytes_uploaded": 0, "bytes_fetched": 0,
-                      "round_trips": 0}
+                      "round_trips": 0, "reconnects": 0}
 
     @property
     def spec(self) -> str:
@@ -521,27 +534,43 @@ class RemoteChunkStore(ChunkStoreBackend):
         return self._sock
 
     def _request(self, cmds: Sequence[tuple]) -> list:
+        attempts = max(1, int(tunables.CHUNK_RETRIES))
         with self._lock:
-            s = self._conn()
-            try:
-                write_frame_parts(s, dumps_parts(
-                    (CHUNK_PROTOCOL_VERSION, self.namespace, list(cmds))))
-                blob = read_frame_mv(s)
-            except OSError as e:
-                self.close()
-                raise ChunkServiceError(
-                    f"chunk server {self.host}:{self.port} request "
-                    f"failed: {e}") from None
-            if blob is None:
-                self.close()
-                raise ChunkServiceError(
-                    f"chunk server {self.host}:{self.port} closed the "
-                    f"connection mid-reply")
-            self.stats["round_trips"] += 1
-            ok, payload = loads_body(blob)
-            if not ok:
-                raise payload
-            return payload
+            for attempt in range(attempts):
+                try:
+                    blob = self._attempt(cmds)
+                except ChunkServiceError:
+                    # connection-layer failure — socket already closed by
+                    # the attempt; re-dial after a jittered backoff
+                    if attempt + 1 >= attempts:
+                        raise
+                    delay = tunables.CHUNK_RETRY_BASE_S * (2 ** attempt)
+                    time.sleep(delay * (0.5 + random.random()))
+                    self.stats["reconnects"] += 1
+                    continue
+                self.stats["round_trips"] += 1
+                ok, payload = loads_body(blob)
+                if not ok:
+                    raise payload    # server-raised: healthy wire, no retry
+                return payload
+
+    def _attempt(self, cmds: Sequence[tuple]):
+        s = self._conn()
+        try:
+            write_frame_parts(s, dumps_parts(
+                (CHUNK_PROTOCOL_VERSION, self.namespace, list(cmds))))
+            blob = read_frame_mv(s)
+        except OSError as e:
+            self.close()
+            raise ChunkServiceError(
+                f"chunk server {self.host}:{self.port} request "
+                f"failed: {e}") from None
+        if blob is None:
+            self.close()
+            raise ChunkServiceError(
+                f"chunk server {self.host}:{self.port} closed the "
+                f"connection mid-reply")
+        return blob
 
     def _call(self, cmd: str, *args) -> Any:
         return self._request([(cmd, args)])[0]

@@ -30,6 +30,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import recovery as _recovery
 from repro.core.coordinator import Coordinator, PHASE_PENDING, PHASE_RUN
 from repro.core.drain import MessageCache, remap_cache_snapshot
 from repro.core.messages import (ANY_SOURCE, ANY_TAG, COLL_TAG_BASE, DATATYPES,
@@ -38,6 +39,7 @@ from repro.core.proxy import (CMD_POLL_ALL, CMD_POLL_WAIT, CMD_REGISTER_COMM,
                               CMD_REGISTER_RANK, CMD_SEND,
                               CMD_UNREGISTER_COMM, ProxyChannel)
 from repro.core.replay import AdminLog
+from repro.core.tunables import ALLREDUCE_RING_MIN_BYTES
 from repro.core.virtualization import (RankMap, VirtualIds, WORLD_VID,
                                        remap_vids_snapshot)
 
@@ -50,8 +52,11 @@ REPORT_EPOCH = 32
 # Allreduce algorithm crossover: payloads at least this large use the ring
 # (bandwidth-optimal), smaller ones the binomial tree (latency-optimal).
 # All ranks share one GIL here so serialization is effectively a shared
-# resource; real clusters would set this far lower.
-RING_MIN_BYTES = 1 << 23
+# resource; real clusters would set this far lower.  Env-tunable via
+# REPRO_ALLREDUCE_RING_MIN_BYTES (core/tunables.py) — NOT the same knob as
+# the shm tensor-ring payload crossover, which the old REPRO_RING_MIN_BYTES
+# name controls.
+RING_MIN_BYTES = ALLREDUCE_RING_MIN_BYTES
 
 # blocking-call wait policy: one CMD_POLL_WAIT round trip parks the proxy
 # on the transport for up to this long; the plugin thread sleeps on the
@@ -59,12 +64,9 @@ RING_MIN_BYTES = 1 << 23
 # in checkpoint agreement every few milliseconds.
 _POLL_WAIT_S = 0.005
 
-_OPS: dict = {
-    "sum": lambda a, b: a + b,
-    "max": np.maximum,
-    "min": np.minimum,
-    "prod": lambda a, b: a * b,
-}
+# reduction functions live in core/recovery.py so the recovery replay
+# applies bit-identical ops without an import cycle
+_OPS = _recovery.REDUCE_OPS
 
 
 class CheckpointExit(Exception):
@@ -120,6 +122,16 @@ class MPI:
         #: runtime hook: called whenever this rank is blocked-but-alive
         #: (pumping an empty transport) so the heartbeat keeps beating
         self._on_idle: Optional[Callable[[], None]] = None
+        #: mid-collective recovery (DESIGN.md §14): the ContributionLedger
+        #: (or its process-world client) pinning collective inputs, the
+        #: descriptor of the op currently on the wire, and the last
+        #: recovery epoch this rank participated in
+        self.ledger = None
+        self._rec_op: Optional[dict] = None
+        self._rec_done_token: Optional[int] = None
+        #: test-only fault injection: called at every ring hop with
+        #: (phase, hop_index) — lets kill-point tests die mid-dance
+        self._hop_hook: Optional[Callable[[str, int], None]] = None
 
     # ------------------------------------------------------------------ admin
     def Init(self) -> None:
@@ -224,10 +236,16 @@ class MPI:
 
     def _participate_if_pending(self) -> None:
         """Inside a blocked call: keep checkpoint agreement deadlock-free,
-        keep the heartbeat alive, and unwind promptly on abort."""
+        keep the heartbeat alive, unwind promptly on abort, and — when a
+        recovery epoch opens while this rank is blocked inside a ledgered
+        collective — jump out to the recovery path."""
         self.coord.check_aborted()
         if self._on_idle is not None:
             self._on_idle()
+        if self._rec_op is not None:
+            tok = self.coord.recovery_token
+            if tok is not None and tok != self._rec_done_token:
+                raise _recovery.CollectiveInterrupted(tok)
         if (self.coord.phase == PHASE_PENDING
                 and self._proposed_gen < self.coord.ckpt_round):
             self.coord.propose_ckpt_step(self.rank, self.step_idx + 1,
@@ -459,6 +477,9 @@ class MPI:
             k *= 2
         return acc if rel == 0 else None
 
+    #: sentinel returned by _finish_recovery when the op must re-run
+    _RERUN = object()
+
     @_collective_op
     def Allreduce(self, value: Any, op: str = "sum",
                   comm: int = COMM_WORLD,
@@ -469,21 +490,99 @@ class MPI:
         where hop latency dominates.  RING_MIN_BYTES is tuned for this
         GIL-bound substrate — a real multi-host fabric crosses over far
         earlier.  `algo` pins "ring" or "tree" explicitly (must agree
-        across ranks); None auto-selects by payload size."""
+        across ranks); None auto-selects by payload size.
+
+        Recovery frame (DESIGN.md §14): the input is pinned in the
+        ContributionLedger BEFORE any wire traffic, and the dance runs
+        under an op descriptor so a recovery epoch opened while this rank
+        is blocked can interrupt it.  Depending on the coordinator's plan
+        the op is then delivered centrally (bit-identical ledger replay),
+        re-run over the shrunk communicator, or abandoned to the abort
+        fallback — each retry iteration re-reads the (possibly shrunk)
+        communicator."""
         if algo not in (None, "ring", "tree"):
             raise ValueError(f"unknown allreduce algo {algo!r}")
-        info = self.vids.comms[comm]
-        n = info.size()
-        if n == 1:
-            return value
-        ringable = isinstance(value, np.ndarray) and value.size >= n
-        use_ring = (ringable if algo == "ring"
-                    else ringable and algo is None
-                    and value.nbytes >= RING_MIN_BYTES)
-        if use_ring:
-            return self._ring_allreduce(value, op, comm)
-        acc = self.Reduce(value, op, 0, comm)
-        return self.Bcast(acc, 0, comm)
+        while True:
+            info = self.vids.comms[comm]
+            n = info.size()
+            if n == 1:
+                return value
+            ringable = isinstance(value, np.ndarray) and value.size >= n
+            use_ring = (ringable if algo == "ring"
+                        else ringable and algo is None
+                        and value.nbytes >= RING_MIN_BYTES)
+            seq0 = self.coll_seq.get(comm, 0)
+            desc = _recovery.op_descriptor(
+                comm, seq0, "ring" if use_ring else "tree", op, info.ranks)
+            if self.ledger is not None:
+                self.ledger.contribute(desc["key"], self.rank, value,
+                                       meta={"ranks": desc["ranks"]})
+            tok = self.coord.recovery_token
+            if tok is not None and tok != self._rec_done_token:
+                # an epoch opened while this rank was computing: enlist
+                # with the fresh contribution before touching the wire
+                result = self._finish_recovery(desc, comm, seq0)
+                if result is not MPI._RERUN:
+                    return result
+                continue
+            self._rec_op = desc
+            try:
+                if use_ring:
+                    result = self._ring_allreduce(value, op, comm)
+                else:
+                    result = self.Bcast(self.Reduce(value, op, 0, comm),
+                                        0, comm)
+            except _recovery.CollectiveInterrupted:
+                result = self._finish_recovery(desc, comm, seq0)
+                if result is not MPI._RERUN:
+                    return result
+                continue
+            finally:
+                self._rec_op = None
+            if self.ledger is not None:
+                self.ledger.commit(desc["key"], self.rank)
+            return result
+
+    def _finish_recovery(self, desc: dict, comm: int, seq0: int) -> Any:
+        """Ride one recovery epoch out from inside (or at the entry of) a
+        ledgered collective.  Returns the centrally-delivered result, or
+        the _RERUN sentinel after rewinding the sequence number so the
+        caller's retry loop re-runs the dance over the patched world."""
+        outcome, delivered = _recovery.participate(self, desc)
+        if outcome == "deliver":
+            # the logical op consumed both of its tag-sequence slots
+            self.coll_seq[comm] = seq0 + 2
+            if self.ledger is not None:
+                self.ledger.commit(desc["key"], self.rank)
+            return delivered
+        if outcome == "cancelled":
+            # only the driver's abort → restart (or a retry epoch) is a
+            # safe continuation of a part-patched world
+            _recovery.await_fallback(self)
+        self.coll_seq[comm] = seq0
+        return MPI._RERUN
+
+    def _apply_recovery_patch(self, dead: List[int],
+                              purge: List[Tuple[int, int]]) -> None:
+        """Coordinator-ordered world patch (recovery sub-FSM, phase
+        ``patch``): purge every envelope of the interrupted dances, shrink
+        the dead ranks out of every communicator IN PLACE (world-rank ids
+        stay sparse), re-register the shrunk memberships with the proxy
+        and zero the drain counters — safe because quiesce just proved the
+        transport empty, and cache matches never bump ``received``."""
+        dead_set = set(dead)
+        purge_set = {(int(c), int(t)) for c, t in purge}
+        self.cache.envelopes = [
+            e for e in self.cache.envelopes
+            if (e.comm_vid, e.tag) not in purge_set
+            and not (e.src in dead_set and e.tag >= COLL_TAG_BASE)]
+        self.vids.shrink_world(dead_set)
+        for vid, info in self.vids.comms.items():
+            if vid != WORLD_VID:
+                self.channel.call(CMD_REGISTER_COMM, vid, info.ranks)
+        self.sent = 0
+        self.received = 0
+        self._report()
 
     def _ring_allreduce(self, value: np.ndarray, op: str = "sum",
                         comm: int = COMM_WORLD) -> np.ndarray:
@@ -505,6 +604,8 @@ class MPI:
             self._send_raw(chunks[send_idx], (me + 1) % n, tag_rs, comm)
             incoming = self.Recv(source=(me - 1) % n, tag=tag_rs, comm=comm)
             chunks[recv_idx] = fn(chunks[recv_idx], incoming)
+            if self._hop_hook is not None:
+                self._hop_hook("rs", step)
         # allgather
         for step in range(n - 1):
             send_idx = (me - step + 1) % n
@@ -512,6 +613,8 @@ class MPI:
             self._send_raw(chunks[send_idx], (me + 1) % n, tag_ag, comm)
             chunks[recv_idx] = self.Recv(source=(me - 1) % n, tag=tag_ag,
                                          comm=comm)
+            if self._hop_hook is not None:
+                self._hop_hook("ag", step)
         return np.concatenate(chunks).reshape(value.shape)
 
     def Sendrecv(self, value: Any, dest: int, sendtag: int, source: int,

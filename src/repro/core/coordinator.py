@@ -19,6 +19,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import recovery as _recovery
+
 
 PHASE_RUN = "run"
 PHASE_PENDING = "pending"      # ranks converge on a common checkpoint step
@@ -98,6 +100,11 @@ class Coordinator:
         self.membership = membership or Membership(n_ranks)
         self.phase = PHASE_RUN
         self._lock = threading.Condition()
+        #: the LIVE world-rank set: mid-collective recovery removes dead
+        #: ranks from it WITHOUT renumbering (world-rank ids stay sparse;
+        #: every "all ranks agreed" count below compares against this set,
+        #: not the original n)
+        self._live: set = set(range(n_ranks))
         self._counters: Dict[int, RankCounters] = {
             r: RankCounters() for r in range(n_ranks)}
         self._drain_ack: set = set()
@@ -112,7 +119,17 @@ class Coordinator:
                       "counter_reports": 0, "empty_channel_snapshots": 0,
                       "stale_rejected": 0,
                       "migrations": 0, "migrate_rounds": 0,
-                      "migrate_pause_s": 0.0}
+                      "migrate_pause_s": 0.0,
+                      "recoveries": 0, "recovery_wall_s": 0.0,
+                      "recovered_ops": 0, "rerun_ops": 0,
+                      "recovery_cancelled": 0}
+        # ---- mid-collective recovery state (DESIGN.md §14): the active
+        # epoch's sub-FSM (collect -> quiesce -> patch -> resume), the
+        # ledger consulted for retained contributions, and the outcome log
+        self._rec: Optional[dict] = None
+        self._rec_epoch = 0
+        self._rec_ledger = None
+        self._rec_log: Dict[int, dict] = {}
         # ---- live-migration state (DESIGN.md §13): pre-copy round counter
         # ranks poll at step boundaries, their per-round stream reports,
         # and the hot-join barrier for the stop-the-world final
@@ -169,14 +186,24 @@ class Coordinator:
 
     def all_finished(self) -> bool:
         with self._lock:
-            return len(self._finished) == self.n and self.phase == PHASE_RUN
+            return (self._live <= self._finished
+                    and self.phase == PHASE_RUN)
+
+    @property
+    def live_set(self) -> frozenset:
+        """World ranks currently in the live set (sparse after a
+        mid-collective recovery removed a dead rank in place)."""
+        with self._lock:
+            return frozenset(self._live)
 
     # ---- counters (the Σsent == Σreceived heuristic) -----------------------
     def report_counters(self, rank: int, sent: int, received: int,
                         generation: Optional[int] = None) -> None:
         self._check_gen(generation)
         with self._lock:
-            c = self._counters[rank]
+            c = self._counters.get(rank)
+            if c is None:        # removed by recovery: stale report, drop
+                return
             c.sent, c.received = sent, received
             self.stats["counter_reports"] += 1
             self._lock.notify_all()
@@ -237,6 +264,9 @@ class Coordinator:
         with self._lock:
             if self.phase != PHASE_RUN:
                 raise RuntimeError(f"checkpoint during phase {self.phase}")
+            if self._rec is not None and not self._rec.get("error"):
+                raise RuntimeError("checkpoint during mid-collective "
+                                   "recovery")
             self._resume_after_snapshot = resume
             self._drain_ack.clear()
             self._snap_ack.clear()
@@ -259,7 +289,8 @@ class Coordinator:
             if self.phase not in (PHASE_PENDING, PHASE_DRAIN):
                 return self.ckpt_step
             self._proposals.setdefault(rank, next_boundary)
-            if self.ckpt_step is None and len(self._proposals) == self.n:
+            if (self.ckpt_step is None
+                    and self._live <= set(self._proposals)):
                 self.ckpt_step = max(self._proposals.values())
                 self.phase = PHASE_DRAIN
                 self._lock.notify_all()
@@ -286,7 +317,7 @@ class Coordinator:
     def drain_complete(self) -> bool:
         """All ranks quiesced AND the network is globally empty."""
         with self._lock:
-            if len(self._drain_ack) < self.n:
+            if not self._live <= self._drain_ack:
                 return False
             s = sum(c.sent for c in self._counters.values())
             r = sum(c.received for c in self._counters.values())
@@ -304,7 +335,7 @@ class Coordinator:
         self._check_gen(generation)
         with self._lock:
             self._snap_ack.add(rank)
-            if len(self._snap_ack) == self.n:
+            if self._live <= self._snap_ack:
                 if not self._resume_after_snapshot:
                     self.phase = PHASE_EXIT
                 elif self._join_expected:
@@ -369,6 +400,9 @@ class Coordinator:
             if self.phase != PHASE_RUN:
                 raise RuntimeError(
                     f"migration round during phase {self.phase}")
+            if self._rec is not None and not self._rec.get("error"):
+                raise RuntimeError("migration round during mid-collective "
+                                   "recovery")
             self._mig_round = round_no
             self._mig_entries = {}
             self.stats["migrate_rounds"] += 1
@@ -392,7 +426,7 @@ class Coordinator:
         deadline = time.time() + timeout
         with self._lock:
             while (round_no == self._mig_round
-                   and len(self._mig_entries) < self.n):
+                   and not self._live <= set(self._mig_entries)):
                 if self.aborted is not None:
                     raise JobAborted(self.aborted)
                 left = deadline - time.time()
@@ -437,6 +471,259 @@ class Coordinator:
                 self.phase = PHASE_RESUME
             self._lock.notify_all()
 
+    # ---- mid-collective recovery (DESIGN.md §14) ----------------------------
+    #
+    # A dead rank inside a collective opens a recovery EPOCH instead of an
+    # abort: survivors enlist with the exact op they are stuck in
+    # (collect), pump the transport dry (quiesce), purge the half-finished
+    # dance + shrink the world in place + zero counters (patch), then
+    # either take the centrally-replayed result of the interrupted op
+    # (finished from the ContributionLedger's retained inputs — zero
+    # recomputation, bit-identical) or re-run an op the dead rank never
+    # entered over the shrunk communicator (resume).  The membership
+    # generation is NOT bumped — the world stays the same epoch, minus one
+    # rank.  Any ineligibility (ledger miss, multi-failure, timeout)
+    # cancels the epoch and the driver falls back to bump→abort→restart.
+
+    @property
+    def recovery_token(self) -> Optional[int]:
+        """Active recovery epoch id, None when no recovery is running (or
+        the last one was cancelled).  Ranks compare this against the last
+        epoch they participated in to decide whether to enlist."""
+        with self._lock:
+            rec = self._rec
+            if rec is None or rec.get("error"):
+                return None
+            return rec["token"]
+
+    def begin_recovery(self, dead: Sequence[int], ledger) -> int:
+        """Open a recovery epoch for `dead` (parent side).  Raises
+        RecoveryUnavailable when recovery cannot even be attempted —
+        instant, so the non-collective-death case costs microseconds
+        before falling back."""
+        dead_set = frozenset(int(d) for d in dead)
+        with self._lock:
+            if self._rec is not None and self._rec.get("error"):
+                self._rec = None            # superseded failed epoch
+            if self._rec is not None:
+                raise _recovery.RecoveryUnavailable("recovery already active")
+            if self.phase != PHASE_RUN:
+                raise _recovery.RecoveryUnavailable(
+                    f"checkpoint FSM in phase {self.phase}")
+            if self.aborted is not None:
+                raise _recovery.RecoveryUnavailable("job already aborted")
+            if len(dead_set) != 1:
+                raise _recovery.RecoveryUnavailable(
+                    f"multi-failure ({sorted(dead_set)})")
+            if not dead_set <= self._live:
+                raise _recovery.RecoveryUnavailable(
+                    f"{sorted(dead_set - self._live)} not in live set")
+            if len(self._live - dead_set) < 1:
+                raise _recovery.RecoveryUnavailable("no survivors")
+            if ledger is None:
+                raise _recovery.RecoveryUnavailable("ledger disabled")
+            dead_keys: List[tuple] = []
+            for d in dead_set:
+                dead_keys += ledger.uncommitted_ops_of(d)
+            if not dead_keys:
+                # the dead rank was BETWEEN collectives: nothing retained
+                # to finish on its behalf — rollback is the only option
+                raise _recovery.RecoveryUnavailable("ledger-miss")
+            self._rec_epoch += 1
+            self._rec_ledger = ledger
+            self._rec = {
+                "token": self._rec_epoch, "dead": dead_set,
+                "phase": "collect", "t0": time.time(),
+                "enlisted": {}, "quiet": {}, "purge": [],
+                "needs": {}, "results": {}, "actions": {},
+                "patched": set(), "resumed": set(),
+                "dead_keys": [tuple(k) for k in dead_keys],
+                "error": None,
+            }
+            self._lock.notify_all()
+            return self._rec_epoch
+
+    def recovery_poll(self, rank: int, info: Optional[dict] = None,
+                      generation: Optional[int] = None,
+                      token: Optional[int] = None) -> dict:
+        """Rank-side driver RPC for the recovery sub-FSM: ingest `info`
+        (enlistment desc / quiesce report / patch ack), advance the phase
+        when its gate is met, and reply with what the rank should do
+        next.  The resume reply is terminal per rank — delivering the
+        instruction marks the rank resumed."""
+        self._check_gen(generation)
+        with self._lock:
+            rec = self._rec
+            if rec is None:
+                return {"phase": "idle"}
+            if rec.get("error") or rank in rec["dead"] \
+                    or (token is not None and token != rec["token"]):
+                return {"phase": "cancelled"}
+            waiting = self._live - rec["dead"]
+            phase = rec["phase"]
+            if phase == "collect":
+                if info and info.get("kind") in ("op", "boundary",
+                                                 "finished"):
+                    rec["enlisted"][rank] = dict(info)
+                if waiting <= set(rec["enlisted"]):
+                    err = self._plan_recovery_locked(rec)
+                    if err:
+                        self._cancel_locked(rec, err)
+                        return {"phase": "cancelled"}
+                    rec["phase"] = "quiesce"
+            elif phase == "quiesce":
+                if info is not None and "quiet" in info:
+                    rec["quiet"][rank] = (rec["quiet"].get(rank, 0) + 1
+                                          if info["quiet"] else 0)
+                if all(rec["quiet"].get(r, 0) >= 2 for r in waiting):
+                    rec["phase"] = "patch"
+            elif phase == "patch":
+                if info and info.get("patched"):
+                    rec["patched"].add(rank)
+                    if waiting <= rec["patched"]:
+                        rec["phase"] = "resume"
+            if rec["phase"] == "patch":
+                return {"phase": "patch",
+                        "dead": sorted(rec["dead"]),
+                        "purge": list(rec["purge"])}
+            if rec["phase"] == "resume":
+                action, key = rec["actions"].get(rank, ("none", None))
+                rep = {"phase": "resume", "action": action}
+                if action == "deliver":
+                    rep["result"] = rec["results"][key]
+                rec["resumed"].add(rank)
+                if waiting <= rec["resumed"]:
+                    self._finalize_recovery_locked(rec)
+                return rep
+            return {"phase": rec["phase"]}
+
+    def _plan_recovery_locked(self, rec: dict) -> Optional[str]:
+        """All survivors enlisted: decide per interrupted op whether it is
+        finished centrally from the ledger (some member — dead or moved-on
+        — can no longer re-run it) or re-run over the shrunk communicator
+        (the dead rank never entered it and every live member is stuck in
+        it), replay the central ones, and build the purge list + per-rank
+        actions.  Returns an error string → cancel (fallback)."""
+        live_after = self._live - rec["dead"]
+        by_key: Dict[tuple, dict] = {}
+        for r, d in rec["enlisted"].items():
+            if d.get("kind") != "op":
+                continue
+            ent = by_key.setdefault(tuple(d["key"]),
+                                    {"desc": d, "stuck": set()})
+            ent["stuck"].add(r)
+        purge: List[tuple] = []
+        for key, ent in by_key.items():
+            desc = ent["desc"]
+            purge += [(desc["comm"], t) for t in desc["tags"]]
+            members = set(desc["ranks"])
+            op = self._rec_ledger.get(key)
+            contribs = op.contribs if op is not None else {}
+            dead_members = members & rec["dead"]
+            all_live_stuck = ent["stuck"] >= (members & live_after)
+            if dead_members and dead_members <= set(contribs):
+                # the dead rank DID contribute: finish the op centrally
+                # from every member's retained input — zero recomputation,
+                # bit-identical to the unfaulted dance
+                complete = True
+            elif dead_members:
+                # the dead rank never entered this op (it died one op
+                # behind): every live member re-runs it over the shrunk
+                # communicator.  Requires all of them stuck in it — and
+                # they are: no member can finish a collective the dead
+                # rank never fed (the dependency chain passes through
+                # every member) — checked anyway, fail → fallback.
+                if not all_live_stuck:
+                    return f"ledger-miss:op{key}"
+                complete = False
+            else:
+                # healthy sub-communicator op merely caught by the
+                # quiesce: re-run if everyone is still in it, finish
+                # centrally if a member already moved past
+                complete = not all_live_stuck
+            if complete:
+                try:
+                    rec["results"][key] = _recovery.replay_op(
+                        desc, contribs)
+                except KeyError as e:
+                    return f"ledger-miss:op{key}:rank{e}"
+                rec["needs"][key] = "complete"
+            else:
+                rec["needs"][key] = "rerun"
+        rec["purge"] = purge
+        for r in live_after:
+            d = rec["enlisted"].get(r)
+            if d and d.get("kind") == "op":
+                key = tuple(d["key"])
+                rec["actions"][r] = (
+                    ("deliver", key) if rec["needs"][key] == "complete"
+                    else ("rerun", key))
+            else:
+                rec["actions"][r] = ("none", None)
+        return None
+
+    def _finalize_recovery_locked(self, rec: dict) -> None:
+        """Every survivor took its resume instruction: shrink the live
+        set in place (same generation), drop the dead rank's bookkeeping,
+        release the ledger entries recovery consumed, log the outcome."""
+        for key, need in rec["needs"].items():
+            if need == "complete":
+                self._rec_ledger.drop(key)
+        for key in rec["dead_keys"]:
+            if rec["needs"].get(key) != "rerun":
+                self._rec_ledger.drop(key)
+        self._live -= rec["dead"]
+        for r in rec["dead"]:
+            self._counters.pop(r, None)
+            self._finished.discard(r)
+            self._drain_ack.discard(r)
+            self._snap_ack.discard(r)
+        wall = time.time() - rec["t0"]
+        self.stats["recoveries"] += 1
+        self.stats["recovery_wall_s"] += wall
+        n_complete = sum(1 for v in rec["needs"].values()
+                         if v == "complete")
+        self.stats["recovered_ops"] += n_complete
+        self.stats["rerun_ops"] += len(rec["needs"]) - n_complete
+        self._rec_log[rec["token"]] = {
+            "ok": True, "dead": sorted(rec["dead"]), "wall_s": wall,
+            "completed_ops": n_complete,
+            "rerun_ops": len(rec["needs"]) - n_complete,
+        }
+        self._rec = None
+        self._lock.notify_all()
+
+    def _cancel_locked(self, rec: dict, reason: str) -> None:
+        rec["error"] = reason
+        self.stats["recovery_cancelled"] += 1
+        self._rec_log[rec["token"]] = {
+            "ok": False, "dead": sorted(rec["dead"]), "error": reason,
+            "wall_s": time.time() - rec["t0"],
+        }
+        self._lock.notify_all()
+
+    def cancel_recovery(self, token: int, reason: str) -> None:
+        """Parent side: give up on an epoch (timeout).  Parked survivors
+        see "cancelled" at their next poll and hold position until the
+        driver's abort lands."""
+        with self._lock:
+            rec = self._rec
+            if rec is not None and rec["token"] == token \
+                    and not rec.get("error"):
+                self._cancel_locked(rec, reason)
+
+    def recovery_status(self, token: int) -> Optional[dict]:
+        """Outcome of epoch `token`: None while still running, else the
+        logged result dict ({"ok": bool, ...})."""
+        with self._lock:
+            done = self._rec_log.get(token)
+            if done is not None:
+                return dict(done)
+            rec = self._rec
+            if rec is not None and rec["token"] == token:
+                return None
+            return {"ok": False, "error": "superseded"}
+
     # ---- generic barrier -----------------------------------------------------
     def barrier(self, rank: int, timeout: Optional[float] = None,
                 generation: Optional[int] = None) -> None:
@@ -445,7 +732,7 @@ class Coordinator:
         with self._lock:
             gen = self._barrier_gen
             self._barrier_count += 1
-            if self._barrier_count == self.n:
+            if self._barrier_count == len(self._live):
                 self._barrier_count = 0
                 self._barrier_gen += 1
                 self._lock.notify_all()

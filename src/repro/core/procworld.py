@@ -52,13 +52,22 @@ Wire protocol additions (served by the endpoint, not by ProxyCore):
   ("finish", (rank, state_bytes))    normal completion (result to parent)
   ("ckpt_exit", (rank, state_bytes)) checkpoint-with-exit completion
   ("fail", (rank, exc_bytes))        rank raised; parent records the error
+  ("contrib", (key, rank, value, meta))  ledger contribution: the rank's
+                                     input to the collective it is
+                                     entering, pinned parent-side for
+                                     mid-collective recovery (§14)
+  ("contrib_commit", (key, rank))    the rank committed the collective
+  ("trace", (rank, events))          the rank's FSM trace (parity suite)
 
 Every reply is ``(ok, value, coord_state)`` with ``coord_state =
 (phase, aborted_reason, ckpt_round, trigger_step, all_finished,
-mig_round, mig_final_ranks)`` — the last two piggyback the live-migration
-FSM (DESIGN.md §13): the pre-copy round children stream at their next
-step boundary, and the ranks being migrated out at a migration final
-(``None`` outside one).
+mig_round, mig_final_ranks, recovery_token)`` — mig_round/
+mig_final_ranks piggyback the live-migration FSM (DESIGN.md §13): the
+pre-copy round children stream at their next step boundary, and the
+ranks being migrated out at a migration final (``None`` outside one).
+``recovery_token`` piggybacks the mid-collective recovery epoch
+(DESIGN.md §14): non-None while an epoch is open, which is how a child
+parked at a boundary or inside a collective learns to enlist.
 """
 from __future__ import annotations
 
@@ -81,6 +90,7 @@ import numpy as np
 
 from repro.checkpoint import chunkstore
 from repro.core import migrate as migration
+from repro.core import rankloop
 from repro.core.ckpt_protocol import (RankImage, load_rank_image,
                                       save_rank_image)
 from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
@@ -103,7 +113,7 @@ COORD_RPC_METHODS = frozenset({
     "drain_complete", "note_empty_channel", "ack_snapshot",
     "resume_running", "wait_phase", "report_counters", "mark_finished",
     "all_finished", "barrier", "check_aborted",
-    "report_round", "hot_join",
+    "report_round", "hot_join", "recovery_poll",
 })
 
 
@@ -273,11 +283,18 @@ class ProcWorld:
     # ------------------------------------------------------------- endpoint
     def _coord_state(self) -> tuple:
         c = self.job.coord
-        trig = self.job._trigger
-        return (c.phase, c.aborted, c.ckpt_round,
+        # trigger + phase under the fire lock: mid-fire (trigger popped,
+        # phase not yet flipped) a lock-free snapshot would show
+        # trigger=None ∧ phase=RUN and let a child slip past the agreed
+        # boundary into the next step
+        with self.job._ckpt_lock:
+            trig = self.job._trigger
+            phase = c.phase
+        return (phase, c.aborted, c.ckpt_round,
                 trig[0] if trig is not None else None,
                 c.all_finished(), c.mig_round,
-                tuple(sorted(c.join_expected)) if c.migrating else None)
+                tuple(sorted(c.join_expected)) if c.migrating else None,
+                c.recovery_token)
 
     def _serve_rank(self, rank: int, conn: socket.socket) -> None:
         """One rank's proxy endpoint: the process-world twin of
@@ -395,13 +412,20 @@ class ProcWorld:
             job._commit_rank_entry(r, entry, step)
             return None
         if cmd == "fire_trigger":
+            # pop + request under the lock (mirrors the thread world's
+            # fire_trigger): a child that lost the pop race has its RPC
+            # blocked here until the phase flip is visible, and the reply
+            # piggybacks the PENDING state — no rank slips past the
+            # agreed boundary, the agreement is deterministic
             with job._ckpt_lock:
                 trig, job._trigger = job._trigger, None
-            if trig is not None and job.coord.phase == PHASE_RUN:
-                try:
-                    job.checkpoint(trig[1], resume=trig[2])
-                except RuntimeError:
-                    pass       # superseded by a concurrent request / finish
+                if trig is not None and job.coord.phase == PHASE_RUN:
+                    try:
+                        job.checkpoint(trig[1], resume=trig[2])
+                    except RuntimeError:
+                        # a recovery epoch opened first: re-arm for the
+                        # first post-recovery boundary
+                        job._trigger = trig
             return None
         if cmd == "finish":
             r, blob = args
@@ -427,6 +451,27 @@ class ProcWorld:
             self._record_error(r, err)
             with self._lock:
                 self._done.add(r)
+            return None
+        if cmd == "contrib":
+            # ledger contribution (DESIGN.md §14): the child pins its
+            # collective input PARENT-side so the parent can replay the
+            # op after the child is SIGKILLed.  ContributionLedger copies
+            # ndarray values, so the wire buffer is not retained.
+            key, r, value, meta = args
+            if job.ledger is not None:
+                job.ledger.contribute(tuple(key), r, value, meta=meta)
+            return None
+        if cmd == "contrib_commit":
+            key, r = args
+            if job.ledger is not None:
+                job.ledger.commit(tuple(key), r,
+                                  live_ranks=job.coord.live_set)
+            return None
+        if cmd == "trace":
+            r, events = args
+            with job._ckpt_lock:
+                job._fsm_traces.setdefault(r, []).extend(
+                    tuple(e) for e in events)
             return None
         raise ValueError(f"unknown endpoint command {cmd!r}")
 
@@ -505,6 +550,7 @@ class ProcWorld:
 _ENDPOINT_CMDS = frozenset({
     "ping", "coord", "stats_add", "straggler", "telemetry", "ckpt_info",
     "ckpt_entry", "fire_trigger", "finish", "ckpt_exit", "fail",
+    "contrib", "contrib_commit", "trace",
 })
 
 
@@ -540,8 +586,10 @@ class SocketChannel(ProxyChannel):
         self.sock.settimeout(None)
         self.sock.sendall(struct.pack("!i", rank))
         #: (phase, aborted_reason, ckpt_round, trigger_step, all_finished,
-        #: mig_round, mig_final_ranks) — piggybacked on every reply
-        self.coord_state: tuple = (PHASE_RUN, None, 0, None, False, 0, None)
+        #: mig_round, mig_final_ranks, recovery_token) — piggybacked on
+        #: every reply
+        self.coord_state: tuple = (PHASE_RUN, None, 0, None, False, 0,
+                                   None, None)
 
     # ---- frame transport hooks ---------------------------------------------
     def _push(self, frame: tuple) -> None:
@@ -652,6 +700,14 @@ class CoordClient:
         a migration final already carries it."""
         return self.chan.coord_state[6]
 
+    @property
+    def recovery_token(self) -> Optional[int]:
+        """Active recovery epoch id (DESIGN.md §14), None when no epoch
+        is open.  Cached view is at most one reply stale — and every
+        recovery_poll reply refreshes it, so a parked rank converges."""
+        st = self.chan.coord_state
+        return st[7] if len(st) > 7 else None
+
     def check_aborted(self) -> None:
         reason = self.chan.coord_state[1]
         if reason is not None:
@@ -700,6 +756,10 @@ class CoordClient:
         return self._rpc("report_round", rank, round_no, entry,
                          generation=generation)
 
+    def recovery_poll(self, rank, info=None, generation=None, token=None):
+        return self._rpc("recovery_poll", rank, info,
+                         generation=generation, token=token)
+
     def hot_join(self, rank, generation=None):
         return self._rpc("hot_join", rank, generation=generation)
 
@@ -725,6 +785,114 @@ class CoordClient:
                     raise TimeoutError(
                         f"waiting for {phases} after "
                         f"{self.timeout:g}s") from None
+
+
+class _ChildLedger:
+    """Ledger client for a rank child: contributions ship to the parent's
+    ContributionLedger as fire-and-forget endpoint commands, flushed
+    immediately so the bytes are on the socket BEFORE the collective's
+    first wire hop — a SIGKILL landing anywhere inside the dance finds
+    this rank's input already pinned parent-side (DESIGN.md §14)."""
+
+    def __init__(self, chan: SocketChannel):
+        self.chan = chan
+
+    def contribute(self, key, rank, value, meta=None):
+        self.chan.send_async("contrib", tuple(key), rank, value, meta)
+        self.chan.flush_async()
+
+    def commit(self, key, rank):
+        # the commit may ride the next batch: a kill before it lands just
+        # leaves the entry pinned, which recovery treats as "in flight"
+        self.chan.send_async("contrib_commit", tuple(key), rank)
+
+
+class _ProcRankHost(rankloop.RankHost):
+    """Process-world substrate adapter: the unified rank loop
+    (core/rankloop.py) RPC'd through the child's SocketChannel."""
+
+    serve_sleep = 0.005   # a finished rank idles at ~200 replied pings/s
+
+    def __init__(self, job, chan: SocketChannel, coord: CoordClient,
+                 rank: int):
+        super().__init__(job.step_fn)
+        self.job = job
+        self.chan = chan
+        self.coord = coord
+        self.rank = rank
+        self.reported_finish = False
+        self._last_rt = -1
+        self._mig_digests: Dict[str, str] = {}
+
+    def tick(self, mpi) -> None:
+        # heartbeat + coord-state freshness: a communication-heavy step
+        # already refreshed both through its own replied frames; only a
+        # compute-only step needs the dedicated ping round trip
+        rt = self.chan.stats["round_trips"]
+        if rt == self._last_rt:
+            self.chan.refresh()
+            rt = self.chan.stats["round_trips"]
+        self._last_rt = rt
+
+    def trigger_step(self, coord):
+        return coord.trigger_step
+
+    def fire_trigger(self, mpi) -> None:
+        self.chan.call("fire_trigger")
+
+    def stream_round(self, mpi, state, step: int, round_no: int) -> None:
+        _child_stream_round(self.chan, self.coord, mpi, state, step,
+                            round_no, self._mig_digests)
+
+    def record_step(self, mpi, wall: float, compute: float) -> None:
+        # telemetry rides the async batch, like the sends it accounts
+        self.chan.send_async("straggler", self.rank, wall, compute)
+        self.chan.send_async("telemetry", self.rank, mpi.telemetry())
+        mpi.flush_async()
+
+    def assert_empty(self, mpi) -> None:
+        chan = self.chan
+        assert chan.is_empty(), \
+            f"rank {self.rank}: proxy channel not empty at snapshot"
+        if chan.ring is not None:
+            # ring half of the invariant: Σsent == Σreceived counts
+            # envelopes AFTER descriptor resolution, so a drained network
+            # implies every ring slot was read back and freed — no
+            # checkpoint can capture a dangling descriptor
+            n_live = chan.ring.in_flight()
+            assert n_live == 0, \
+                f"rank {self.rank}: {n_live} ring slot(s) in flight " \
+                f"at snapshot"
+
+    def drained_stat(self, mpi) -> None:
+        self.chan.call("stats_add", "drained_messages", len(mpi.cache))
+
+    def save_image(self, mpi, state, step: int) -> bool:
+        ckpt_dir, store_spec = self.chan.call("ckpt_info")
+        # migration final (DESIGN.md §13): save the app payload leaf-split
+        # so every leaf pre-copy already streamed is a store reference and
+        # the stop-the-world window ships only the final dirty delta.  The
+        # ckpt_info reply just refreshed coord_state, so the cached
+        # mig_final_ranks is current — and stable until this rank acks.
+        mig_ranks = self.coord.mig_final_ranks
+        leaves = (migration.split_state(state)
+                  if mig_ranks is not None else None)
+        image = RankImage(rank=self.rank, n_ranks=self.job.n,
+                          step_idx=step, mpi_state=mpi.snapshot(),
+                          app_state=(b"" if leaves is not None
+                                     else pickle.dumps(state)))
+        entry = save_rank_image(Path(ckpt_dir), image,
+                                store=_child_store(store_spec),
+                                app_leaves=leaves)
+        self.chan.call("ckpt_entry", self.rank, entry, step)
+        return mig_ranks is not None and self.rank in mig_ranks
+
+    def wait_phase_alive(self, mpi, *phases: str) -> str:
+        return self.coord.wait_phase_alive(*phases)
+
+    def finish(self, mpi, state) -> None:
+        self.chan.call("finish", self.rank, pickle.dumps(state))
+        self.reported_finish = True
 
 
 def _redirect_io(log_path: str) -> Any:
@@ -774,6 +942,12 @@ def _child_main(job, rank: int, port: int, n_steps: int,
         coord = CoordClient(chan, generation=job.coord.generation,
                             timeout=job.coord.timeout)
         mpi = MPI(rank, job.n, chan, coord)
+        host = _ProcRankHost(job, chan, coord, rank)
+        if job.ledger is not None:
+            # the fork inherited the PARENT's ledger flag; the child's own
+            # contributions ship over the endpoint socket into the
+            # parent-side instance (which is what survives a SIGKILL)
+            mpi.ledger = _ChildLedger(chan)
         if mig_resume is not None:
             # hot-join replacement: the image is in the manifest the
             # migration final just committed; reads route through the
@@ -798,88 +972,22 @@ def _child_main(job, rank: int, port: int, n_steps: int,
             mpi.Init()
             state = job.init_fn(mpi)
             step = job.start_steps[rank]
+            host.trace("init")
         else:
             mpi.restore(job._restore_snaps[rank])
             state = job.states[rank]
             step = job.start_steps[rank]
-        #: pre-copy streaming memo: last streamed round + digest baseline
-        mig_done = 0
-        mig_digests: Dict[str, str] = {}
-        last_rt = -1
-        while step < n_steps:
-            # heartbeat + coord-state freshness: a communication-heavy step
-            # already refreshed both through its own replied frames; only a
-            # compute-only step needs the dedicated ping round trip
-            rt = chan.stats["round_trips"]
-            if rt == last_rt:
-                chan.refresh()
-                rt = chan.stats["round_trips"]
-            last_rt = rt
-            coord.check_aborted()
-            mpi.step_idx = step
-            trig = coord.trigger_step
-            if (trig is not None and step >= trig
-                    and coord.phase == PHASE_RUN):
-                chan.call("fire_trigger")
-            # pre-copy streaming (DESIGN.md §13): a new migration round
-            # opened — ship the dirty leaves at this step boundary and
-            # keep computing (no drain, no pause)
-            mig_round = coord.mig_round
-            if (mig_round and mig_done < mig_round
-                    and coord.phase == PHASE_RUN):
-                mig_done = mig_round
-                _child_stream_round(chan, coord, mpi, state, step,
-                                    mig_round, mig_digests)
-            if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
-                agreed = coord.propose_ckpt_step(rank, step)
-                mpi._proposed_gen = coord.ckpt_round
-                if agreed is not None and step >= agreed:
-                    if _child_checkpoint(job, chan, coord, mpi, state, step):
-                        chan.call("ckpt_exit", rank, pickle.dumps(state))
-                        code = 0
-                        return
-                    continue
-                if agreed is None:
-                    time.sleep(0.0002)
-                    continue
-            w0 = mpi.wait_us_total()
-            t_step = time.time()
-            state = job.step_fn(mpi, state, step)
-            wall = time.time() - t_step
-            # compute/wait split: wall minus the time this step spent
-            # blocked on the transport (per-step collective waits included)
-            compute = max(wall - (mpi.wait_us_total() - w0) / 1e6, 0.0)
-            # telemetry rides the async batch, like the sends it accounts
-            chan.send_async("straggler", rank, wall, compute)
-            chan.send_async("telemetry", rank, mpi.telemetry())
-            mpi.flush_async()
-            step += 1
-        mpi.flush()
-        chan.call("finish", rank, pickle.dumps(state))
-        # keep serving the checkpoint FSM until every rank is done: one
-        # replied ping per poll refreshes phase + all_finished together
-        # (a finished rank idles at ~200 RPC/s, not a busy loop)
-        while not coord.all_finished():
-            coord.check_aborted()
-            mig_round = coord.mig_round
-            if (mig_round and mig_done < mig_round
-                    and coord.phase == PHASE_RUN):
-                # a finished rank still streams its (now static) state —
-                # rounds need every rank's entry to complete
-                mig_done = mig_round
-                _child_stream_round(chan, coord, mpi, state, step,
-                                    mig_round, mig_digests)
-            if coord.phase in (PHASE_PENDING, PHASE_DRAIN):
-                mpi.step_idx = step
-                agreed = coord.propose_ckpt_step(rank, step)
-                mpi._proposed_gen = coord.ckpt_round
-                if agreed is not None and step >= agreed:
-                    if _child_checkpoint(job, chan, coord, mpi, state, step):
-                        code = 0
-                        return
-                    continue
-            time.sleep(0.005)
-            chan.refresh()
+            host.trace("restore", step)
+        status, state = rankloop.run_rank(host, mpi, state, step, n_steps)
+        if status in ("exit", "migrated") and not host.reported_finish:
+            # exit/migrated out of the STEP loop: the parent has no final
+            # state for this rank yet (the serve-loop variants already
+            # reported theirs through "finish")
+            chan.call("ckpt_exit", rank, pickle.dumps(state))
+        try:
+            chan.call("trace", rank, host.events)
+        except Exception:
+            pass               # trace shipping is best-effort diagnostics
         code = 0
     except BaseException as e:  # noqa: BLE001 - shipped to the launcher
         print(f"[procworld] rank {rank} failed: {type(e).__name__}: {e}")
@@ -935,61 +1043,3 @@ def _child_stream_round(chan: SocketChannel, coord: CoordClient, mpi,
                        generation=mpi.generation)
 
 
-def _child_checkpoint(job, chan: SocketChannel, coord: CoordClient, mpi,
-                      state, step: int):
-    """Flush -> drain -> snapshot -> resume/exit, with the CHILD writing
-    its own rank image into the shared chunk store and the parent
-    committing the manifest.  Truthy when this child should exit: True
-    (checkpoint with resume=False) or "migrated" (migration final — a
-    hot-joined replacement process takes over this rank)."""
-    mpi.flush()
-    while coord.phase == PHASE_DRAIN:
-        coord.check_aborted()
-        pumped = mpi._pump_all()
-        coord.ack_drained(mpi.rank, generation=mpi.generation)
-        coord.drain_complete()
-        if not pumped:
-            time.sleep(0.0002)
-    assert chan.is_empty(), \
-        f"rank {mpi.rank}: proxy channel not empty at snapshot"
-    if chan.ring is not None:
-        # ring half of the invariant: Σsent == Σreceived counts envelopes
-        # AFTER descriptor resolution, so a drained network implies every
-        # ring slot was read back and freed — no checkpoint can capture a
-        # dangling descriptor
-        n_live = chan.ring.in_flight()
-        assert n_live == 0, \
-            f"rank {mpi.rank}: {n_live} ring slot(s) in flight at snapshot"
-    coord.note_empty_channel(mpi.rank)
-    chan.call("stats_add", "drained_messages", len(mpi.cache))
-    ckpt_dir, store_spec = chan.call("ckpt_info")
-    # migration final (DESIGN.md §13): save the app payload leaf-split so
-    # every leaf pre-copy already streamed is a store reference and the
-    # stop-the-world window ships only the final dirty delta.  The
-    # ckpt_info reply just refreshed coord_state, so the cached
-    # mig_final_ranks is current.
-    mig_ranks = coord.mig_final_ranks
-    leaves = migration.split_state(state) if mig_ranks is not None else None
-    image = RankImage(rank=mpi.rank, n_ranks=job.n, step_idx=step,
-                      mpi_state=mpi.snapshot(),
-                      app_state=(b"" if leaves is not None
-                                 else pickle.dumps(state)))
-    entry = save_rank_image(Path(ckpt_dir), image,
-                            store=_child_store(store_spec),
-                            app_leaves=leaves)
-    chan.call("ckpt_entry", mpi.rank, entry, step)
-    # leaver decision BEFORE the ack (same race as the thread world): the
-    # join barrier cannot complete before this rank acks, so the cached
-    # mig_final_ranks cannot have been cleared yet
-    leaver = mig_ranks is not None and mpi.rank in mig_ranks
-    coord.ack_snapshot(mpi.rank, generation=mpi.generation)
-    if leaver:
-        return "migrated"
-    phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT, PHASE_JOIN)
-    if phase == PHASE_JOIN:          # survivor parked at the join barrier
-        phase = coord.wait_phase_alive(PHASE_RESUME, PHASE_EXIT)
-    if phase == PHASE_EXIT:
-        return True
-    coord.resume_running(mpi.rank)
-    coord.wait_phase_alive(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
-    return False

@@ -33,10 +33,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 from repro.checkpoint import chunkstore
 from repro.checkpoint.chunkstore import ChunkStoreBackend
+from repro.core import rankloop
+from repro.core import recovery as _recovery
 from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
                                       save_rank_image)
+from repro.core.dataplane import ContributionLedger, RingRef
 from repro.core import migrate as migration
 from repro.core.coordinator import (Coordinator, JobAborted, Membership,
                                     PHASE_DRAIN, PHASE_EXIT, PHASE_JOIN,
@@ -44,7 +47,92 @@ from repro.core.coordinator import (Coordinator, JobAborted, Membership,
                                     PHASE_SNAPSHOT)
 from repro.core.proxy import MPIProxy, ProxyChannel
 from repro.core.transport import make_transport
+from repro.core.tunables import LEDGER_ENABLED
 from repro.core.virtualization import make_rank_map
+
+
+class _ThreadRankHost(rankloop.RankHost):
+    """Thread-world substrate adapter: the unified rank loop
+    (core/rankloop.py) talking to the in-process MPIJob."""
+
+    def __init__(self, job: "MPIJob", rank: int):
+        super().__init__(job.step_fn)
+        self.job = job
+        self.rank = rank
+        self.mig_done = job._mig_rounds_done.get(rank, 0)
+
+    def tick(self, mpi) -> None:
+        self.job.heartbeat.ping(self.rank)   # arm before a maybe-long step
+
+    def trigger_step(self, coord):
+        # under the fire lock: a reader arriving mid-fire blocks until the
+        # phase flip is visible instead of slipping past the boundary on a
+        # (trigger popped, phase still RUN) transient
+        with self.job._ckpt_lock:
+            trig = self.job._trigger
+        return trig[0] if trig is not None else None
+
+    def fire_trigger(self, mpi) -> None:
+        # first rank to reach the trigger step fires it (a rank-0-only
+        # trigger lets other ranks race past the boundary before the
+        # request ever goes out).  The whole pop + request runs UNDER the
+        # lock: a peer that lost the pop race blocks here until the phase
+        # flip is visible, so no rank can slip past the agreed boundary
+        # into the next step — the agreement is deterministic (and the
+        # FSM traces with it)
+        with self.job._ckpt_lock:
+            trig, self.job._trigger = self.job._trigger, None
+            if trig is not None:
+                try:
+                    self.job.checkpoint(trig[1], resume=trig[2])
+                except RuntimeError:
+                    # lost the race with a recovery epoch opening: re-arm
+                    # so the first post-recovery boundary fires it instead
+                    self.job._trigger = trig
+
+    def stream_round(self, mpi, state, step: int, round_no: int) -> None:
+        self.job._stream_round(self.rank, state, step, round_no)
+
+    def record_step(self, mpi, wall: float, compute: float) -> None:
+        # step-boundary liveness: push buffered fire-and-forget sends so
+        # peers blocked in Recv can see them (no round trip)
+        mpi.flush_async()
+        self.job.heartbeat.ping(self.rank)
+        self.job.stragglers.record(self.rank, wall, compute=compute)
+        self.job.coord.report_telemetry(self.rank, mpi.telemetry(),
+                                        generation=mpi.generation)
+
+    def assert_empty(self, mpi) -> None:
+        assert mpi.channel.is_empty(), \
+            f"rank {self.rank}: proxy channel not empty at snapshot"
+
+    def drained_stat(self, mpi) -> None:
+        self.job.coord.stat_add("drained_messages", len(mpi.cache))
+
+    def save_image(self, mpi, state, step: int) -> bool:
+        job = self.job
+        coord = job.coord
+        # a migration final saves the app payload leaf-split: every leaf
+        # pre-copy already streamed is a store reference, so the
+        # stop-the-world window ships only the final dirty delta
+        mig = coord.migrating
+        leaves = migration.split_state(state) if mig else None
+        image = RankImage(rank=self.rank, n_ranks=job.n, step_idx=step,
+                          mpi_state=mpi.snapshot(),
+                          app_state=(b"" if leaves is not None
+                                     else pickle.dumps(state)))
+        entry = save_rank_image(job._ckpt_dir, image,
+                                store=job._ckpt_chunks, app_leaves=leaves)
+        job._commit_rank_entry(self.rank, entry, step)
+        return bool(mig and self.rank in coord.join_expected)
+
+    def wait_phase_alive(self, mpi, *phases: str) -> str:
+        return self.job._wait_phase_alive(self.rank, *phases)
+
+    def finish(self, mpi, state) -> None:
+        self.job.states[self.rank] = state
+        self.job.results[self.rank] = state
+        self.job.coord.mark_finished(self.rank)
 
 
 class MPIJob:
@@ -126,177 +214,68 @@ class MPIJob:
                                               StragglerTracker)
         self.heartbeat = HeartbeatMonitor(n_ranks, timeout_s=heartbeat_timeout)
         self.stragglers = StragglerTracker(n_ranks)
+        #: retained-send-buffer ledger for mid-collective recovery
+        #: (DESIGN.md §14): every rank pins its input to the in-flight
+        #: collective here; the parent replays a dead rank's step from it.
+        #: In the process world children ship contributions over their
+        #: endpoint sockets into this same parent-side instance.
+        self.ledger = (ContributionLedger(n_ranks)
+                       if LEDGER_ENABLED else None)
+        #: per-rank FSM traces from the unified rank loop (parity suite)
+        self._fsm_traces: Dict[int, list] = {}
         # blocked-but-alive ranks keep the heartbeat beating (a rank parked
         # in Recv is NOT dead; one whose thread died stops pinging at once)
         for r, m in enumerate(self.mpis):
             m._on_idle = (lambda rr=r: self.heartbeat.ping(rr))
+            m.ledger = self.ledger
 
     # ------------------------------------------------------------------ run
     def _rank_main(self, rank: int, n_steps: int) -> None:
+        """Thin thread wrapper over the unified rank loop
+        (rankloop.run_rank): init-or-restore, run, record the outcome."""
         mpi = self.mpis[rank]
+        host = _ThreadRankHost(self, rank)
         try:
             if self._restored or rank in self._resume_ranks:
                 state = self.states[rank]
+                host.trace("restore", self.start_steps[rank])
             else:
                 mpi.Init()
                 state = self.init_fn(mpi)
+                host.trace("init")
             # run() semantics are absolute: run(N) executes steps [start, N)
-            step = self.start_steps[rank]
-            end = n_steps
-            while step < end:
-                self.coord.check_aborted()
-                self.heartbeat.ping(rank)    # arm before a (maybe long) step
-                mpi.step_idx = step
-                trig = self._trigger
-                if (trig is not None and step >= trig[0]
-                        and self.coord.phase == PHASE_RUN):
-                    # first rank to reach the trigger step fires it (a
-                    # rank-0-only trigger lets other ranks race past the
-                    # boundary before the request ever goes out)
-                    with self._ckpt_lock:
-                        trig, self._trigger = self._trigger, None
-                    if trig is not None:
-                        self.checkpoint(trig[1], resume=trig[2])
-                # pre-copy streaming (DESIGN.md §13): a new migration
-                # round opened — ship this rank's dirty leaves at the step
-                # boundary and keep computing (no drain, no pause)
-                mig_round = self.coord.mig_round
-                if (mig_round
-                        and self._mig_rounds_done.get(rank, 0) < mig_round
-                        and self.coord.phase == PHASE_RUN):
-                    self._stream_round(rank, state, step, mig_round)
-                phase = self.coord.phase
-                if phase in (PHASE_PENDING, PHASE_DRAIN):
-                    agreed = self.coord.propose_ckpt_step(rank, step)
-                    mpi._proposed_gen = self.coord.ckpt_round
-                    if agreed is not None and step >= agreed:
-                        res = self._do_checkpoint(rank, mpi, state, step)
-                        if res:
-                            if res == "exit":
-                                self.states[rank] = state
-                            # "migrated": the replacement thread owns
-                            # states[rank] now — do not clobber it
-                            return
-                        continue
-                    if agreed is None:
-                        # wait for agreement; serve nothing (at boundary)
-                        time.sleep(0.0002)
-                        continue
-                w0 = mpi.wait_us_total()
-                t_step = time.time()
-                state = self.step_fn(mpi, state, step)
-                # step-boundary liveness: push buffered fire-and-forget
-                # sends so peers blocked in Recv can see them (no round trip)
-                mpi.flush_async()
-                self.heartbeat.ping(rank)
-                wall = time.time() - t_step
-                # compute/wait split: wall minus time blocked on the
-                # transport this step — under per-step collectives the wall
-                # clocks collapse to the slowest rank, the compute split
-                # does not (DESIGN.md §12)
-                compute = max(wall - (mpi.wait_us_total() - w0) / 1e6, 0.0)
-                self.stragglers.record(rank, wall, compute=compute)
-                self.coord.report_telemetry(rank, mpi.telemetry(),
-                                            generation=mpi.generation)
-                step += 1
-            mpi.flush()      # surface deferred send errors; empty the channel
-            self.states[rank] = state
-            self.results[rank] = state
-            # keep serving the checkpoint FSM until every rank is done —
-            # an async checkpoint may land while peers are still running
-            self.coord.mark_finished(rank)
-            while not self.coord.all_finished():
-                self.coord.check_aborted()
-                self.heartbeat.ping(rank)    # alive while serving the FSM
-                mig_round = self.coord.mig_round
-                if (mig_round
-                        and self._mig_rounds_done.get(rank, 0) < mig_round
-                        and self.coord.phase == PHASE_RUN):
-                    # a finished rank still streams its (now static) state
-                    # — rounds need every rank's entry to complete
-                    self._stream_round(rank, state, step, mig_round)
-                if self.coord.phase in (PHASE_PENDING, PHASE_DRAIN):
-                    mpi.step_idx = step
-                    agreed = self.coord.propose_ckpt_step(rank, step)
-                    mpi._proposed_gen = self.coord.ckpt_round
-                    if agreed is not None and step >= agreed:
-                        if self._do_checkpoint(rank, mpi, state, step):
-                            return
-                        continue
-                time.sleep(0.0005)
+            status, state = rankloop.run_rank(
+                host, mpi, state, self.start_steps[rank], n_steps)
+            if status == "exit":
+                self.states[rank] = state
+            # "migrated": the replacement thread owns states[rank] now —
+            # do not clobber it; "done" already stored via host.finish
         except BaseException as e:  # noqa: BLE001 - surfaced to driver
             with self._err_lock:
                 self.errors[rank] = e
             raise
-
-    def _do_checkpoint(self, rank: int, mpi: MPI, state: Any,
-                       step: int):
-        """Flush -> drain -> snapshot -> resume/exit.  Returns a truthy
-        reason when this rank's thread should end: "exit" (checkpoint
-        with resume=False) or "migrated" (migration final — a hot-joined
-        replacement thread takes over this rank)."""
-        coord = self.coord
-        # flush in-flight batches FIRST: every fire-and-forget send this
-        # rank issued is on the transport and its exact counters are at the
-        # coordinator before the rank acks drained (DESIGN.md §5)
-        mpi.flush()
-        while coord.phase == PHASE_DRAIN:
-            coord.check_aborted()
-            self.heartbeat.ping(rank)    # draining is alive, not dead
-            pumped = mpi._pump_all()
-            coord.ack_drained(rank, generation=mpi.generation)
-            coord.drain_complete()
-            if not pumped:
-                time.sleep(0.0002)
-        # the channel-empty-at-snapshot invariant: nothing buffered in the
-        # plugin, nothing queued to or from the proxy
-        assert mpi.channel.is_empty(), \
-            f"rank {rank}: proxy channel not empty at snapshot"
-        coord.note_empty_channel(rank)
-        # messages that crossed the checkpoint boundary (restored from cache)
-        coord.stat_add("drained_messages", len(mpi.cache))
-        # SNAPSHOT — a migration final saves the app payload leaf-split:
-        # every leaf pre-copy already streamed is a store reference, so
-        # the stop-the-world window ships only the final dirty delta
-        mig = coord.migrating
-        leaves = migration.split_state(state) if mig else None
-        image = RankImage(rank=rank, n_ranks=self.n, step_idx=step,
-                          mpi_state=mpi.snapshot(),
-                          app_state=(b"" if leaves is not None
-                                     else pickle.dumps(state)))
-        entry = save_rank_image(self._ckpt_dir, image,
-                                store=self._ckpt_chunks,
-                                app_leaves=leaves)
-        self._commit_rank_entry(rank, entry, step)
-        # leaver decision BEFORE the ack: join_expected/migrating are
-        # stable until the join barrier completes, which cannot happen
-        # before this rank acks — reading them after the ack races the
-        # replacement's hot_join clearing them
-        leaver = mig and rank in coord.join_expected
-        coord.ack_snapshot(rank, generation=mpi.generation)
-        if leaver:
-            return "migrated"
-        phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT,
-                                       PHASE_JOIN)
-        if phase == PHASE_JOIN:      # survivor parked at the join barrier
-            phase = self._wait_phase_alive(rank, PHASE_RESUME, PHASE_EXIT)
-        if phase == PHASE_EXIT:
-            return "exit"
-        coord.resume_running(rank)
-        self._wait_phase_alive(rank, PHASE_RUN, PHASE_PENDING, PHASE_DRAIN)
-        return False
+        finally:
+            with self._ckpt_lock:
+                self._fsm_traces.setdefault(rank, []).extend(host.events)
 
     def _commit_rank_entry(self, rank: int, entry: dict, step: int) -> None:
         """Record one rank's image entry; the LAST entry commits the
         manifest.  Shared by the thread world (rank threads land here
         directly) and the process world (children write their own images;
         their endpoints call this — agreement and the commit stay with the
-        parent, DESIGN.md §10)."""
+        parent, DESIGN.md §10).  After a mid-collective recovery the world
+        is SPARSE (dead world ranks removed, survivors not renumbered):
+        the manifest commits on the LIVE count and records the holes so a
+        later restart can compact over them."""
         with self._ckpt_lock:
             self._ckpt_meta[rank] = entry
-            if len(self._ckpt_meta) == self.n:
+            live = self.coord.live_set
+            if len(self._ckpt_meta) == len(live):
                 meta = {"transport": self.transport_name, "step": step,
                         "world_size": self.n}
+                if len(live) < self.n:
+                    meta["recovered_dead_ranks"] = sorted(
+                        set(range(self.n)) - live)
                 if self.restore_info is not None:
                     meta["elastic"] = self.restore_info
                 root = getattr(self._ckpt_chunks, "root", None)
@@ -344,8 +323,15 @@ class MPIJob:
             if t.is_alive():
                 raise TimeoutError(f"{t.name} did not finish")
         if self.errors:
-            rank, err = next(iter(self.errors.items()))
-            raise RuntimeError(f"rank {rank} failed: {err!r}") from err
+            # a rank recovered mid-collective is gone from the live set by
+            # the time the survivors can finish (finalize runs inside the
+            # last resume poll) — its death is an absorbed fault, not a
+            # job failure, even if recover() hasn't popped the record yet
+            live = self.coord.live_set
+            fatal = [(r, e) for r, e in self.errors.items() if r in live]
+            if fatal:
+                rank, err = fatal[0]
+                raise RuntimeError(f"rank {rank} failed: {err!r}") from err
         return self.results
 
     # ------------------------------------------------------------ checkpoint
@@ -384,7 +370,7 @@ class MPIJob:
         deadline = time.time() + timeout
         while time.time() < deadline:
             with self._ckpt_lock:
-                if len(self._ckpt_meta) == self.n:
+                if len(self._ckpt_meta) >= len(self.coord.live_set):
                     return
             time.sleep(0.001)
         raise TimeoutError("checkpoint did not complete")
@@ -606,6 +592,73 @@ class MPIJob:
         heartbeat flags a dead rank (seconds, not Recv-timeout minutes)."""
         self.coord.abort(reason)
 
+    # ------------------------------------------- mid-collective recovery
+    def recover(self, dead: Sequence[int], timeout: float = 10.0) -> dict:
+        """Survivor-only mid-collective recovery (DESIGN.md §14): finish
+        the in-flight step over the live ranks and keep THIS world
+        running — no generation bump, no restart, zero recomputation.
+
+        Opens a recovery epoch at the coordinator (raises
+        RecoveryUnavailable if the failure is not recoverable: wrong
+        phase, multi-failure, or the dead rank left no pinned
+        contribution in the ledger), then waits for every survivor to
+        enlist, quiesce, patch its world tables and resume.  On success
+        the dead rank's transport/heartbeat/error bookkeeping is cleared
+        and the epoch report is returned; on timeout the epoch is
+        cancelled and RecoveryFailed is raised — the caller falls back to
+        the classic bump→abort→reshaped-restart."""
+        dead = tuple(sorted({int(r) for r in dead}))
+        token = self.coord.begin_recovery(dead, self.ledger)
+        deadline = time.time() + timeout
+        while True:
+            st = self.coord.recovery_status(token)
+            if st is not None:
+                break
+            # drain the dead ranks' transport inboxes: envelopes addressed
+            # to a corpse must not linger as phantom in-flight traffic —
+            # and in a shmring world their RingRef descriptors must be
+            # read out, or the dead rank's unclaimed slots would trip the
+            # ring.in_flight()==0 invariant at the next checkpoint
+            ring = self._proc.ring if self._proc is not None else None
+            for r in dead:
+                try:
+                    for env in self.transport.poll_all(r):
+                        if ring is not None and isinstance(
+                                getattr(env, "payload", None), RingRef):
+                            ring.read(env.payload)
+                except Exception:
+                    pass
+            if time.time() > deadline:
+                self.coord.cancel_recovery(token, "timeout")
+                raise _recovery.RecoveryFailed(
+                    f"recovery of ranks {list(dead)} timed out "
+                    f"after {timeout:g}s")
+            time.sleep(0.002)
+        if not st.get("ok"):
+            raise _recovery.RecoveryFailed(
+                st.get("error") or "recovery cancelled")
+        # parent bookkeeping: the dead rank is no longer a member — stop
+        # monitoring it, forget its error, and (process world) mark its
+        # corpse reaped so wait() does not re-record the kill as a fault
+        for r in dead:
+            if self._proc is not None:
+                with self._proc._lock:
+                    self._proc._done.add(r)
+            self.heartbeat.remove(r)
+            self.stragglers.forget(r)
+            with self._err_lock:
+                self.errors.pop(r, None)
+        st = dict(st)
+        st["dead"] = list(dead)
+        return st
+
+    def fsm_trace(self, rank: int) -> list:
+        """The rank's lifecycle trace from the unified loop (one tuple per
+        event) — the cross-substrate parity suite asserts thread and
+        process worlds produce identical traces for the same program."""
+        with self._ckpt_lock:
+            return list(self._fsm_traces.get(rank, []))
+
     def stats(self) -> dict:
         """Operator-facing job statistics (DESIGN.md §12): coordinator FSM
         counters, the per-generation data-plane telemetry aggregate
@@ -614,10 +667,13 @@ class MPIJob:
         return {
             "transport": self.transport_name,
             "world_size": self.n,
+            "live_ranks": sorted(self.coord.live_set),
             "generation": self.coord.generation,
             "coordinator": dict(self.coord.stats),
             "telemetry": self.coord.telemetry_summary(),
             "stragglers": self.stragglers.report(),
+            "ledger": (self.ledger.snapshot_stats()
+                       if self.ledger is not None else None),
         }
 
     def rank_pids(self) -> Dict[int, int]:
@@ -678,8 +734,15 @@ class MPIJob:
         next checkpoint manifest this job writes."""
         ckpt_dir = Path(ckpt_dir)
         man = load_manifest(ckpt_dir)
-        old_n = man["n_ranks"]
-        dead = tuple(sorted({int(r) for r in dead_ranks}))
+        man_meta = man.get("meta", {})
+        # a checkpoint taken AFTER a mid-collective recovery is sparse:
+        # the manifest's n_ranks counts live entries only, world_size the
+        # original shape, and recovered_dead_ranks the holes — fold them
+        # into dead_ranks so the reshape map compacts over both
+        old_n = int(man_meta.get("world_size", man["n_ranks"]))
+        dead = tuple(sorted({int(r) for r in dead_ranks}
+                            | {int(r) for r in
+                               man_meta.get("recovered_dead_ranks", ())}))
         bad = [r for r in dead if not 0 <= r < old_n]
         if bad:
             raise ValueError(f"dead_ranks {bad} outside world of {old_n}")

@@ -1,0 +1,73 @@
+"""One shared location for env-tunable size knobs (DESIGN.md §14.6).
+
+Before PR 8 two UNRELATED crossover constants shared one name: the
+Allreduce ring/tree algorithm crossover was hardcoded in ``core/api.py``
+(``RING_MIN_BYTES = 1 << 23``) while the shm tensor-ring inline/ring
+payload crossover in ``core/dataplane.py`` read ``REPRO_RING_MIN_BYTES``
+(default ``1 << 18``) — so setting the env var silently tuned only the
+data plane and the collective algorithm knob was not tunable at all.
+They are different knobs for different layers and now each has its own
+env var here, with the old name kept as a documented alias for the knob
+it actually controlled:
+
+  REPRO_ALLREDUCE_RING_MIN_BYTES   Allreduce crossover: ndarray payloads
+                                   at least this large use the ring
+                                   (bandwidth-optimal reduce-scatter +
+                                   allgather), smaller ones the binomial
+                                   tree (latency-optimal).  Default 8 MiB
+                                   — all ranks share one GIL here so
+                                   serialization is effectively a shared
+                                   resource; real clusters set this far
+                                   lower.
+  REPRO_SHMRING_MIN_BYTES          shm tensor-ring crossover: proc-world
+                                   payloads at least this large park in
+                                   the shared-memory ring and the frame
+                                   carries a descriptor; smaller ones
+                                   ship inline.  Default 256 KiB.
+                                   REPRO_RING_MIN_BYTES is an accepted
+                                   alias (its pre-PR-8 meaning).
+  REPRO_LEDGER                     "0" disables the ContributionLedger
+                                   (collective inputs are not pinned;
+                                   mid-collective recovery always falls
+                                   back to rollback-restart).
+  REPRO_LEDGER_OPS                 max in-flight collective ops pinned
+                                   per job (default 4; oldest evicted).
+  REPRO_CHUNK_RETRIES              RemoteChunkStore connection-layer
+                                   retry budget per request (default 4
+                                   attempts total); every chunk-service
+                                   command is idempotent, so a torn
+                                   socket is safely re-dialed and
+                                   replayed.
+  REPRO_CHUNK_RETRY_BASE_S         first-retry backoff (default 0.05 s);
+                                   doubles per attempt, ±50% jitter so a
+                                   fleet of ranks doesn't re-dial a
+                                   restarting server in lockstep.
+"""
+from __future__ import annotations
+
+import os
+
+
+def env_bytes(name: str, default: int, aliases: tuple = ()) -> int:
+    """Read a byte-count knob from the environment, first name wins."""
+    for key in (name,) + tuple(aliases):
+        raw = os.environ.get(key)
+        if raw is not None:
+            return int(raw)
+    return default
+
+
+#: Allreduce ring/tree algorithm crossover (core/api.py)
+ALLREDUCE_RING_MIN_BYTES = env_bytes("REPRO_ALLREDUCE_RING_MIN_BYTES", 1 << 23)
+
+#: shm tensor-ring inline/ring payload crossover (core/dataplane.py)
+SHMRING_MIN_BYTES = env_bytes("REPRO_SHMRING_MIN_BYTES", 1 << 18,
+                              aliases=("REPRO_RING_MIN_BYTES",))
+
+#: mid-collective recovery ledger (core/dataplane.py ContributionLedger)
+LEDGER_ENABLED = os.environ.get("REPRO_LEDGER", "1") != "0"
+LEDGER_MAX_OPS = int(os.environ.get("REPRO_LEDGER_OPS", 4))
+
+#: RemoteChunkStore reconnect policy (checkpoint/chunkservice.py)
+CHUNK_RETRIES = int(os.environ.get("REPRO_CHUNK_RETRIES", 4))
+CHUNK_RETRY_BASE_S = float(os.environ.get("REPRO_CHUNK_RETRY_BASE_S", 0.05))

@@ -158,6 +158,22 @@ class VirtualIds:
             raise ValueError("cannot free MPI_COMM_WORLD")
         self.comms.pop(vid, None)
 
+    def shrink_world(self, dead: Set[int]) -> None:
+        """In-place world shrink (mid-collective recovery, DESIGN.md §14):
+        drop `dead` from every communicator and group WITHOUT renumbering
+        the survivors — world-rank ids stay sparse, comm ranks compact
+        naturally through ``rank_of``.  (Contrast with the restart-time
+        ``remap_vids_snapshot``, which compacts world ranks densely.)"""
+        dead = set(dead)
+        for vid, c in list(self.comms.items()):
+            if set(c.ranks) & dead:
+                self.comms[vid] = CommInfo(
+                    vid, tuple(r for r in c.ranks if r not in dead))
+        for vid, g in list(self.groups.items()):
+            if set(g.ranks) & dead:
+                self.groups[vid] = GroupInfo(
+                    vid, tuple(r for r in g.ranks if r not in dead))
+
     def free_group(self, vid: int) -> None:
         self.groups.pop(vid, None)
 

@@ -138,6 +138,13 @@ class StragglerTracker:
             med = float(np.median(list(self.dur.values())))
             return [r for r, d in self.dur.items() if d > self.factor * med]
 
+    def forget(self, rank: int) -> None:
+        """Drop a rank's series (it left the world — recovery or
+        migration); a stale EWMA must not skew the median for survivors."""
+        with self._lock:
+            self.dur.pop(rank, None)
+            self.comp.pop(rank, None)
+
     def report(self) -> Dict[int, dict]:
         """Per-rank wall/compute/wait EWMAs (seconds) for operator surfaces
         (MPIJob.stats(), the driver's ``wait:`` events)."""
@@ -189,7 +196,11 @@ class FaultTolerantDriver:
                  min_world_size: int = 1,
                  monitor_poll_s: float = 0.02,
                  membership: Optional[Membership] = None,
-                 straggler_windows: int = 0):
+                 straggler_windows: int = 0,
+                 recovery: bool = True,
+                 recovery_timeout_s: float = 10.0,
+                 recovery_backoff_s: float = 5.0,
+                 migrate_windows: int = 0):
         self.job_factory = job_factory
         self.restart_factory = restart_factory
         self.ckpt_root = Path(ckpt_root)
@@ -204,7 +215,27 @@ class FaultTolerantDriver:
         #: the next checkpoint boundary — checkpoint now, then treat it
         #: like a death (bump -> abort -> reshaped restart without it)
         self.straggler_windows = straggler_windows
+        #: mid-collective recovery policy (DESIGN.md §14): when a single
+        #: rank dies, FIRST try job.recover() — finish the in-flight step
+        #: over the survivors, same generation, same incarnation.  Only a
+        #: failed/ineligible recovery takes the classic
+        #: bump → abort → reshaped-restart ladder below.
+        self.recovery = recovery
+        self.recovery_timeout_s = recovery_timeout_s
+        #: after a failed recovery attempt, don't re-attempt for
+        #: backoff * 2^(consecutive_failures - 1) seconds — a world whose
+        #: failures keep being unrecoverable goes straight to restart
+        self.recovery_backoff_s = recovery_backoff_s
+        #: auto-migration (opt-in, DESIGN.md §13): a rank flagged slow for
+        #: this many CONSECUTIVE monitor polls is live-migrated
+        #: (job.migrate — pre-copy rounds, bounded pause, same
+        #: incarnation) instead of waiting for the exclusion ladder
+        self.migrate_windows = migrate_windows
         self.events: List[str] = []
+        #: per-recovery reports ({"dead", "wall_s", "completed_ops", ...})
+        self.recoveries: List[dict] = []
+        self._rec_failures = 0
+        self._rec_block_until = 0.0
         self._elastic_jobs = (
             len(inspect.signature(job_factory).parameters) >= 2)
         self._elastic_restarts = (
@@ -295,8 +326,8 @@ class FaultTolerantDriver:
         self.events.append(f"{kind}:{list(observed)}:gen={gen}")
         return dead
 
-    def _confirmed_stragglers(self, job, counts: Dict[int, int]
-                              ) -> Tuple[int, ...]:
+    def _confirmed_stragglers(self, job, counts: Dict[int, int],
+                              windows: int) -> Tuple[int, ...]:
         """Update per-rank consecutive-flag counts from the tracker and
         return ranks past the threshold (never so many that the world
         would shrink below min_world_size)."""
@@ -306,11 +337,57 @@ class FaultTolerantDriver:
                 del counts[r]            # consecutive means consecutive
         for r in flagged:
             counts[r] = counts.get(r, 0) + 1
-        slow = sorted(r for r, c in counts.items()
-                      if c >= self.straggler_windows)
+        slow = sorted(r for r, c in counts.items() if c >= windows)
         while slow and job.n - len(slow) < self.min_world_size:
             slow.pop()
         return tuple(slow)
+
+    def _try_recover(self, job, dead: Tuple[int, ...]) -> bool:
+        """Attempt survivor-only mid-collective recovery.  True: the world
+        is whole again (same incarnation, same generation) — keep
+        monitoring.  False: fall through to the restart ladder."""
+        if not self.recovery or not hasattr(job, "recover"):
+            return False
+        if time.monotonic() < self._rec_block_until:
+            self.events.append(f"fallback:{list(dead)}:backoff")
+            return False
+        try:
+            rep = job.recover(dead, timeout=self.recovery_timeout_s)
+        except Exception as e:  # noqa: BLE001 - any failure falls back
+            self._rec_failures += 1
+            self._rec_block_until = time.monotonic() + \
+                self.recovery_backoff_s * 2 ** (self._rec_failures - 1)
+            self.events.append(
+                f"fallback:{list(dead)}:{type(e).__name__}:{e}")
+            return False
+        self._rec_failures = 0
+        self._rec_block_until = 0.0
+        self.recoveries.append(rep)
+        self.events.append(
+            f"recover:{rep['dead']}:wall_s={rep['wall_s']:.4f}"
+            f":completed={rep['completed_ops']}:rerun={rep['rerun_ops']}")
+        return True
+
+    def _auto_migrate(self, job, slow: Tuple[int, ...]) -> None:
+        """Live-migrate confirmed-slow ranks (pre-copy rounds while the
+        world runs, pause bounded by the final dirty delta).  Blocks the
+        monitor thread for the migration — dead-rank detection resumes at
+        the next poll; a death DURING the migration surfaces through the
+        normal error/heartbeat channels and aborts this incarnation."""
+        gen = self.membership.generation if self.membership else 0
+        ck = self.ckpt_root / f"mig_g{gen:04d}_{len(self.events)}"
+        try:
+            rep = job.migrate(ck, ranks=list(slow))
+        except Exception as e:  # noqa: BLE001 - migration is best-effort
+            self.events.append(
+                f"migrate-failed:{list(slow)}:{type(e).__name__}")
+            return
+        for r in slow:
+            job.stragglers.forget(r)
+        self.events.append(
+            f"migrate:{list(slow)}:pause_s={rep['pause_s']:.4f}"
+            f":rounds={len(rep['rounds'])}"
+            f":final_fraction={rep['final_fraction']:.4f}")
 
     def _exclude_stragglers(self, job, slow: Tuple[int, ...]) -> bool:
         """The 'next checkpoint boundary' half of the straggler policy:
@@ -380,11 +457,23 @@ class FaultTolerantDriver:
             dead: Tuple[int, ...] = ()
             dying_gen = self.membership.generation
             strag_counts: Dict[int, int] = {}
+            mig_counts: Dict[int, int] = {}
+            migrated: set = set()       # at most one migration per rank
             deadline = time.monotonic() + timeout
             while t.is_alive():
                 dead = self._detect_dead(job)
+                if not dead and self.migrate_windows:
+                    slow = tuple(
+                        r for r in self._confirmed_stragglers(
+                            job, mig_counts, self.migrate_windows)
+                        if r not in migrated)
+                    if slow:
+                        migrated |= set(slow)
+                        self._auto_migrate(job, slow)
+                        continue
                 if not dead and self.straggler_windows:
-                    slow = self._confirmed_stragglers(job, strag_counts)
+                    slow = self._confirmed_stragglers(
+                        job, strag_counts, self.straggler_windows)
                     if slow and self._exclude_stragglers(job, slow):
                         # wait-time attribution record per excluded rank:
                         # the telemetry evidence (compute vs wall) that
@@ -412,6 +501,11 @@ class FaultTolerantDriver:
                     dead = self._detect_dead(job)
                     if not dead:
                         continue    # transient blip: the rank recovered
+                    if self._try_recover(job, dead):
+                        # the step finished over the survivors; this
+                        # incarnation keeps running — no bump, no restart
+                        dead = ()
+                        continue
                     dead = self._declare_dead(job, dead)
                     job.abort(f"dead ranks declared "
                               f"(generation {self.membership.generation})")

@@ -1,0 +1,335 @@
+"""Mid-collective recovery (DESIGN.md §14): survive the step.
+
+Covers the acceptance scenario of the MANA-style recovery work: SIGKILL
+(process world) or an injected mid-dance death (thread world) of ONE rank
+inside a ring allreduce completes the in-flight step over the survivors —
+zero recomputation, no generation bump, bit-identical to the unfaulted
+control — with the classic bump→abort→reshaped-restart demoted to the
+fallback (exercised here via a deliberate ledger miss).  Also: the
+bit-exact replay primitives against the real wire dance, the
+cross-substrate FSM parity suite over the unified rank loop, a
+post-recovery sparse-manifest checkpoint restarting cleanly, and the
+driver's opt-in auto-migration of a confirmed straggler.
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from conftest import exact_transports
+
+from repro.core import MPIJob
+from repro.core import recovery as _recovery
+from repro.core.ckpt_protocol import checkpoint_valid, load_manifest
+from repro.core.coordinator import Membership
+from repro.distributed.faults import FaultTolerantDriver, RankKilled
+
+N = 3
+STEPS = 6
+VICTIM = 1
+KILL_STEP = STEPS - 1      # die inside the LAST step's allreduce: the
+# recovered step is the final state, so survivor results are directly
+# comparable bit-for-bit against an unfaulted N-rank control
+
+
+def _acc_app(n_elems: int = 64, algo: str = "ring"):
+    """Deterministic accumulator: each step allreduces a per-(seed, step)
+    random array and accumulates.  The seed lives in STATE (stamped from
+    the rank at init), so a restart that renumbers world ranks keeps
+    producing the same per-member data — bit-identity survives reshaping."""
+    def init(mpi):
+        return {"seed": mpi.rank, "acc": np.zeros(n_elems), "steps_run": 0}
+
+    def step(mpi, st, k):
+        rng = np.random.default_rng(1000 * k + st["seed"])
+        x = rng.standard_normal(n_elems)
+        tot = mpi.Allreduce(x, op="sum", algo=algo)
+        return {"seed": st["seed"], "acc": st["acc"] + tot,
+                "steps_run": st["steps_run"] + 1}
+    return init, step
+
+
+def _arm_kill(where, boom):
+    """Wrap the accumulator step so VICTIM dies at ring hop `where` of
+    step KILL_STEP (generation 0 only).  `boom()` is the actual death."""
+    init, step = _acc_app()
+
+    def killer_step(mpi, st, k):
+        if mpi.rank == VICTIM and k == KILL_STEP and mpi.generation == 0:
+            def hook(phase, hop):
+                if (phase, hop) == where:
+                    boom()
+            mpi._hop_hook = hook
+        return step(mpi, st, k)
+    return init, killer_step
+
+
+@pytest.fixture(scope="module")
+def control():
+    """Unfaulted N-rank reference run (transport is irrelevant to the
+    math; shm is the cheapest)."""
+    init, step = _acc_app()
+    with exact_transports():
+        job = MPIJob(N, step, init, transport="shm")
+    out = job.run(STEPS, timeout=60)
+    job.stop()
+    return out
+
+
+# ------------------------------------------------------- bit-exact replay
+
+def _one_shot_allreduce(algo):
+    init, _ = _acc_app()
+
+    def step(mpi, st, k):
+        rng = np.random.default_rng(st["seed"])
+        x = rng.standard_normal(37)      # uneven chunks: 13/12/12
+        return {"x": x, "tot": mpi.Allreduce(x, op="sum", algo=algo)}
+    job = MPIJob(N, step, init)
+    out = job.run(1, timeout=60)
+    job.stop()
+    return out
+
+
+@pytest.mark.parametrize("algo,replay", [
+    ("ring", _recovery.replay_ring),
+    ("tree", _recovery.replay_tree),
+])
+def test_replay_matches_the_wire_dance_bit_for_bit(algo, replay):
+    """replay_ring/replay_tree reproduce the EXACT float association of
+    the wire algorithms — the recovered result of a centrally-finished op
+    is indistinguishable from the dance it replaces."""
+    out = _one_shot_allreduce(algo)
+    contribs = [out[r]["x"] for r in range(N)]
+    expect = replay(contribs, "sum")
+    for r in range(N):
+        got = out[r]["tot"]
+        assert np.array_equal(np.asarray(got).reshape(-1),
+                              np.asarray(expect).reshape(-1)), (algo, r)
+
+
+# ------------------------------------------------- cross-substrate parity
+
+def test_fsm_traces_identical_across_substrates(tmp_path):
+    """The unified rank loop emits one FSM trace per rank; for the same
+    program (deterministic checkpoint_at, no faults) the thread world and
+    the process world must produce IDENTICAL traces — the lifecycle is
+    one code path, not two lookalikes."""
+    init, step = _acc_app()
+    traces = {}
+    for tr in ("shm", "proc"):
+        with exact_transports():
+            job = MPIJob(N, step, init, transport=tr)
+        job.checkpoint_at(4, tmp_path / f"ck_{tr}")
+        out = job.run(STEPS, timeout=90)
+        job.stop()
+        assert all(out[r]["steps_run"] == STEPS for r in range(N))
+        traces[tr] = [job.fsm_trace(r) for r in range(N)]
+    expected = ([("init",)]
+                + [("step", k) for k in range(4)]
+                + [("ckpt", 4), ("resume", 4)]
+                + [("step", k) for k in range(4, STEPS)]
+                + [("finish", STEPS)])
+    for r in range(N):
+        assert traces["shm"][r] == traces["proc"][r] == expected, r
+
+
+# ------------------------------------------- survive the step (tentpole)
+
+def _legacy_driver(tmp_path, step_fn, init_fn, transport, **kw):
+    return FaultTolerantDriver(
+        job_factory=lambda: MPIJob(N, step_fn, init_fn, transport=transport,
+                                   heartbeat_timeout=5.0),
+        restart_factory=lambda d, tr: MPIJob.restart(
+            d, step_fn, init_fn, transport=tr),
+        ckpt_root=tmp_path / "ck", ckpt_every=100, **kw)
+
+
+def _assert_survived(driver, out, control):
+    """The common happy-path contract: the step finished over survivors in
+    the SAME incarnation — no bump, no restart, nothing recomputed, and
+    survivor results bit-identical to the unfaulted control."""
+    assert driver.events[-1] == "done"
+    assert any(e.startswith("recover:") for e in driver.events), driver.events
+    assert not any(e.startswith(("restart:", "dead:", "failure:"))
+                   for e in driver.events), driver.events
+    assert driver.membership.generation == 0
+    rep = driver.recoveries[0]
+    assert rep["dead"] == [VICTIM]
+    assert rep["rerun_ops"] == 0          # zero recomputation, ever
+    for r in range(N):
+        if r == VICTIM:
+            continue
+        assert out[r]["steps_run"] == STEPS          # no step ran twice
+        assert np.array_equal(out[r]["acc"], control[r]["acc"]), r
+
+
+@pytest.mark.parametrize("where", [("rs", 0), ("rs", 1), ("ag", 0),
+                                   ("ag", 1)])
+def test_thread_shm_kill_inside_allreduce_survives(tmp_path, control,
+                                                   where):
+    """Thread world, shm transport: the victim dies at every distinct ring
+    position — entering the reduce-scatter, mid-fold, entering the
+    allgather, and on its very last hop.  Every position recovers over the
+    survivors with the result bit-identical to the control."""
+    def boom():
+        raise RankKilled(f"injected at {where}")
+    init, step = _arm_kill(where, boom)
+    with exact_transports():
+        driver = _legacy_driver(tmp_path, step, init, "shm")
+        out = driver.run(STEPS, transport_after_failure="shm", timeout=60)
+    _assert_survived(driver, out, control)
+    if where[0] == "rs":
+        # mid-reduce the survivors are provably stuck in the op: it must
+        # have been finished centrally from the ledger
+        assert driver.recoveries[0]["completed_ops"] == 1
+
+
+def test_thread_tcp_kill_inside_allreduce_survives(tmp_path, control):
+    def boom():
+        raise RankKilled("injected at ('rs', 1)")
+    init, step = _arm_kill(("rs", 1), boom)
+    with exact_transports():
+        driver = _legacy_driver(tmp_path, step, init, "tcp")
+        out = driver.run(STEPS, transport_after_failure="tcp", timeout=60)
+    _assert_survived(driver, out, control)
+    assert driver.recoveries[0]["completed_ops"] == 1
+
+
+@pytest.mark.slow
+def test_proc_sigkill_inside_allreduce_survives(tmp_path, control):
+    """Process world: a REAL SIGKILL (no unwind, torn socket) mid-ring.
+    The endpoint records the death, the driver recovers the step over the
+    surviving processes, and the incarnation keeps running."""
+    def boom():
+        os.kill(os.getpid(), signal.SIGKILL)
+    init, step = _arm_kill(("rs", 1), boom)
+    driver = _legacy_driver(tmp_path, step, init, "proc")
+    out = driver.run(STEPS, transport_after_failure="proc", timeout=90)
+    _assert_survived(driver, out, control)
+    assert driver.recoveries[0]["completed_ops"] == 1
+
+
+# --------------------------------------------------- the fallback ladder
+
+def test_step_boundary_death_falls_back_to_restart(tmp_path):
+    """A rank that dies BETWEEN collectives leaves nothing uncommitted in
+    the ledger — recovery is ineligible (ledger-miss), detected in
+    microseconds, and the driver takes the classic
+    bump → abort → reshaped-restart ladder instead."""
+    init, step = _acc_app()
+    fired = {}
+
+    def killer_step(mpi, st, k):
+        if not fired and mpi.rank == VICTIM and k == KILL_STEP:
+            fired["y"] = True
+            raise RankKilled("boundary death")
+        return step(mpi, st, k)
+
+    ms = Membership(N)
+    with exact_transports():
+        driver = FaultTolerantDriver(
+            job_factory=lambda ws, m: MPIJob(ws or N, killer_step, init,
+                                             transport="shm", membership=m),
+            restart_factory=lambda d, tr, ws, dead, m: MPIJob.restart(
+                d, killer_step, init, transport=tr, world_size=ws,
+                dead_ranks=dead, membership=m),
+            ckpt_root=tmp_path, ckpt_every=3, membership=ms)
+        out = driver.run(STEPS, transport_after_failure="shm", timeout=60)
+    assert any(e.startswith(f"fallback:[{VICTIM}]") and "ledger-miss" in e
+               for e in driver.events), driver.events
+    assert any(e.startswith(f"dead:[{VICTIM}]") for e in driver.events)
+    assert any(e.startswith("restart:at_00000003") for e in driver.events)
+    assert driver.membership.generation == 1
+    assert driver.events[-1] == "done"
+    assert len(out) == N - 1
+    assert all(o["steps_run"] == STEPS for o in out)
+
+
+# ------------------------------- post-recovery sparse-manifest checkpoint
+
+def test_post_recovery_checkpoint_is_sparse_and_restartable(tmp_path):
+    """After a recovery the world is SPARSE (dead world rank removed,
+    survivors not renumbered).  A later periodic checkpoint must commit on
+    the live count, record the hole, and restart cleanly — compacted over
+    the dead rank, bit-identical to the recovered world's own finish."""
+    steps, kill_at, ckpt_at = 10, 3, 6
+
+    def boom():
+        raise RankKilled("injected mid-ring")
+    init, base = _acc_app()
+
+    def killer_step(mpi, st, k):
+        if mpi.rank == VICTIM and k == kill_at and mpi.generation == 0:
+            def hook(phase, hop):
+                if (phase, hop) == ("rs", 1):
+                    boom()
+            mpi._hop_hook = hook
+        return base(mpi, st, k)
+
+    with exact_transports():
+        driver = FaultTolerantDriver(
+            job_factory=lambda: MPIJob(N, killer_step, init, transport="shm",
+                                       heartbeat_timeout=5.0),
+            restart_factory=lambda d, tr: MPIJob.restart(
+                d, killer_step, init, transport=tr),
+            ckpt_root=tmp_path, ckpt_every=ckpt_at)
+        out = driver.run(steps, transport_after_failure="shm", timeout=60)
+    assert any(e.startswith("recover:") for e in driver.events)
+    assert not any(e.startswith("restart:") for e in driver.events)
+
+    ck = tmp_path / f"at_{ckpt_at:08d}"
+    assert checkpoint_valid(ck, deep=True)
+    man = load_manifest(ck)
+    assert man["n_ranks"] == N - 1                  # committed on the LIVE set
+    assert man["meta"]["world_size"] == N           # ... of the N-rank world
+    assert man["meta"]["recovered_dead_ranks"] == [VICTIM]
+
+    # restart compacts over the hole (survivors renumbered 0..n-2) and
+    # finishes bit-identical to the recovered world's own run
+    with exact_transports():
+        job2 = MPIJob.restart(ck, base, init, transport="shm")
+    assert job2.n == N - 1
+    out2 = job2.run(steps, timeout=60)
+    job2.stop()
+    survivors = [r for r in range(N) if r != VICTIM]
+    for new_r, old_r in enumerate(survivors):
+        assert out2[new_r]["steps_run"] == steps
+        assert np.array_equal(out2[new_r]["acc"], out[old_r]["acc"]), old_r
+
+
+# ------------------------------------------------------- auto-migration
+
+def test_driver_auto_migrates_confirmed_straggler(tmp_path):
+    """Opt-in migrate_windows: a rank flagged slow for K consecutive
+    monitor polls is LIVE-MIGRATED (pre-copy rounds, bounded pause, same
+    incarnation) instead of excluded — the run completes with the full
+    world and no generation bump."""
+    import time as _time
+    init, base = _acc_app(n_elems=8, algo="tree")
+
+    def slow_step(mpi, st, k):
+        _time.sleep(0.05 if mpi.rank == VICTIM else 0.002)
+        return base(mpi, st, k)
+
+    steps = 40
+    with exact_transports():
+        driver = FaultTolerantDriver(
+            job_factory=lambda: MPIJob(N, slow_step, init, transport="shm",
+                                       heartbeat_timeout=5.0),
+            restart_factory=lambda d, tr: MPIJob.restart(
+                d, slow_step, init, transport=tr),
+            ckpt_root=tmp_path, ckpt_every=100,
+            migrate_windows=2, monitor_poll_s=0.05)
+        out = driver.run(steps, transport_after_failure="shm", timeout=90)
+    mig = [e for e in driver.events if e.startswith(f"migrate:[{VICTIM}]")]
+    assert mig, driver.events
+    assert not any(e.startswith(("restart:", "dead:", "straggler:",
+                                 "migrate-failed:"))
+                   for e in driver.events), driver.events
+    assert driver.events[-1] == "done"
+    assert driver.membership.generation == 0
+    assert len(out) == N
+    for r in range(N):
+        assert out[r]["steps_run"] == steps

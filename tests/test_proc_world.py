@@ -243,10 +243,15 @@ def test_sigkill_mid_checkpoint_write_never_loses_previous(tmp_path):
     assert man8["n_ranks"] == n - 1 and man8["generation"] == 1
 
 
-def test_external_sigkill_detected_as_process_death(tmp_path):
+def test_external_sigkill_detected_as_process_death(tmp_path, monkeypatch):
     """kill_rank_process: the driver-side fault injector sends a real
     SIGKILL to a live rank PID mid-run; the endpoint records the torn
-    socket as RankProcessDied and the job completes reshaped."""
+    socket as RankProcessDied and the job completes reshaped.  The ledger
+    is disabled so the kill exercises the declare-dead -> reshape ladder —
+    with it on, a mid-collective kill is absorbed in place instead
+    (tests/test_midstep_recovery.py covers that path)."""
+    from repro.core import runtime as _runtime
+    monkeypatch.setattr(_runtime, "LEDGER_ENABLED", False)
     n, victim = 3, 1
     init_fn, dp_step = make_dp_app()
 
