@@ -15,6 +15,16 @@ ratios (wall times on a shared container are noise; bytes are not):
     checkpoint fetches only the changed chunks (~3/16).
 
 Wall-clock rows (cold/warm restore, save) ride along for eyeballing.
+
+The SHARDED tier (PR 9, DESIGN.md §15) adds the checkpoint-CDN rows:
+a restore working set fetched through a 3-shard store (replicas=2,
+per-shard ``get_many`` fan-out) vs the same set through one server.
+The win being claimed is WIRE time — N servers drain N times faster —
+which is invisible on a loopback runner (the "wire" is a memcpy), so
+the shard servers emulate a per-server drain rate + request latency
+(``_WanChunkServer``); sleeps in concurrent connections overlap, which
+is exactly the physical property under test.  A degraded-put row rides
+along: a SIGKILLed/stopped replica must not fail the save.
 """
 from __future__ import annotations
 
@@ -26,11 +36,103 @@ import numpy as np
 
 from benchmarks.common import emit, smoke_scale
 from repro.checkpoint import chunkstore
-from repro.checkpoint.chunkservice import ChunkServer
+from repro.checkpoint.chunkstore import StoreSpec, content_digest
+from repro.checkpoint.chunkservice import CachingChunkStore, ChunkServer
 from repro.checkpoint.manager import CheckpointManager
 
 N_LEAVES = 16
 CHANGED = 3
+
+N_SHARDS = 3
+WAN_BW = 30e6           # emulated per-server drain, bytes/s
+WAN_LAG = 0.001         # emulated per-request latency, s
+
+
+class _WanChunkServer(ChunkServer):
+    """ChunkServer with an emulated per-server wire drain.  Every GET
+    reply is held for ``nbytes/bw + lag`` in the server's connection
+    thread — concurrent connections overlap their sleeps, so N shard
+    servers really do drain N times faster than one.  Emulation is off
+    (``wan_bw = 0``) until the working set is seeded."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.wan_bw = 0.0
+        self.wan_lag = 0.0
+
+    def _execute(self, ns, store, cmd, args):
+        out = super()._execute(ns, store, cmd, args)
+        if self.wan_bw:
+            nbytes = 0
+            if cmd == "get":
+                nbytes = store.size(args[0])
+            elif cmd == "get_many":
+                nbytes = sum(store.size(n) for n in args[0]
+                             if store.has(n))
+            time.sleep(self.wan_lag + nbytes / self.wan_bw)
+        return out
+
+
+def _sharded_fetch_bench(d: Path) -> None:
+    n_chunks, chunk_kib = smoke_scale((48, 192), (16, 64))
+    rng = np.random.default_rng(7)
+    blobs = {}
+    for _ in range(n_chunks):
+        blob = rng.bytes(chunk_kib << 10)    # incompressible: pure wire
+        blobs[f"{content_digest(blob)}.bin"] = blob
+    total = sum(map(len, blobs.values()))
+
+    servers = [_WanChunkServer(d / f"shard{i}").start()
+               for i in range(N_SHARDS)]
+    single = _WanChunkServer(d / "single").start()
+    try:
+        sharded = chunkstore.open_store(StoreSpec(
+            scheme="remote",
+            endpoints=tuple(f"{s.host}:{s.port}" for s in servers),
+            namespace="ws", replicas=2))
+        one = chunkstore.open_store(
+            f"remote://{single.host}:{single.port}/ws")
+        for name, blob in blobs.items():     # seed, emulation off
+            sharded.put(name, blob)
+            one.put(name, blob)
+        for s in servers + [single]:
+            s.wan_bw, s.wan_lag = WAN_BW, WAN_LAG
+
+        # restore working-set fetch: the CachingChunkStore.prefetch path
+        # (batched get_many; per-shard fan-out on the sharded store)
+        names = sorted(blobs)
+        cache1 = CachingChunkStore(d / "cache-single", one)
+        t0 = time.perf_counter()
+        assert cache1.prefetch(names) == total
+        t_single = time.perf_counter() - t0
+        cache3 = CachingChunkStore(d / "cache-sharded", sharded)
+        t0 = time.perf_counter()
+        assert cache3.prefetch(names) == total
+        t_shard = time.perf_counter() - t0
+
+        emit("remote_store/sharded_fetch_single_server", t_single * 1e6,
+             f"MB={total / 1e6:.1f};wan_MBps={WAN_BW / 1e6:.0f}")
+        emit("remote_store/sharded_fetch_3shard", t_shard * 1e6,
+             f"shards={N_SHARDS};replicas=2")
+        emit("remote_store/sharded_fetch_speedup_vs_single_x",
+             t_single / t_shard,
+             f"emulated_wire={WAN_BW / 1e6:.0f}MBps+"
+             f"{WAN_LAG * 1e3:.0f}ms_rtt")
+
+        # degraded write: a dead replica degrades the save to the
+        # surviving copies, it must not fail the upload
+        servers[2].stop()
+        fresh = {f"{content_digest(b)}.bin": b
+                 for b in (rng.bytes(chunk_kib << 10) for _ in range(6))}
+        for name, blob in fresh.items():
+            sharded.put(name, blob)
+        back = sharded.get_many(list(fresh))
+        ok = all(back.get(n) == b for n, b in fresh.items())
+        emit("remote_store/sharded_degraded_put_ok", float(ok),
+             f"degraded_puts={sharded.stats['degraded_puts']}")
+    finally:
+        for s in servers + [single]:
+            s.stop()
 
 
 def _state(shape, seed=0):
@@ -127,6 +229,9 @@ def run() -> None:
             emit("remote_store/warm_restore_bit_identical", float(same3), "")
         finally:
             server.stop()
+
+    with tempfile.TemporaryDirectory() as d:
+        _sharded_fetch_bench(Path(d))
 
 
 if __name__ == "__main__":

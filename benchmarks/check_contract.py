@@ -21,6 +21,10 @@ CI runners are noise):
     save/restore through the chunk service move exactly 1.0 of their
     bytes, warm ones at most the committed ceiling (~3/16), and both
     restores are bit-identical.
+  * sharded fetch (BENCH_remote_store.json, DESIGN.md 15): the restore
+    working set through a 3-shard replicas=2 store must beat the single
+    emulated-wire server by the committed floor (1.8x full), and a save
+    with one shard dead must land degraded, never fail (exactly 1.0).
   * data-plane speedups (BENCH_data_plane.json): scatter-gather framing
     vs the in-bench PR-5 concat replica must stay above the committed
     floor on tcp, the shm ring above its (higher) floor when the host
@@ -119,6 +123,17 @@ def main() -> None:
         val = rows.get(name)
         if val is not None:
             check(name, val == rc["cold_fractions_required"], f"{val}")
+    val = rows.get("remote_store/sharded_fetch_speedup_vs_single_x")
+    if val is not None:
+        floor = rc["ci_smoke_sharded_fetch_speedup_min_x" if smoke
+                   else "sharded_fetch_speedup_min_x"]
+        check("remote_store/sharded_fetch_speedup_vs_single_x",
+              val >= floor,
+              f"{val:.2f}x (floor {floor}x{' [smoke]' if smoke else ''})")
+    val = rows.get("remote_store/sharded_degraded_put_ok")
+    if val is not None:
+        check("remote_store/sharded_degraded_put_ok",
+              val == rc["sharded_degraded_put_required"], f"{val}")
 
     dp = json.loads((REPO / "BENCH_data_plane.json").read_text())
     dpc = dp["contract"]

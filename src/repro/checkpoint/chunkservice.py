@@ -48,25 +48,37 @@ Namespaces: a server partitions its root per namespace (one flat chunk
 dir each), so independent jobs sharing one server cannot observe each
 other through dedup or collect each other's chunks.
 
-Spec grammar (``chunkstore.open_store``):
+SCALE-OUT (PR 9, DESIGN.md §15): ``ShardedChunkStore`` runs one
+``RemoteChunkStore`` client per server and digest-space-partitions the
+chunk namespace across them — the content-addressed name IS the
+placement key, so the shard map is a pure function and needs no
+directory service.  Each chunk is written to R consecutive shards
+(replicas); reads fail over along the same ring, so a killed or bounced
+server degrades the store instead of failing it.  Batched queries
+(``has_many``/``get_many``) split per shard and fan out on a bounded
+pool — the restore working set arrives over N sockets concurrently.
+
+Spec grammar (``chunkstore.StoreSpec`` — the one canonical form):
 
     remote://HOST:PORT[/NAMESPACE][?cache=DIR]
+    remote://H1:P1,H2:P2,H3:P3[/NAMESPACE][?cache=DIR&replicas=R]
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import os
 import pickle
 import random
-import re
 import socket
 import struct
 import threading
 import time
-import urllib.parse
+import zlib
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-from repro.checkpoint.chunkstore import ChunkStore, ChunkStoreBackend
+from repro.checkpoint.chunkstore import (ChunkStore, ChunkStoreBackend,
+                                         StoreSpec, check_token)
 from repro.core import tunables
 from repro.core.transport import (dumps_parts, loads_body, read_frame_mv,
                                   write_frame_parts)
@@ -80,8 +92,8 @@ CHUNK_PROTOCOL_VERSION = 1
 
 #: blobs at least this large ride out-of-band (``pickle.PickleBuffer``)
 #: in both directions; below it the plain in-band pickle is cheaper than
-#: an extra iovec entry
-_OOB_MIN = 1 << 16
+#: an extra iovec entry (REPRO_CHUNK_OOB_MIN)
+_OOB_MIN = tunables.CHUNK_OOB_MIN
 
 
 def _oob(blob) -> Any:
@@ -96,10 +108,6 @@ def _oob(blob) -> Any:
 def _as_bytes(blob) -> bytes:
     return blob if isinstance(blob, bytes) else bytes(blob)
 
-#: chunk names and namespaces are digest-shaped tokens; anything else is
-#: rejected server-side (a name is used as a path component)
-_SAFE_TOKEN = re.compile(r"^[A-Za-z0-9._-]+$")
-
 
 class ChunkServiceError(ConnectionError):
     """Chunk-service wire failure (torn reply, refused connection,
@@ -108,59 +116,58 @@ class ChunkServiceError(ConnectionError):
     server exactly like a missing local file."""
 
 
-def _check_token(tok: str, what: str) -> str:
-    # fullmatch (a trailing newline must not slip past a $-anchor) and no
-    # dot-only tokens: namespace "." would alias the server's default
-    # namespace and break cross-job isolation
-    if (not _SAFE_TOKEN.fullmatch(tok) or ".." in tok
-            or set(tok) == {"."}):
-        raise ValueError(f"illegal {what} {tok!r}")
-    return tok
+#: chunk names, namespaces and lease ids are digest-shaped tokens;
+#: anything else is rejected server-side (a name is used as a path
+#: component).  One validator, shared with StoreSpec (chunkstore.py).
+_check_token = check_token
+
+
+def _split_endpoint(endpoint: str) -> Tuple[str, int]:
+    host, _, port = endpoint.rpartition(":")
+    return host, int(port)
 
 
 def parse_spec(spec: str) -> Tuple[str, int, str, Optional[str]]:
-    """``remote://host:port[/ns][?cache=DIR]`` -> (host, port, ns, cache).
-    The cache value is percent-decoded (make_spec quotes it — cache dirs
-    are user paths and may legally contain ``?``/``&``)."""
-    if not spec.startswith("remote://"):
+    """Back-compat view of ``StoreSpec.parse`` for SINGLE-endpoint specs:
+    ``remote://host:port[/ns][?cache=DIR]`` -> (host, port, ns, cache).
+    Sharded (multi-endpoint) specs don't fit a 4-tuple — parse those with
+    ``StoreSpec.parse`` and read ``.endpoints``/``.replicas``."""
+    if not str(spec).startswith("remote://"):
         raise ValueError(f"not a remote chunk-store spec: {spec!r}")
-    rest = spec[len("remote://"):]
-    cache: Optional[str] = None
-    if "?" in rest:
-        rest, query = rest.split("?", 1)
-        for kv in query.split("&"):
-            k, _, v = kv.partition("=")
-            if k == "cache" and v:
-                cache = urllib.parse.unquote(v)
-            else:
-                raise ValueError(f"unknown spec parameter {kv!r} in {spec!r}")
-    ns = ""
-    if "/" in rest:
-        rest, ns = rest.split("/", 1)
-        if ns:
-            _check_token(ns, "namespace")
-    host, _, port = rest.rpartition(":")
-    if not host or not port.isdigit():
-        raise ValueError(f"spec needs host:port, got {spec!r}")
-    return host, int(port), ns, cache
+    sp = StoreSpec.parse(spec)
+    if sp.sharded:
+        raise ValueError(
+            f"parse_spec is single-endpoint; {spec!r} is sharded — "
+            f"use StoreSpec.parse")
+    host, port = _split_endpoint(sp.endpoints[0])
+    return host, port, sp.namespace, sp.cache
 
 
 def make_spec(host: str, port: int, namespace: str = "",
               cache: Optional[str | Path] = None) -> str:
-    spec = f"remote://{host}:{port}"
-    if namespace:
-        spec += f"/{namespace}"
-    if cache:
-        spec += f"?cache={urllib.parse.quote(str(cache), safe='/')}"
-    return spec
+    """Canonical single-endpoint spec string (``StoreSpec.canonical``)."""
+    return StoreSpec(scheme="remote", endpoints=(f"{host}:{int(port)}",),
+                     namespace=namespace,
+                     cache=str(cache) if cache else None).canonical()
 
 
-def store_from_spec(spec: str) -> ChunkStoreBackend:
-    host, port, ns, cache = parse_spec(spec)
-    remote = RemoteChunkStore(host, port, namespace=ns)
-    if cache is None:
+def store_from_spec(spec: str | StoreSpec) -> ChunkStoreBackend:
+    """Build the client backend a remote ``StoreSpec`` describes: one
+    ``RemoteChunkStore`` per endpoint — behind a ``ShardedChunkStore``
+    when there are several — wrapped in a ``CachingChunkStore`` when the
+    spec carries a cache directory."""
+    sp = StoreSpec.parse(spec)
+    if sp.scheme != "remote":
+        raise ValueError(f"not a remote chunk-store spec: {spec!r}")
+    if sp.sharded:
+        remote: ChunkStoreBackend = ShardedChunkStore(
+            sp.endpoints, namespace=sp.namespace, replicas=sp.replicas)
+    else:
+        host, port = _split_endpoint(sp.endpoints[0])
+        remote = RemoteChunkStore(host, port, namespace=sp.namespace)
+    if sp.cache is None:
         return remote
-    return CachingChunkStore(cache, remote)
+    return CachingChunkStore(sp.cache, remote)
 
 
 # =========================================================================
@@ -494,8 +501,8 @@ class RemoteChunkStore(ChunkStoreBackend):
 
     #: default TTL for the client's automatic live-set lease — long
     #: enough to bridge several save/gc rounds, short enough that a dead
-    #: client's pin drains away on its own
-    DEFAULT_LEASE_TTL = 600.0
+    #: client's pin drains away on its own (REPRO_CHUNK_LEASE_TTL_S)
+    DEFAULT_LEASE_TTL = tunables.CHUNK_LEASE_TTL_S
 
     def __init__(self, host: str, port: int, namespace: str = "",
                  connect_timeout: float = 10.0):
@@ -516,8 +523,13 @@ class RemoteChunkStore(ChunkStoreBackend):
                       "round_trips": 0, "reconnects": 0}
 
     @property
-    def spec(self) -> str:
-        return make_spec(self.host, self.port, self.namespace)
+    def endpoint(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    @property
+    def spec_obj(self) -> StoreSpec:
+        return StoreSpec(scheme="remote", endpoints=(self.endpoint,),
+                         namespace=self.namespace)
 
     # --------------------------------------------------------------- wire
     def _conn(self) -> socket.socket:
@@ -685,8 +697,489 @@ class RemoteChunkStore(ChunkStoreBackend):
         return self._call("stats")
 
 
+class ShardedChunkStore(ChunkStoreBackend):
+    """Digest-space sharding + replication across N ``ChunkServer``s —
+    the checkpoint CDN tier (DESIGN.md §15).
+
+    PLACEMENT is a pure function of the content-addressed name: the hex
+    digest prefix mod the shard count picks the HOME shard, and a chunk's
+    replica set is the R consecutive shards starting there (a ring walk).
+    blake2b output is uniform, so shards stay balanced with no directory
+    service, no rebalancer, and no extra metadata — any client that
+    knows the endpoint list (the StoreSpec) can compute where every
+    chunk lives.  The endpoint ORDER is the shard map: permuting it is a
+    different store.
+
+    WRITE path: ``put`` offers the blob to each replica in ring order; a
+    put succeeds when at least ONE replica accepts (``degraded_puts``
+    counts saves that landed under-replicated).  Each shard client keeps
+    the PR-8 retry/backoff ladder, so a bounced server stalls briefly
+    and a dead one is marked DOWN for ``REPRO_SHARD_RETRY_S`` — later
+    ops skip it (one probe re-tests after the cooldown) instead of
+    re-paying the ladder per chunk.
+
+    READ path: ``get`` walks the same ring and fails over past dead or
+    chunk-less replicas (``failover_reads``); batched ``has_many`` /
+    ``get_many`` split the name list per shard and fan out on a bounded
+    pool (``REPRO_SHARD_FANOUT``) — a restore working set streams over N
+    sockets concurrently, which is where the wire-time win comes from.
+
+    SEMANTICS under partial outage follow the gc-safety rule: presence
+    queries (``has_many``, the upload decision) treat an unreachable
+    shard as "not holding anything" — the worst case is a redundant
+    idempotent re-upload — while ``sizes`` (the validate/restore view)
+    RAISES when a name is unresolved and any of its replicas was
+    unreachable, because "can't tell" must never read as "definitely
+    missing".  Leases and gc fan out to every shard; ``gc`` stays
+    lease-only like the single-server client.
+
+    Fork-safe like ``RemoteChunkStore``: each shard client re-dials
+    after a fork, and the fan-out pool is lazily rebuilt per pid."""
+
+    wants_batched_has = True
+    root = None
+
+    def __init__(self, endpoints: Sequence[str], namespace: str = "",
+                 replicas: Optional[int] = None,
+                 connect_timeout: float = 10.0):
+        self.endpoints = tuple(endpoints)
+        if not self.endpoints:
+            raise ValueError("sharded store needs at least one endpoint")
+        self.namespace = namespace
+        want = tunables.SHARD_REPLICAS if replicas is None else int(replicas)
+        self.replicas = max(1, min(want, len(self.endpoints)))
+        self.shards = [
+            RemoteChunkStore(*_split_endpoint(ep), namespace=namespace,
+                             connect_timeout=connect_timeout)
+            for ep in self.endpoints]
+        #: {shard idx: monotonic time it was marked down}
+        self._down: Dict[int, float] = {}
+        self._probing: Set[int] = set()
+        self._lock = threading.Lock()
+        self._exec: Optional[cf.ThreadPoolExecutor] = None
+        self._exec_pid: Optional[int] = None
+        self.stats = {"chunks_written": 0, "chunks_referenced": 0,
+                      "bytes_written": 0, "bytes_referenced": 0,
+                      "chunks_removed": 0,
+                      "bytes_uploaded": 0, "bytes_fetched": 0,
+                      "degraded_puts": 0, "failover_reads": 0,
+                      "shard_errors": 0, "shards_down": 0,
+                      "shards": len(self.endpoints),
+                      "replicas": self.replicas}
+
+    @property
+    def spec_obj(self) -> StoreSpec:
+        # resolved (explicit, clamped) replica count: a manifest written
+        # under REPRO_REPLICAS=3 must restore identically elsewhere
+        return StoreSpec(scheme="remote", endpoints=self.endpoints,
+                         namespace=self.namespace, replicas=self.replicas)
+
+    def close(self) -> None:
+        for sh in self.shards:
+            sh.close()
+        with self._lock:
+            if self._exec is not None:
+                self._exec.shutdown(wait=False)
+                self._exec = None
+                self._exec_pid = None
+
+    # ---------------------------------------------------------- placement
+    def _home(self, name: str) -> int:
+        stem = name.split(".", 1)[0]
+        try:
+            return int(stem[:15], 16) % len(self.shards)
+        except ValueError:
+            # non-digest name (shouldn't happen on the save path, but
+            # reads of foreign names must still route deterministically)
+            return zlib.crc32(name.encode()) % len(self.shards)
+
+    def _replica_ids(self, name: str) -> List[int]:
+        h, n = self._home(name), len(self.shards)
+        return [(h + k) % n for k in range(self.replicas)]
+
+    # ----------------------------------------------------- shard plumbing
+    def _usable(self, i: int) -> bool:
+        """False while shard `i` is inside its mark-down cooldown.  After
+        the cooldown ONE caller gets a True (the probe); everyone else
+        keeps skipping until the probe's verdict lands."""
+        with self._lock:
+            t = self._down.get(i)
+            if t is None:
+                return True
+            if (time.monotonic() - t >= tunables.SHARD_RETRY_S
+                    and i not in self._probing):
+                self._probing.add(i)
+                return True
+            return False
+
+    def _mark_up(self, i: int) -> None:
+        with self._lock:
+            self._down.pop(i, None)
+            self._probing.discard(i)
+            self.stats["shards_down"] = len(self._down)
+
+    def _mark_down(self, i: int) -> None:
+        with self._lock:
+            self._down[i] = time.monotonic()
+            self._probing.discard(i)
+            self.stats["shard_errors"] += 1
+            self.stats["shards_down"] = len(self._down)
+
+    def _try(self, i: int, fn, *args):
+        """One shard call with health accounting: a connection-layer
+        failure (the client's whole retry ladder exhausted) marks the
+        shard down; any answer — including a server-raised error —
+        marks it up (the wire is healthy)."""
+        try:
+            out = fn(*args)
+        except ChunkServiceError:
+            self._mark_down(i)
+            raise
+        except Exception:
+            self._mark_up(i)
+            raise
+        self._mark_up(i)
+        return out
+
+    def _pool(self) -> cf.ThreadPoolExecutor:
+        with self._lock:
+            if self._exec is None or self._exec_pid != os.getpid():
+                # a forked child must not share the parent's pool threads
+                self._exec = cf.ThreadPoolExecutor(
+                    max_workers=max(1, min(tunables.SHARD_FANOUT,
+                                           len(self.shards))),
+                    thread_name_prefix="shard-fanout")
+                self._exec_pid = os.getpid()
+            return self._exec
+
+    def _fanout(self, jobs: List[tuple]) -> List[tuple]:
+        """Run ``[(shard idx, fn, args), ...]`` concurrently (each shard
+        client still serializes on its own socket); returns
+        ``[(idx, result-or-exception), ...]``."""
+        if len(jobs) <= 1:
+            out = []
+            for i, fn, args in jobs:
+                try:
+                    out.append((i, self._try(i, fn, *args)))
+                except Exception as e:      # noqa: BLE001 - sorted by caller
+                    out.append((i, e))
+            return out
+        pool = self._pool()
+        futs = [(i, pool.submit(self._try, i, fn, *args))
+                for i, fn, args in jobs]
+        out = []
+        for i, f in futs:
+            try:
+                out.append((i, f.result()))
+            except Exception as e:          # noqa: BLE001 - sorted by caller
+                out.append((i, e))
+        return out
+
+    def _group_by_replicas(self, names: Sequence[str]) -> Dict[int, List[str]]:
+        groups: Dict[int, List[str]] = {}
+        for n in names:
+            for i in self._replica_ids(n):
+                groups.setdefault(i, []).append(n)
+        return groups
+
+    # ------------------------------------------------------------ presence
+    def _presence(self, names: Sequence[str]):
+        """({name: size} union over reachable replicas,
+        {unreachable shard ids})."""
+        groups = self._group_by_replicas(names)
+        jobs, unreachable = [], set()
+        for i, batch in groups.items():
+            if self._usable(i):
+                jobs.append((i, self.shards[i].has_many, (batch,)))
+            else:
+                unreachable.add(i)
+        present: Dict[str, int] = {}
+        for i, res in self._fanout(jobs):
+            if isinstance(res, ChunkServiceError):
+                unreachable.add(i)
+            elif isinstance(res, Exception):
+                raise res
+            else:
+                for n, sz in res.items():
+                    present.setdefault(n, sz)
+        return present, unreachable
+
+    def has(self, name: str) -> bool:
+        return name in self.has_many([name])
+
+    def has_many(self, names: Sequence[str]) -> Dict[str, int]:
+        # a chunk is present if ANY replica has it; an unreachable shard
+        # contributes nothing — the upload decision then errs toward
+        # re-uploading, which is idempotent and safe
+        present, _ = self._presence(list(names))
+        return present
+
+    def size(self, name: str) -> int:
+        sz = self.sizes([name]).get(name)
+        if sz is None:
+            raise FileNotFoundError(name)
+        return sz
+
+    def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
+        names = list(names)
+        present, unreachable = self._presence(names)
+        out = {n: present.get(n) for n in names}
+        if unreachable:
+            at_risk = [n for n in names if out[n] is None
+                       and any(i in unreachable
+                               for i in self._replica_ids(n))]
+            if at_risk:
+                eps = ",".join(self.shards[i].endpoint
+                               for i in sorted(unreachable))
+                raise ChunkServiceError(
+                    f"cannot resolve {len(at_risk)} chunk(s): replica "
+                    f"shard(s) {eps} unreachable")
+        return out
+
+    # --------------------------------------------------------------- reads
+    def get(self, name: str) -> bytes:
+        order = self._replica_ids(name)
+        live = [i for i in order if self._usable(i)]
+        down = [i for i in order if i not in live]
+        last: Optional[Exception] = None
+        # marked-down replicas go last: better one retry-ladder stall
+        # against a possibly-stale mark than a false "unavailable"
+        for i in live + down:
+            try:
+                blob = self._try(i, self.shards[i].get, name)
+            except (OSError, KeyError) as e:
+                last = e
+                continue
+            blob = _as_bytes(blob)
+            with self._lock:
+                self.stats["bytes_fetched"] += len(blob)
+                if i != order[0]:
+                    self.stats["failover_reads"] += 1
+            return blob
+        raise last if last is not None else FileNotFoundError(name)
+
+    def get_many(self, names: Sequence[str]) -> Dict[str, bytes]:
+        names = list(names)
+        # primary assignment: each name to its first LIVE replica, so the
+        # batches are disjoint and stream over N sockets concurrently
+        usable: Dict[int, bool] = {}
+        batches: Dict[int, List[str]] = {}
+        for n in names:
+            for i in self._replica_ids(n):
+                if i not in usable:
+                    usable[i] = self._usable(i)
+                if usable[i]:
+                    batches.setdefault(i, []).append(n)
+                    break
+        out: Dict[str, bytes] = {}
+        jobs = [(i, self.shards[i].get_many, (batch,))
+                for i, batch in batches.items()]
+        for i, res in self._fanout(jobs):
+            if isinstance(res, Exception):
+                if not isinstance(res, (OSError, KeyError)):
+                    raise res
+                continue        # whole batch fails over below
+            for n, b in res.items():
+                b = _as_bytes(b)
+                out[n] = b
+                with self._lock:
+                    self.stats["bytes_fetched"] += len(b)
+        # failover: anything a primary didn't deliver (shard died
+        # mid-call, or holds no copy) walks the per-name replica ladder;
+        # names absent EVERYWHERE are omitted, like the server command
+        for n in names:
+            if n not in out:
+                try:
+                    out[n] = self.get(n)
+                except (OSError, KeyError):
+                    pass
+        return out
+
+    # -------------------------------------------------------------- writes
+    def put(self, name: str, blob, raw_bytes: int = 0) -> bool:
+        raw = raw_bytes or len(blob)
+        order = self._replica_ids(name)
+        live = [i for i in order if self._usable(i)]
+        down = [i for i in order if i not in live]
+        wrote_n = 0
+        landed = 0          # replicas holding the bytes after this call
+        referenced = False
+        errors: List[Exception] = []
+        for i in live:
+            try:
+                if self._try(i, self.shards[i].put, name, blob, raw_bytes):
+                    wrote_n += 1
+                else:
+                    referenced = True
+                landed += 1
+            except (ChunkServiceError, OSError) as e:
+                errors.append(e)
+        if landed == 0:
+            # nothing landed on a live replica: probe the marked-down
+            # ones before declaring the save degraded past saving
+            for i in down:
+                try:
+                    if self._try(i, self.shards[i].put,
+                                 name, blob, raw_bytes):
+                        wrote_n += 1
+                    else:
+                        referenced = True
+                    landed += 1
+                    break
+                except (ChunkServiceError, OSError) as e:
+                    errors.append(e)
+        if landed == 0:
+            # ZERO replicas hold the bytes — the save must not claim this
+            # chunk is stored; surface the outage like any unreachable
+            # store (the caller's retry/abort policy applies)
+            raise errors[-1] if errors else ChunkServiceError(
+                f"no reachable replica for {name!r}")
+        with self._lock:
+            if landed < self.replicas or errors or down:
+                self.stats["degraded_puts"] += 1
+            self.stats["bytes_uploaded"] += len(blob) * wrote_n
+            if referenced:
+                # the content already existed somewhere: this save is an
+                # incremental reference (any extra copies were repair)
+                self.stats["chunks_referenced"] += 1
+                self.stats["bytes_referenced"] += raw
+            else:
+                self.stats["chunks_written"] += 1
+                self.stats["bytes_written"] += raw
+        return not referenced
+
+    def ref(self, name: str, raw_bytes: int) -> None:
+        with self._lock:
+            self.stats["chunks_referenced"] += 1
+            self.stats["bytes_referenced"] += raw_bytes
+        # forward to ONE replica for server-side accounting, best-effort
+        for i in self._replica_ids(name):
+            if not self._usable(i):
+                continue
+            try:
+                self._try(i, self.shards[i].ref, name, raw_bytes)
+                return
+            except (ChunkServiceError, OSError):
+                continue
+
+    # ------------------------------------------------------------- admin
+    def list_chunks(self) -> Set[str]:
+        out: Set[str] = set()
+        jobs = [(i, sh.list_chunks, ())
+                for i, sh in enumerate(self.shards) if self._usable(i)]
+        for i, res in self._fanout(jobs):
+            if isinstance(res, Exception):
+                if not isinstance(res, (OSError, KeyError)):
+                    raise res
+                continue
+            out.update(res)
+        return out
+
+    def gc(self, live: Iterable[str]) -> int:
+        """Lease-only, like the single-server client: renew this
+        client's live-set lease on EVERY shard (each protects its own
+        replica copies), remove nothing.  Best-effort per shard."""
+        live = set(live)
+        for i, sh in enumerate(self.shards):
+            if not self._usable(i):
+                continue
+            try:
+                self._try(i, sh.lease, live)
+            except (ChunkServiceError, OSError):
+                pass
+        return 0
+
+    def gc_remote(self, live: Iterable[str]) -> int:
+        """Explicit server-side reclamation on every shard.  All shards
+        are attempted (even marked-down ones — an admin op should not
+        silently skip a shard and leave garbage); the first failure is
+        re-raised after the sweep so partial progress still happens."""
+        live = sorted(set(live))
+        removed = 0
+        errors: List[Exception] = []
+        for i, res in self._fanout([(i, sh.gc_remote, (live,))
+                                    for i, sh in enumerate(self.shards)]):
+            if isinstance(res, Exception):
+                errors.append(res)
+            else:
+                removed += res
+        with self._lock:
+            self.stats["chunks_removed"] += removed
+        if errors:
+            raise errors[0]
+        return removed
+
+    def lease(self, names: Iterable[str], ttl: Optional[float] = None,
+              lease_id: Optional[str] = None) -> int:
+        """Register/renew the lease on every shard; raises only when NO
+        shard accepted it (then nothing protects the chunks)."""
+        count: Optional[int] = None
+        last: Optional[Exception] = None
+        for i, res in self._fanout([(i, sh.lease, (names, ttl, lease_id))
+                                    for i, sh in enumerate(self.shards)]):
+            if isinstance(res, Exception):
+                last = res
+            else:
+                count = res
+        if count is None:
+            raise last if last is not None else ChunkServiceError(
+                "no shard accepted the lease")
+        return count
+
+    def unlease(self, lease_id: Optional[str] = None) -> bool:
+        any_dropped = False
+        for i, res in self._fanout([(i, sh.unlease, (lease_id,))
+                                    for i, sh in enumerate(self.shards)]):
+            if not isinstance(res, Exception) and res:
+                any_dropped = True
+        return any_dropped
+
+    def leases(self) -> dict:
+        out: dict = {}
+        for i, res in self._fanout([(i, sh.leases, ())
+                                    for i, sh in enumerate(self.shards)]):
+            if not isinstance(res, Exception):
+                out.update(res)
+        return out
+
+    def server_stats(self) -> dict:
+        """{endpoint: backing-store stats} for every reachable shard."""
+        out: dict = {}
+        for i, res in self._fanout([(i, sh.server_stats, ())
+                                    for i, sh in enumerate(self.shards)]):
+            if not isinstance(res, Exception):
+                out[self.shards[i].endpoint] = res
+        return out
+
+    # ------------------------------------------------------------- health
+    def health(self) -> List[dict]:
+        """Per-shard health the job surfaces in ``stats()``: endpoint,
+        up/down, remaining cooldown, and the shard client's wire
+        counters."""
+        now = time.monotonic()
+        with self._lock:
+            down = dict(self._down)
+        out = []
+        for i, sh in enumerate(self.shards):
+            t = down.get(i)
+            out.append({
+                "endpoint": sh.endpoint,
+                "up": t is None,
+                "cooldown_s": (0.0 if t is None else
+                               max(0.0, tunables.SHARD_RETRY_S
+                                   - (now - t))),
+                "round_trips": sh.stats["round_trips"],
+                "reconnects": sh.stats["reconnects"],
+                "bytes_uploaded": sh.stats["bytes_uploaded"],
+                "bytes_fetched": sh.stats["bytes_fetched"],
+            })
+        return out
+
+
 class CachingChunkStore(ChunkStoreBackend):
-    """A local chunk cache layered over a ``RemoteChunkStore``.
+    """A local chunk cache layered over a remote backend — a single
+    ``RemoteChunkStore`` or a ``ShardedChunkStore`` (the cache is
+    placement-blind: it only sees names and bytes).
 
     SAVE: ``has``/``has_many`` are answered by the SERVER (authoritative
     — another host's restore must be able to fetch every referenced
@@ -698,7 +1191,9 @@ class CachingChunkStore(ChunkStoreBackend):
     RESTORE: ``get`` is cache-first; a miss fetches from the server AND
     pins the blob into the cache (``bytes_fetched``), so the next restore
     of an overlapping manifest moves only what changed — the incremental
-    property, now across hosts.
+    property, now across hosts.  ``prefetch`` pulls a whole working set
+    of cache-misses down in batched ``get_many`` calls first — over a
+    sharded remote each batch arrives from N servers concurrently.
 
     GC collects the CACHE only (see module docstring for why); use
     ``gc_remote`` to reclaim the server when the caller owns the
@@ -706,7 +1201,8 @@ class CachingChunkStore(ChunkStoreBackend):
 
     wants_batched_has = True
 
-    def __init__(self, cache_root: str | Path, remote: RemoteChunkStore):
+    def __init__(self, cache_root: str | Path,
+                 remote: "RemoteChunkStore | ShardedChunkStore"):
         self.cache = ChunkStore(cache_root)
         self.remote = remote
         self.root = self.cache.root
@@ -726,19 +1222,20 @@ class CachingChunkStore(ChunkStoreBackend):
                       "chunks_removed": 0,
                       "bytes_uploaded": 0, "bytes_referenced_remote": 0,
                       "bytes_fetched": 0, "bytes_read": 0,
-                      "cache_hits": 0, "cache_misses": 0}
+                      "cache_hits": 0, "cache_misses": 0,
+                      "chunks_prefetched": 0}
 
     @property
-    def spec(self) -> str:
-        return make_spec(self.remote.host, self.remote.port,
-                         self.remote.namespace, self.cache.root)
-
-    @property
-    def fetch_spec(self) -> str:
-        return self.remote.spec      # portable: no writer-local cache dir
+    def spec_obj(self) -> StoreSpec:
+        return self.remote.spec_obj.with_cache(self.cache.root)
 
     def close(self) -> None:
         self.remote.close()
+
+    def health(self) -> Optional[List[dict]]:
+        """Per-shard health when the remote tier is sharded, else None."""
+        fn = getattr(self.remote, "health", None)
+        return fn() if fn is not None else None
 
     # -------------------------------------------------- presence (server)
     def _presence(self, name: str) -> Optional[int]:
@@ -790,8 +1287,39 @@ class CachingChunkStore(ChunkStoreBackend):
             else:
                 misses.append(n)
         if misses:
-            out.update(self.has_many(misses))
+            # the VALIDATION view goes to remote.sizes, not has_many: a
+            # sharded remote raises there when a name is unresolved and a
+            # replica shard was unreachable ("can't tell" must never read
+            # as "definitely missing" — gc deletes on the latter)
+            got = self.remote.sizes(misses)
+            with self._lock:
+                self._known_remote.update(
+                    {n: sz for n, sz in got.items() if sz is not None})
+            out.update(got)
         return {n: out.get(n) for n in names}
+
+    def prefetch(self, names: Sequence[str]) -> int:
+        """Pin every cache-missing name in `names` into the cache via
+        batched ``get_many`` round trips (``REPRO_CHUNK_PREFETCH_BATCH``
+        names each — bounds any one reply buffer); over a sharded remote
+        each batch fans out per shard, so the restore working set rides N
+        sockets at once.  Returns the wire bytes fetched.  Names the
+        remote doesn't hold are left for the per-chunk ``get`` ladder."""
+        miss = [n for n in names if not self.cache.has(n)]
+        fetched = 0
+        step = max(1, int(tunables.CHUNK_PREFETCH_BATCH))
+        for k in range(0, len(miss), step):
+            got = self.remote.get_many(miss[k:k + step])
+            for n, blob in got.items():
+                self.cache.put(n, blob)
+                fetched += len(blob)
+                with self._lock:
+                    self._known_remote.setdefault(n, len(blob))
+                    self.stats["chunks_prefetched"] += 1
+        if fetched:
+            with self._lock:
+                self.stats["bytes_fetched"] += fetched
+        return fetched
 
     def get(self, name: str) -> bytes:
         if self.cache.has(name):
@@ -871,3 +1399,41 @@ class CachingChunkStore(ChunkStoreBackend):
 
     def unlease(self, lease_id: Optional[str] = None) -> bool:
         return self.remote.unlease(lease_id)
+
+
+# =========================================================================
+# CLI: serve one shard
+# =========================================================================
+
+def _main(argv=None):
+    """``python -m repro.checkpoint.chunkservice DIR [--port P]`` — serve
+    one chunk directory over a socket.  Run N of these and list every
+    ``host:port`` in one StoreSpec to form a shard set (DESIGN.md §15)."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Serve a content-addressed chunk directory over a "
+                    "socket — one shard of a remote:// endpoint list.")
+    ap.add_argument("root", help="backing directory for this shard")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="port to listen on (0 picks a free one)")
+    ap.add_argument("--advertise-host", default=None,
+                    help="dialable name to print when binding a wildcard")
+    ap.add_argument("--auto-gc-interval", type=float, default=None,
+                    help="server-side lease-aware gc sweep period, seconds")
+    args = ap.parse_args(argv)
+    srv = ChunkServer(args.root, host=args.host, port=args.port,
+                      advertise_host=args.advertise_host,
+                      auto_gc_interval=args.auto_gc_interval).start()
+    print(f"chunkserver: {args.root} on {srv.host}:{srv.port}", flush=True)
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.stop()
+
+
+if __name__ == "__main__":
+    _main()

@@ -19,22 +19,209 @@ lands last is indistinguishable from the first.
 
 Since PR 5 the store is PLUGGABLE (DESIGN.md §11): every consumer writes
 against the ``ChunkStoreBackend`` interface below, and ``open_store``
-resolves a *spec* — a directory path, a ``remote://host:port[/ns]``
-address (checkpoint/chunkservice.py), or an already-built backend — so a
-checkpoint can live behind a socket exactly like the MPI fabric does.
+resolves a *spec* to a backend, so a checkpoint can live behind a socket
+exactly like the MPI fabric does.
+
+Since PR 9 the spec itself is STRUCTURED (DESIGN.md §15): ``StoreSpec``
+is the one description of "where chunks live" — scheme, endpoints,
+namespace, replication, cache directory — with a canonical string form
+that round-trips through ``StoreSpec.parse``:
+
+    /path/to/chunks                                   (local directory)
+    remote://host:port[/ns][?cache=DIR]               (one chunk server)
+    remote://h1:p1,h2:p2,h3:p3[/ns][?cache=DIR&replicas=2]   (sharded)
+
+Every consumer — ``open_store``, manifests, the process world's
+``ckpt_info`` hand-off, migration destinations — speaks this ONE grammar;
+a sharded deployment composes (more endpoints, a replicas knob) instead
+of growing another string dialect.  ``open_store`` accepts old-style
+strings, ``Path``s, ``StoreSpec`` objects, or an already-built backend,
+and every backend's ``spec`` property returns the canonical string.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import os
+import re
 import threading
+import urllib.parse
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, Iterable, Optional, Sequence, Set
+from typing import Dict, Iterable, Optional, Sequence, Set, Tuple
 
 
 def content_digest(buf) -> str:
     """Digest of a bytes-like/buffer (memoryviews welcome — no copy)."""
     return hashlib.blake2b(buf, digest_size=16).hexdigest()
+
+
+#: chunk names, namespaces and lease ids are digest-shaped tokens;
+#: anything else is rejected (a name is used as a path component).
+#: Shared with the chunk service, which enforces it server-side.
+SAFE_TOKEN = re.compile(r"^[A-Za-z0-9._-]+$")
+
+
+def check_token(tok: str, what: str) -> str:
+    # fullmatch (a trailing newline must not slip past a $-anchor) and no
+    # dot-only tokens: namespace "." would alias a server's default
+    # namespace and break cross-job isolation
+    if (not SAFE_TOKEN.fullmatch(tok) or ".." in tok
+            or set(tok) == {"."}):
+        raise ValueError(f"illegal {what} {tok!r}")
+    return tok
+
+
+_ENDPOINT = re.compile(r"^[A-Za-z0-9._\-\[\]]+:\d+$")
+
+
+@dataclass(frozen=True)
+class StoreSpec:
+    """Structured description of a chunk store (DESIGN.md §15).
+
+    One object replaces the ad-hoc strings that used to thread through
+    ``open_store``/``spec()``:
+
+      * ``scheme``     — ``"local"`` (a directory) or ``"remote"`` (one
+        or more chunk servers);
+      * ``endpoints``  — ``("host:port", ...)`` for remote stores; more
+        than one endpoint means a digest-space-sharded store and the
+        ORDER is the shard map (two specs with permuted endpoints are
+        different stores);
+      * ``path``       — the root directory for local stores;
+      * ``namespace``  — server-side isolation unit (empty = default);
+      * ``replicas``   — how many endpoints each chunk is written to;
+        ``None`` means "the store default" (``REPRO_REPLICAS``, clamped
+        to ``len(endpoints)`` at open time), an explicit int is obeyed
+        (also clamped) and survives the round trip;
+      * ``cache``      — local cache directory layered over a remote
+        (``CachingChunkStore``).
+
+    ``canonical()`` and ``parse()`` round-trip exactly; the canonical
+    string is what manifests record and what process-world children are
+    handed, so it must stay stable across processes and hosts."""
+
+    scheme: str = "local"
+    endpoints: Tuple[str, ...] = ()
+    path: Optional[str] = None
+    namespace: str = ""
+    replicas: Optional[int] = None
+    cache: Optional[str] = None
+
+    def __post_init__(self):
+        # normalize Path-typed fields so equality/round-trip are exact
+        if self.path is not None and not isinstance(self.path, str):
+            object.__setattr__(self, "path", str(self.path))
+        if self.cache is not None and not isinstance(self.cache, str):
+            object.__setattr__(self, "cache", str(self.cache))
+        if not isinstance(self.endpoints, tuple):
+            object.__setattr__(self, "endpoints", tuple(self.endpoints))
+        if self.scheme == "local":
+            if not self.path:
+                raise ValueError("local StoreSpec needs a path")
+            if self.endpoints or self.cache or self.replicas is not None:
+                raise ValueError(
+                    "local StoreSpec takes no endpoints/cache/replicas")
+        elif self.scheme == "remote":
+            if not self.endpoints:
+                raise ValueError("remote StoreSpec needs endpoints")
+            for ep in self.endpoints:
+                if not _ENDPOINT.fullmatch(ep):
+                    raise ValueError(f"endpoint needs host:port, got {ep!r}")
+            if len(set(self.endpoints)) != len(self.endpoints):
+                raise ValueError(
+                    f"duplicate endpoints in {self.endpoints!r}")
+            if self.replicas is not None and self.replicas < 1:
+                raise ValueError(f"replicas must be >= 1, "
+                                 f"got {self.replicas}")
+        else:
+            raise ValueError(f"unknown store scheme {self.scheme!r}")
+        if self.namespace:
+            check_token(self.namespace, "namespace")
+
+    # ------------------------------------------------------------- parse
+    @classmethod
+    def parse(cls, spec) -> "StoreSpec":
+        """Resolve any accepted spec shape — a ``StoreSpec`` (returned
+        as-is), a ``remote://`` string (old single-endpoint strings
+        included), or a local path string/Path."""
+        if isinstance(spec, cls):
+            return spec
+        text = str(spec)
+        if not text.startswith("remote://"):
+            return cls(scheme="local", path=text)
+        rest = text[len("remote://"):]
+        cache: Optional[str] = None
+        replicas: Optional[int] = None
+        if "?" in rest:
+            rest, query = rest.split("?", 1)
+            for kv in query.split("&"):
+                k, _, v = kv.partition("=")
+                if k == "cache" and v:
+                    # percent-decoded: cache dirs are user paths and may
+                    # legally contain ``?``/``&`` (canonical() quotes)
+                    cache = urllib.parse.unquote(v)
+                elif k == "replicas" and v.isdigit():
+                    replicas = int(v)
+                else:
+                    raise ValueError(
+                        f"unknown spec parameter {kv!r} in {text!r}")
+        ns = ""
+        if "/" in rest:
+            rest, ns = rest.split("/", 1)
+        endpoints = tuple(e for e in rest.split(",") if e)
+        if not endpoints:
+            raise ValueError(f"spec needs host:port, got {text!r}")
+        return cls(scheme="remote", endpoints=endpoints, namespace=ns,
+                   replicas=replicas, cache=cache)
+
+    # --------------------------------------------------------- canonical
+    def canonical(self) -> str:
+        """The one string form of this spec; ``parse(canonical())`` is
+        the identity.  Local specs stay plain paths (manifests written
+        before StoreSpec remain byte-identical); remote specs list
+        endpoints in shard order with query keys in canonical
+        (alphabetical) order."""
+        if self.scheme == "local":
+            return self.path
+        out = "remote://" + ",".join(self.endpoints)
+        if self.namespace:
+            out += f"/{self.namespace}"
+        params = []
+        if self.cache:
+            params.append(
+                f"cache={urllib.parse.quote(self.cache, safe='/')}")
+        if self.replicas is not None:
+            params.append(f"replicas={self.replicas}")
+        if params:
+            out += "?" + "&".join(params)
+        return out
+
+    def __str__(self) -> str:
+        return self.canonical()
+
+    # ------------------------------------------------------- composition
+    def with_cache(self, cache: Optional[str | Path]) -> "StoreSpec":
+        """The same store seen through a local cache directory (the
+        migration destination / fresh-host shape)."""
+        return dataclasses.replace(
+            self, cache=str(cache) if cache is not None else None)
+
+    def without_cache(self) -> "StoreSpec":
+        """The portable form third-party readers use for fetch-on-miss —
+        what manifests record (another host must not try to create/pin
+        into the writer's cache path)."""
+        return dataclasses.replace(self, cache=None)
+
+    def with_namespace(self, namespace: str) -> "StoreSpec":
+        return dataclasses.replace(self, namespace=namespace)
+
+    def with_replicas(self, replicas: Optional[int]) -> "StoreSpec":
+        return dataclasses.replace(self, replicas=replicas)
+
+    @property
+    def sharded(self) -> bool:
+        return len(self.endpoints) > 1
 
 
 def _fresh_stats() -> Dict[str, int]:
@@ -68,11 +255,17 @@ class ChunkStoreBackend:
     root: Optional[Path] = None
 
     @property
-    def spec(self) -> str:
-        """Round-trippable description of this store: ``open_store(spec)``
-        in ANOTHER PROCESS builds an equivalent backend (the process world
-        hands it to rank children)."""
+    def spec_obj(self) -> StoreSpec:
+        """Structured description of this store; ``spec``/``fetch_spec``
+        are derived canonical strings."""
         raise NotImplementedError
+
+    @property
+    def spec(self) -> str:
+        """Round-trippable canonical description of this store:
+        ``open_store(spec)`` in ANOTHER PROCESS builds an equivalent
+        backend (the process world hands it to rank children)."""
+        return self.spec_obj.canonical()
 
     @property
     def fetch_spec(self) -> str:
@@ -80,7 +273,7 @@ class ChunkStoreBackend:
         what manifests record.  For a caching store this strips the
         writer-host-local cache directory (another host must not try to
         create/pin into the writer's path); defaults to ``spec``."""
-        return self.spec
+        return self.spec_obj.without_cache().canonical()
 
     def has(self, name: str) -> bool:
         raise NotImplementedError
@@ -124,11 +317,17 @@ class ChunkStoreBackend:
 
 
 def open_store(spec, default=None) -> "ChunkStoreBackend":
-    """Resolve a store spec to a backend:
+    """THE resolution point from a spec to a backend — every
+    ``ckpt_store=`` parameter in the system (``MPIJob``, ``restart``,
+    ``CheckpointManager``, ``migrate`` destinations, process-world
+    children) funnels through here:
 
       * an existing ``ChunkStoreBackend`` passes through untouched;
-      * ``"remote://host:port[/ns][?cache=DIR]"`` builds a
-        ``RemoteChunkStore`` (or ``CachingChunkStore`` with ``cache=``);
+      * a ``StoreSpec`` (or any string ``StoreSpec.parse`` accepts —
+        old ``remote://host:port[/ns][?cache=DIR]`` strings included)
+        builds the matching backend: ``RemoteChunkStore`` for one
+        endpoint, ``ShardedChunkStore`` for several, wrapped in a
+        ``CachingChunkStore`` when the spec carries a cache dir;
       * anything else is a local directory -> ``ChunkStore``.
 
     ``default`` is used when `spec` is None.  The CI remote-store leg
@@ -142,10 +341,11 @@ def open_store(spec, default=None) -> "ChunkStoreBackend":
         raise ValueError("no chunk store spec and no default")
     if isinstance(spec, ChunkStoreBackend):
         return spec
-    if isinstance(spec, str) and spec.startswith("remote://"):
+    sp = StoreSpec.parse(spec)
+    if sp.scheme == "remote":
         from repro.checkpoint.chunkservice import store_from_spec
-        return store_from_spec(spec)
-    return ChunkStore(spec)
+        return store_from_spec(sp)
+    return ChunkStore(sp.path)
 
 
 class ChunkReader:
@@ -204,6 +404,31 @@ class ChunkReader:
                 raise
             return fb.get(name)
 
+    def prefetch(self, names: Sequence[str]) -> int:
+        """Pull the restore working set down in bulk BEFORE the per-chunk
+        ``get`` calls: names that are neither locally present nor already
+        cached are fetched through the backend's batched ``get_many``
+        fan-out (one round trip per shard for a sharded store) and pinned
+        into its cache.  Returns the wire bytes fetched; 0 when the
+        backend has no ``prefetch`` (local stores) or is unreachable —
+        the per-chunk ladder in ``get`` remains the authority, so a
+        failed prefetch degrades to the old path instead of failing the
+        restore."""
+        store = self.store
+        fn = getattr(store, "prefetch", None)
+        if fn is None and self._spec:
+            store = self._spec_store()
+            fn = getattr(store, "prefetch", None)
+        if fn is None:
+            return 0
+        miss = [n for n in names if not self.path(n).is_file()]
+        if not miss:
+            return 0
+        try:
+            return fn(miss)
+        except ConnectionError:
+            return 0
+
     def sizes(self, names: Sequence[str]) -> Dict[str, Optional[int]]:
         """{name: readable size or None}; one batched query against the
         backend, the local directory covering whatever it misses (and
@@ -250,8 +475,8 @@ class ChunkStore(ChunkStoreBackend):
         self.stats = _fresh_stats()
 
     @property
-    def spec(self) -> str:
-        return str(self.root)
+    def spec_obj(self) -> StoreSpec:
+        return StoreSpec(scheme="local", path=str(self.root))
 
     # ------------------------------------------------------------------ io
     def path(self, name: str) -> Path:

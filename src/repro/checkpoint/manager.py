@@ -51,10 +51,12 @@ class CheckpointManager:
         #: manifest; the fault-tolerant driver bumps it on reshape
         self.generation = generation
         #: content-addressed store shared by every step this manager
-        #: writes: a backend instance, a ``remote://`` spec, or a path
-        #: (default: a local directory under the manager root).  With a
-        #: caching backend, saves upload only chunks the server lacks and
-        #: restores fetch only chunks the cache lacks (DESIGN.md §11).
+        #: writes: a backend instance, a ``StoreSpec``, any spec string
+        #: ``StoreSpec.parse`` accepts (``remote://`` single or sharded),
+        #: or a path (default: a local directory under the manager root).
+        #: With a caching backend, saves upload only chunks the server
+        #: lacks and restores fetch only chunks the cache lacks
+        #: (DESIGN.md §11, §15).
         self.store = chunkstore.open_store(store,
                                            default=self.root / "chunks")
         #: compress/write pool width (<=1 disables the parallel pipeline)
@@ -176,6 +178,13 @@ class CheckpointManager:
         total = (self.stats["last_bytes_uploaded"]
                  + self.stats["last_bytes_referenced_remote"])
         return self.stats["last_bytes_uploaded"] / total if total else 1.0
+
+    def store_health(self) -> Optional[list]:
+        """Per-shard health when the store is a sharded tier (endpoint,
+        up/down, cooldown, wire counters — DESIGN.md §15); None for
+        local and single-server stores."""
+        fn = getattr(self.store, "health", None)
+        return fn() if fn is not None else None
 
     # ---------------------------------------------------------------- restore
     def list_steps(self) -> List[int]:

@@ -575,6 +575,26 @@ def iter_restored_leaves(ckpt_dir: Path, man: dict, keys: Sequence[str],
     chunk_dir = man.get("chunk_dir", "chunks")
     reader = ChunkReader(ckpt_dir, man, store)
 
+    # restore working set: one batched prefetch pins every cache-missing
+    # chunk BEFORE the per-leaf gets — over a sharded store the set
+    # arrives from N servers concurrently (one get_many per shard per
+    # batch) instead of serializing on a single socket.  No-op for local
+    # stores; a failed prefetch degrades to the per-chunk ladder.
+    want = []
+    for key in keys:
+        for s in man["leaves"][key].get("shards", ()):
+            if "chunk" in s:
+                want.append(s["chunk"])
+    if want:
+        t0 = time.perf_counter()
+        fetched = reader.prefetch(want)
+        if stats is not None and fetched:
+            stats["restore_prefetch_bytes"] = (
+                stats.get("restore_prefetch_bytes", 0) + fetched)
+            stats["restore_prefetch_s"] = (
+                stats.get("restore_prefetch_s", 0.0)
+                + (time.perf_counter() - t0))
+
     def one(key: str):
         # per-job stats dict: pool threads must not race on the shared one
         st: dict = {}

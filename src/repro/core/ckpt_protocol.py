@@ -186,6 +186,10 @@ def load_rank_image(ckpt_dir: Path, rank: int, verify: bool = True,
     ent = man["ranks"][str(rank)]
     if "parts" in ent:                        # v3: content-addressed parts
         reader = chunkstore.ChunkReader(ckpt_dir, man, store)
+        # working set first: a leaf-split image on a cold cache fetches
+        # all its parts in batched get_many calls (per-shard fan-out for
+        # a sharded store) instead of one round trip per part
+        reader.prefetch([p["chunk"] for p in ent["parts"].values()])
         mpi = _read_part(reader, ent["parts"]["mpi"], verify)
         leaf_parts = {k[len("app/"):]: p for k, p in ent["parts"].items()
                       if k.startswith("app/")}

@@ -1014,7 +1014,10 @@ def _child_main(job, rank: int, port: int, n_steps: int,
 #: per-child memo of opened chunk-store backends: consecutive checkpoints
 #: against a remote store reuse one connection instead of re-dialing the
 #: chunk server every boundary (populated only after the fork — the
-#: parent never writes it, so nothing stale is inherited)
+#: parent never writes it, so nothing stale is inherited).  The key is
+#: the CANONICAL StoreSpec string the parent hands out via ``ckpt_info``
+#: — any spec kind ``open_store`` accepts, a sharded multi-endpoint one
+#: included (the child then dials every shard itself, DESIGN.md §15)
 _CHILD_STORES: Dict[str, Any] = {}
 
 

@@ -32,7 +32,7 @@ from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 from repro.checkpoint import chunkstore
-from repro.checkpoint.chunkstore import ChunkStoreBackend
+from repro.checkpoint.chunkstore import ChunkStoreBackend, StoreSpec
 from repro.core import rankloop
 from repro.core import recovery as _recovery
 from repro.core.api import MPI, remap_mpi_snapshot
@@ -143,8 +143,8 @@ class MPIJob:
                  heartbeat_timeout: float = 5.0,
                  membership: Optional[Membership] = None,
                  coord_timeout: float = 60.0,
-                 ckpt_store: Optional[str | Path | ChunkStoreBackend]
-                 = None):
+                 ckpt_store: Optional[str | Path | StoreSpec
+                                      | ChunkStoreBackend] = None):
         self.n = n_ranks
         self.step_fn = step_fn
         self.init_fn = init_fn
@@ -152,10 +152,12 @@ class MPIJob:
         #: shared content-addressed chunk store for incremental rank
         #: images: consecutive checkpoints (possibly in different dirs)
         #: reference unchanged payloads instead of rewriting them
-        #: (DESIGN.md §9).  A directory path, a ``remote://host:port``
-        #: chunk-service spec (with ``?cache=DIR`` for a local cache —
-        #: DESIGN.md §11), or a built backend.  None keeps every
-        #: checkpoint dir self-contained.
+        #: (DESIGN.md §9).  Anything ``chunkstore.open_store`` resolves:
+        #: a directory path, a ``StoreSpec``, a canonical spec string
+        #: (``remote://host:port[?cache=DIR]``, or the sharded
+        #: ``remote://h1:p1,h2:p2,...?replicas=R`` form — DESIGN.md §11,
+        #: §15), or a built backend.  None keeps every checkpoint dir
+        #: self-contained.
         self.ckpt_store = ckpt_store if ckpt_store else None
         self.coord = Coordinator(n_ranks, membership=membership,
                                  timeout=coord_timeout)
@@ -335,18 +337,27 @@ class MPIJob:
         return self.results
 
     # ------------------------------------------------------------ checkpoint
+    def _store_backend(self) -> Optional[ChunkStoreBackend]:
+        """THE job-level resolution point for ``ckpt_store``: every path
+        that needs the shared backend — checkpoint saves, restart image
+        loads, migration destinations — funnels through here, so the
+        str/Path/StoreSpec/backend handling lives in exactly one place
+        (``chunkstore.open_store``) and the job memoizes ONE backend for
+        its lifetime: a remote store keeps its connections + presence
+        knowledge across checkpoint boundaries (mirrors
+        procworld._child_store on the child side).  None when the job
+        has no shared store (self-contained checkpoint dirs)."""
+        if self.ckpt_store is None:
+            return None
+        if self._ckpt_store_obj is None:
+            self._ckpt_store_obj = chunkstore.open_store(self.ckpt_store)
+        return self._ckpt_store_obj
+
     def _prepare_ckpt(self, ckpt_dir: str | Path) -> None:
         self._ckpt_dir = Path(ckpt_dir)
-        if self.ckpt_store is not None:
-            # one backend for the job's lifetime: a remote store keeps its
-            # connection + presence knowledge across checkpoint boundaries
-            # (mirrors procworld._child_store on the child side)
-            if self._ckpt_store_obj is None:
-                self._ckpt_store_obj = chunkstore.open_store(self.ckpt_store)
-            self._ckpt_chunks = self._ckpt_store_obj
-        else:
-            self._ckpt_chunks = chunkstore.open_store(
-                None, default=self._ckpt_dir / "chunks")
+        self._ckpt_chunks = (self._store_backend()
+                             or chunkstore.open_store(
+                                 None, default=self._ckpt_dir / "chunks"))
         self._ckpt_meta = {}
 
     def checkpoint(self, ckpt_dir: str | Path, resume: bool = True) -> None:
@@ -430,15 +441,18 @@ class MPIJob:
         store = self._ckpt_chunks
         spec = (getattr(store, "fetch_spec", None)
                 or getattr(store, "spec", None))
-        remote_spec = str(spec) if (spec is not None and
-                                    str(spec).startswith("remote://")) \
-            else None
+        remote = None
+        if spec is not None:
+            sp = StoreSpec.parse(str(spec))
+            if sp.scheme == "remote":
+                remote = sp
+        remote_spec = remote.canonical() if remote is not None else None
         dest = None
-        if dest_cache is not None and remote_spec:
-            from repro.checkpoint.chunkservice import make_spec, parse_spec
-            host, port, ns, _ = parse_spec(remote_spec)
-            dest = chunkstore.open_store(make_spec(host, port, ns,
-                                                   dest_cache))
+        if dest_cache is not None and remote is not None:
+            # destination = the SAME store (endpoints, namespace,
+            # replication — sharded specs compose for free) seen through
+            # the new host's cache dir
+            dest = chunkstore.open_store(remote.with_cache(dest_cache))
         lease_id = f"migrate-{os.getpid()}-{os.urandom(3).hex()}"
         rounds: List[dict] = []
         prefetched: set = set()
@@ -472,13 +486,23 @@ class MPIJob:
                            "total_bytes": total})
             if dest is not None:
                 # warm the destination while the world runs: the join-time
-                # fetch then misses only the final delta
-                for name in sorted(chunks - prefetched):
+                # fetch then misses only the final delta.  Batched when
+                # the destination can (one get_many per shard per batch);
+                # per-name fallback otherwise.
+                fresh = sorted(chunks - prefetched)
+                pf = getattr(dest, "prefetch", None)
+                if pf is not None:
                     try:
-                        dest.get(name)
+                        pf(fresh)
                     except (OSError, KeyError):
                         pass
-                    prefetched.add(name)
+                else:
+                    for name in fresh:
+                        try:
+                            dest.get(name)
+                        except (OSError, KeyError):
+                            pass
+                prefetched.update(fresh)
             if staging is not None:
                 for r in ranks:
                     if r in entries:
@@ -662,8 +686,11 @@ class MPIJob:
     def stats(self) -> dict:
         """Operator-facing job statistics (DESIGN.md §12): coordinator FSM
         counters, the per-generation data-plane telemetry aggregate
-        (compute/wait split, bytes per fabric), and the straggler
-        tracker's per-rank wall/compute/wait report."""
+        (compute/wait split, bytes per fabric), the straggler tracker's
+        per-rank wall/compute/wait report, and — when the checkpoint
+        store is a sharded tier — per-shard health (DESIGN.md §15)."""
+        store = self._ckpt_chunks or self._ckpt_store_obj
+        health = getattr(store, "health", None)
         return {
             "transport": self.transport_name,
             "world_size": self.n,
@@ -674,6 +701,7 @@ class MPIJob:
             "stragglers": self.stragglers.report(),
             "ledger": (self.ledger.snapshot_stats()
                        if self.ledger is not None else None),
+            "ckpt_store": health() if health is not None else None,
         }
 
     def rank_pids(self) -> Dict[int, int]:
@@ -714,8 +742,9 @@ class MPIJob:
                 membership: Optional[Membership] = None,
                 heartbeat_timeout: float = 5.0,
                 coord_timeout: float = 60.0,
-                ckpt_store: Optional[str | Path | ChunkStoreBackend]
-                = None) -> "MPIJob":
+                ckpt_store: Optional[str | Path | StoreSpec
+                                     | ChunkStoreBackend] = None
+                ) -> "MPIJob":
         """Reconstruct a job from a checkpoint on ANY transport — and, when
         `world_size` / `dead_ranks` reshape the world, for ANY topology:
 
@@ -761,15 +790,15 @@ class MPIJob:
         sources: Dict[int, int] = {}
         images: Dict[int, RankImage] = {}    # grow clones reuse one load
         claimed: Set[int] = set()            # images whose obj is taken
-        # image reads route through the restart's store: on a fresh host
-        # (empty cache) only the parts the cache lacks are fetched from
-        # the chunk service; without a store the manifest's recorded spec
-        # still covers the local misses (DESIGN.md §11)
-        img_store = (chunkstore.open_store(ckpt_store)
-                     if ckpt_store is not None else None)
-        # the restored job's checkpoints reuse this backend (connection +
-        # presence knowledge already warm from the image loads)
-        job._ckpt_store_obj = img_store
+        # image reads route through the restart's store — resolved by the
+        # SAME job-level point the save path uses (_store_backend), so
+        # str/Path/StoreSpec/backend handling cannot diverge between save
+        # and restore.  On a fresh host (empty cache) only the parts the
+        # cache lacks are fetched from the chunk service; without a store
+        # the manifest's recorded canonical spec still covers the local
+        # misses (DESIGN.md §11).  The restored job's checkpoints reuse
+        # the backend (connection + presence knowledge already warm).
+        img_store = job._store_backend()
         for r in range(new_n):
             src = survivors[r % len(survivors)]
             sources[r] = src

@@ -42,6 +42,37 @@ it actually controlled:
                                    doubles per attempt, ±50% jitter so a
                                    fleet of ranks doesn't re-dial a
                                    restarting server in lockstep.
+  REPRO_CHUNK_OOB_MIN              chunk-service blobs at least this large
+                                   ride as pickle protocol-5 out-of-band
+                                   buffers (zero-copy scatter-gather) in
+                                   both wire directions; smaller ones are
+                                   cheaper in-band.  Default 64 KiB.
+  REPRO_CHUNK_LEASE_TTL_S          default TTL for a client's automatic
+                                   live-set lease on the server (default
+                                   600 s) — long enough to bridge several
+                                   save/gc rounds, short enough that a
+                                   dead client's pin drains on its own.
+  REPRO_CHUNK_PREFETCH_BATCH       chunks per get_many round trip when a
+                                   restore prefetches its working set
+                                   (default 32): bounds the size of any
+                                   one reply buffer, and for a sharded
+                                   store each batch fans out per shard.
+  REPRO_REPLICAS                   how many shard endpoints each chunk is
+                                   written to when a StoreSpec doesn't
+                                   say (default 2, clamped to the shard
+                                   count).  REPRO_SHARD_REPLICAS is an
+                                   accepted alias.
+  REPRO_SHARD_FANOUT               max concurrent per-shard requests one
+                                   ShardedChunkStore issues (default 8;
+                                   also clamped to the shard count).
+  REPRO_SHARD_RETRY_S              mark-down cooldown after a shard's
+                                   retry budget is exhausted (default
+                                   3 s): the shard is skipped — writes
+                                   degrade to surviving replicas, reads
+                                   fail over — until the cooldown
+                                   elapses and one probe re-tests it, so
+                                   a dead server costs one backoff
+                                   ladder, not one per chunk.
 """
 from __future__ import annotations
 
@@ -50,6 +81,24 @@ import os
 
 def env_bytes(name: str, default: int, aliases: tuple = ()) -> int:
     """Read a byte-count knob from the environment, first name wins."""
+    for key in (name,) + tuple(aliases):
+        raw = os.environ.get(key)
+        if raw is not None:
+            return int(raw)
+    return default
+
+
+def env_float(name: str, default: float, aliases: tuple = ()) -> float:
+    """Read a float knob from the environment, first name wins."""
+    for key in (name,) + tuple(aliases):
+        raw = os.environ.get(key)
+        if raw is not None:
+            return float(raw)
+    return default
+
+
+def env_int(name: str, default: int, aliases: tuple = ()) -> int:
+    """Read an integer knob from the environment, first name wins."""
     for key in (name,) + tuple(aliases):
         raw = os.environ.get(key)
         if raw is not None:
@@ -66,8 +115,19 @@ SHMRING_MIN_BYTES = env_bytes("REPRO_SHMRING_MIN_BYTES", 1 << 18,
 
 #: mid-collective recovery ledger (core/dataplane.py ContributionLedger)
 LEDGER_ENABLED = os.environ.get("REPRO_LEDGER", "1") != "0"
-LEDGER_MAX_OPS = int(os.environ.get("REPRO_LEDGER_OPS", 4))
+LEDGER_MAX_OPS = env_int("REPRO_LEDGER_OPS", 4)
 
 #: RemoteChunkStore reconnect policy (checkpoint/chunkservice.py)
-CHUNK_RETRIES = int(os.environ.get("REPRO_CHUNK_RETRIES", 4))
-CHUNK_RETRY_BASE_S = float(os.environ.get("REPRO_CHUNK_RETRY_BASE_S", 0.05))
+CHUNK_RETRIES = env_int("REPRO_CHUNK_RETRIES", 4)
+CHUNK_RETRY_BASE_S = env_float("REPRO_CHUNK_RETRY_BASE_S", 0.05)
+
+#: chunk-service wire crossover + lease/prefetch knobs (chunkservice.py)
+CHUNK_OOB_MIN = env_bytes("REPRO_CHUNK_OOB_MIN", 1 << 16)
+CHUNK_LEASE_TTL_S = env_float("REPRO_CHUNK_LEASE_TTL_S", 600.0)
+CHUNK_PREFETCH_BATCH = env_int("REPRO_CHUNK_PREFETCH_BATCH", 32)
+
+#: sharded chunk-store tier (checkpoint/chunkservice.py ShardedChunkStore)
+SHARD_REPLICAS = env_int("REPRO_REPLICAS", 2,
+                         aliases=("REPRO_SHARD_REPLICAS",))
+SHARD_FANOUT = env_int("REPRO_SHARD_FANOUT", 8)
+SHARD_RETRY_S = env_float("REPRO_SHARD_RETRY_S", 3.0)

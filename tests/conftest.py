@@ -20,6 +20,12 @@ sockets.  Each local path gets its own server NAMESPACE, so tests cannot
 observe each other through content dedup.  Explicit remote specs and
 prebuilt backends pass through untouched.
 
+REPRO_CKPT_STORE=sharded is the scale-out leg (DESIGN.md §15): THREE
+session ChunkServers, and every local store path becomes a caching
+ShardedChunkStore over all of them with replicas=2 — chunks spread
+across the shard set by digest, every put lands on two servers, and the
+suites exercise the fan-out/failover paths end to end.
+
 Per-test timeout: pytest-timeout when installed (CI installs it); a
 SIGALRM fallback otherwise — a hung or orphaned rank process fails the
 test instead of stalling the runner for the job timeout.  A session-end
@@ -37,7 +43,7 @@ _FORCED = os.environ.get("REPRO_TRANSPORT") or None
 _FORCED_STORE = os.environ.get("REPRO_CKPT_STORE") or None
 _TIMEOUT = float(os.environ.get("REPRO_TEST_TIMEOUT", "120"))
 _PIN = threading.local()
-_CHUNK_SERVER = None
+_CHUNK_SERVERS = []
 
 
 @contextlib.contextmanager
@@ -99,22 +105,26 @@ def _install_transport_override():
 
 
 def _install_store_override():
-    """REPRO_CKPT_STORE=remote: run the checkpoint suites against a real
-    chunk service.  One session ChunkServer; every local store path is
-    rerouted to a CachingChunkStore over it, namespaced by the path (so
-    two tests writing content-identical state cannot dedup against each
-    other's uploads, and a ckpt_store reused across restarts WITHIN a
-    test keeps its namespace)."""
-    global _CHUNK_SERVER
+    """REPRO_CKPT_STORE=remote|sharded: run the checkpoint suites against
+    a real chunk service.  One session ChunkServer (remote) or three with
+    replicas=2 (sharded); every local store path is rerouted to a caching
+    backend over it, namespaced by the path (so two tests writing
+    content-identical state cannot dedup against each other's uploads,
+    and a ckpt_store reused across restarts WITHIN a test keeps its
+    namespace)."""
     import hashlib
     import tempfile
     from repro.checkpoint import chunkservice, chunkstore
-    if _FORCED_STORE != "remote":
+    if _FORCED_STORE not in ("remote", "sharded"):
         raise pytest.UsageError(
             f"REPRO_CKPT_STORE={_FORCED_STORE!r} not understood "
-            f"(only 'remote')")
-    backing = tempfile.mkdtemp(prefix="repro-chunkserver-")
-    _CHUNK_SERVER = chunkservice.ChunkServer(backing).start()
+            f"(only 'remote' or 'sharded')")
+    n_servers = 3 if _FORCED_STORE == "sharded" else 1
+    replicas = 2 if _FORCED_STORE == "sharded" else None
+    for _ in range(n_servers):
+        backing = tempfile.mkdtemp(prefix="repro-chunkserver-")
+        _CHUNK_SERVERS.append(chunkservice.ChunkServer(backing).start())
+    endpoints = tuple(f"{s.host}:{s.port}" for s in _CHUNK_SERVERS)
     orig_open = chunkstore.open_store
 
     def forced_open(spec, default=None):
@@ -123,7 +133,10 @@ def _install_store_override():
             return store            # explicit remote/caching: untouched
         ns = hashlib.blake2b(str(store.root.resolve()).encode(),
                              digest_size=8).hexdigest()
-        return orig_open(_CHUNK_SERVER.spec_for(ns, cache=store.root))
+        sp = chunkstore.StoreSpec(scheme="remote", endpoints=endpoints,
+                                  namespace=ns, replicas=replicas,
+                                  cache=str(store.root))
+        return orig_open(sp)
 
     chunkstore.open_store = forced_open
 
@@ -139,10 +152,10 @@ def pytest_configure(config):
 
 
 def pytest_unconfigure(config):
-    if _CHUNK_SERVER is not None:
-        _CHUNK_SERVER.stop()
-        import shutil
-        shutil.rmtree(_CHUNK_SERVER.root, ignore_errors=True)
+    import shutil
+    for srv in _CHUNK_SERVERS:
+        srv.stop()
+        shutil.rmtree(srv.root, ignore_errors=True)
 
 
 def pytest_collection_modifyitems(config, items):

@@ -7,12 +7,20 @@ acceptance scenario — an elastic restart into an EMPTY cache dir ("new
 host") that transfers only the chunks the cache lacks, bit-identical to
 the local-store path — and real SIGKILL fault injection mid-chunk-upload
 in the process world.
+
+The sharded tier (DESIGN.md §15) is covered at the bottom: digest-ring
+placement and replication across three servers, failover reads and
+degraded writes past a dead shard, mark-down/cooldown/rejoin, the
+presence-vs-validation asymmetry under outage, and the PR acceptance
+scenario — a replica ChunkServer (a real OS process) SIGKILLed mid-save
+without failing the upload or losing the checkpoint.
 """
 import os
 import pickle
 import signal
 import socket
 import struct
+import threading
 import time
 from pathlib import Path
 
@@ -25,7 +33,8 @@ from repro.checkpoint import chunkservice, chunkstore
 from repro.checkpoint.chunkservice import (CHUNK_PROTOCOL_VERSION,
                                            CachingChunkStore,
                                            ChunkServer, ChunkServiceError,
-                                           RemoteChunkStore, make_spec,
+                                           RemoteChunkStore,
+                                           ShardedChunkStore, make_spec,
                                            parse_spec)
 from repro.checkpoint.chunkstore import content_digest
 from repro.checkpoint.manager import CheckpointManager
@@ -619,6 +628,313 @@ def test_proc_rank_sigkill_mid_chunk_upload_leaves_no_partial(tmp_path,
         assert man8["n_ranks"] == n - 1 and man8["generation"] == 1
     finally:
         server.stop()
+
+
+# ------------------------------------------- sharded store (checkpoint CDN)
+
+@pytest.fixture
+def shard_servers(tmp_path):
+    srvs = [ChunkServer(tmp_path / f"srv{i}").start() for i in range(3)]
+    yield srvs
+    for s in srvs:
+        s.stop()
+
+
+def _sharded(servers, ns="", replicas=2, cache=None):
+    sp = chunkstore.StoreSpec(
+        scheme="remote",
+        endpoints=tuple(f"{s.host}:{s.port}" for s in servers),
+        namespace=ns, replicas=replicas,
+        cache=None if cache is None else str(cache))
+    return chunkstore.open_store(sp)
+
+
+def _fixed_chunks(prefix, count, width=50):
+    """Deterministic content -> deterministic digests -> deterministic
+    shard placement: a test that passes once passes always."""
+    return dict(_chunk(f"{prefix}-{k}".encode() * width)
+                for k in range(count))
+
+
+def test_sharded_placement_replication_and_balance(shard_servers):
+    st = _sharded(shard_servers, "place")
+    assert isinstance(st, ShardedChunkStore) and st.replicas == 2
+    chunks = _fixed_chunks("place", 30)
+    for name, blob in chunks.items():
+        assert st.put(name, blob)
+        assert not st.put(name, blob)        # second offer: a reference
+    # placement is a pure ring function of the digest: each chunk sits on
+    # EXACTLY its R replica servers, nothing anywhere else
+    backing = [s.backing("place") for s in shard_servers]
+    for name in chunks:
+        want = set(st._replica_ids(name))
+        got = {i for i, b in enumerate(backing) if b.has(name)}
+        assert got == want, name
+    # blake2b is uniform: 30 chunks x 2 replicas land on every shard
+    assert all(b.list_chunks() for b in backing)
+    assert sum(len(b.list_chunks()) for b in backing) == 2 * len(chunks)
+    assert st.get_many(list(chunks)) == chunks
+    assert st.has_many(list(chunks)) == {n: len(b)
+                                         for n, b in chunks.items()}
+    assert st.stats["degraded_puts"] == 0
+    assert st.stats["replicas"] == 2 and st.stats["shards"] == 3
+
+
+def test_sharded_failover_read_and_degraded_put(shard_servers):
+    st = _sharded(shard_servers, "fail")
+    chunks = _fixed_chunks("fail", 30)
+    assert {st._home(n) for n in chunks} == {0, 1, 2}
+    for n, b in chunks.items():
+        st.put(n, b)
+    victim = 1
+    shard_servers[victim].stop()
+    # every chunk still reads: the victim's copies fail over to the ring
+    # neighbor (R=2 over 3 shards — one dead shard always leaves a copy)
+    for n, b in chunks.items():
+        assert st.get(n) == b
+    assert st.stats["failover_reads"] > 0
+    health = {h["endpoint"]: h for h in st.health()}
+    ep = st.shards[victim].endpoint
+    assert not health[ep]["up"] and health[ep]["cooldown_s"] > 0
+    assert all(h["up"] for e, h in health.items() if e != ep)
+    # a NEW put whose replica set covers the dead shard still succeeds:
+    # degraded to the surviving copies instead of failing the save
+    before = st.stats["chunks_written"]
+    fresh = _fixed_chunks("fresh", 8)
+    for n, b in fresh.items():
+        assert st.put(n, b)
+    assert st.stats["chunks_written"] == before + len(fresh)
+    assert st.stats["degraded_puts"] > 0
+    assert st.stats["shards_down"] == 1
+    assert st.get_many(list(fresh)) == fresh
+
+
+def test_sharded_presence_vs_validation_under_outage(shard_servers):
+    st = _sharded(shard_servers, "sem")
+    name, blob = _chunk(b"present" * 64)
+    st.put(name, blob)
+    ghost, _ = _chunk(b"never-written" * 64)
+    # all shards up: a missing name is DEFINITIVELY missing
+    assert st.sizes([name, ghost]) == {name: len(blob), ghost: None}
+    shard_servers[0].stop()
+    shard_servers[1].stop()
+    # presence (the upload decision) treats an unreachable shard as
+    # "holds nothing" — worst case is an idempotent re-upload
+    assert ghost not in st.has_many([name, ghost])
+    # the validation view must refuse to call an unresolvable name
+    # "missing": gc DELETES on that answer
+    with pytest.raises(ChunkServiceError):
+        st.sizes([ghost])
+
+
+def test_sharded_mark_down_cooldown_and_rejoin(tmp_path, monkeypatch):
+    from repro.core import tunables
+    monkeypatch.setattr(tunables, "SHARD_RETRY_S", 0.2)
+    srvs = [ChunkServer(tmp_path / f"s{i}").start() for i in range(3)]
+    try:
+        st = _sharded(srvs, "bounce")
+        chunks = _fixed_chunks("bounce", 20)
+        for n, b in chunks.items():
+            st.put(n, b)
+        victim = 2
+        port = srvs[victim].port
+        srvs[victim].stop()
+        for n, b in chunks.items():          # first failure marks it down
+            assert st.get(n) == b
+        assert st.stats["shards_down"] == 1
+        # bounce it back on the same port (supervisor respawn): after the
+        # cooldown ONE op probes it and the shard rejoins the ring
+        srvs[victim] = ChunkServer(tmp_path / f"s{victim}",
+                                   port=port).start()
+        deadline = time.time() + 10
+        while st.stats["shards_down"] and time.time() < deadline:
+            time.sleep(0.05)
+            st.has_many(list(chunks))        # ordinary ops carry the probe
+        assert st.stats["shards_down"] == 0
+        assert all(h["up"] for h in st.health())
+        # replica copies were on disk all along: it serves again
+        assert st.get_many(list(chunks)) == chunks
+    finally:
+        for s in srvs:
+            s.stop()
+
+
+def test_sharded_gc_is_lease_only_and_gc_remote_sweeps_all_shards(
+        shard_servers):
+    st = _sharded(shard_servers, "gc")
+    live, lb = _chunk(b"live" * 60)
+    dead, db = _chunk(b"dead" * 60)
+    st.put(live, lb)
+    st.put(dead, db)
+    assert st.gc([live]) == 0                # removes nothing; leases live
+    assert "chunks" in next(iter(st.leases().values()))
+    # the lease landed on EVERY shard, so another client's sweep can
+    # only collect the unleased chunk's replica copies (R=2 -> 2 files)
+    other = _sharded(shard_servers, "gc")
+    assert other.gc_remote([]) == 2
+    assert st.has(live) and not st.has(dead)
+    assert st.unlease()
+    assert other.gc_remote([]) == 2
+    assert not st.has(live)
+
+
+def test_sharded_spec_round_trips_through_open_store(tmp_path,
+                                                     shard_servers):
+    eps = ",".join(f"{s.host}:{s.port}" for s in shard_servers)
+    st = chunkstore.open_store(f"remote://{eps}/ns1?replicas=2")
+    assert isinstance(st, ShardedChunkStore)
+    assert st.spec == f"remote://{eps}/ns1?replicas=2"
+    assert st.spec_obj.sharded
+    # caching composition: cache rides the spec; fetch_spec strips it
+    # (the manifest-recorded form must be portable across hosts)
+    caching = chunkstore.open_store(
+        st.spec_obj.with_cache(tmp_path / "c").canonical())
+    assert isinstance(caching, CachingChunkStore)
+    assert isinstance(caching.remote, ShardedChunkStore)
+    assert "cache=" in caching.spec and "cache=" not in caching.fetch_spec
+    # what a procworld child receives (the canonical string) re-opens an
+    # equivalent backend
+    again = chunkstore.open_store(caching.spec)
+    assert isinstance(again, CachingChunkStore)
+    assert again.remote.endpoints == st.endpoints
+    assert again.remote.replicas == 2
+
+
+def test_sharded_caching_prefetch_pins_working_set(tmp_path, shard_servers):
+    writer = _sharded(shard_servers, "pre")
+    chunks = _fixed_chunks("pre", 10, width=200)
+    for n, b in chunks.items():
+        writer.put(n, b)
+    reader = _sharded(shard_servers, "pre", cache=tmp_path / "cache")
+    assert isinstance(reader, CachingChunkStore)
+    total = sum(len(b) for b in chunks.values())
+    assert reader.prefetch(list(chunks)) == total      # wire bytes moved
+    assert reader.stats["chunks_prefetched"] == len(chunks)
+    assert all(reader.cache.has(n) for n in chunks)
+    before = reader.stats["bytes_fetched"]
+    assert {n: reader.get(n) for n in chunks} == chunks
+    assert reader.stats["bytes_fetched"] == before     # all local now
+    assert reader.prefetch(list(chunks)) == 0          # idempotent
+
+
+def test_manager_over_sharded_store_restores_and_reports_health(
+        tmp_path, shard_servers):
+    import jax
+    state = _leaves()
+    tpl = jax.eval_shape(lambda: state)
+    sp = chunkstore.StoreSpec(
+        scheme="remote",
+        endpoints=tuple(f"{s.host}:{s.port}" for s in shard_servers),
+        namespace="mgr", replicas=2, cache=str(tmp_path / "hostA"))
+    mgr = CheckpointManager(tmp_path / "root", async_write=False, store=sp)
+    mgr.save(1, state)
+    health = mgr.store_health()
+    assert health is not None and len(health) == 3
+    assert all(h["up"] for h in health)
+    mgr_local = CheckpointManager(tmp_path / "local", async_write=False)
+    mgr_local.save(1, state)
+    ref, _ = mgr_local.restore(tpl)
+    # "fresh host" with one shard DARK: empty cache, restore rides the
+    # two survivors — still bit-identical
+    shard_servers[0].stop()
+    mgr_b = CheckpointManager(tmp_path / "root", async_write=False,
+                              store=sp.with_cache(tmp_path / "hostB"))
+    out, meta = mgr_b.restore(tpl)
+    assert meta["step"] == 1
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert sum(1 for h in mgr_b.store_health() if not h["up"]) == 1
+
+
+# --------------------- acceptance: replica SIGKILLed mid-save (real procs)
+
+def _serve_until_killed(root, q):
+    srv = ChunkServer(root).start()
+    q.put(srv.port)
+    threading.Event().wait()                 # parked until SIGKILL
+
+
+def _spawn_shard_server(root):
+    import multiprocessing
+    ctx = multiprocessing.get_context("fork")
+    q = ctx.Queue()
+    p = ctx.Process(target=_serve_until_killed, args=(root, q), daemon=True)
+    p.start()
+    return p, q.get(timeout=30)
+
+
+@pytest.mark.parametrize("target", ["shm", "proc"])
+def test_sharded_replica_sigkill_mid_save_degrades_not_fails(tmp_path,
+                                                             target):
+    """The PR acceptance scenario: one replica ChunkServer — a real OS
+    process — is SIGKILLed while a save is streaming chunks into the
+    shard set.  The save must neither fail nor lose the checkpoint
+    (every chunk keeps a live ring-neighbor copy at R=2), and a LATER
+    checkpoint with the shard still dark commits degraded instead of
+    erroring — on the thread and process substrates alike."""
+    n, ns = 3, "kill"
+    procs, ports, roots = [], [], []
+    for i in range(3):
+        root = tmp_path / f"srv{i}"
+        p, port = _spawn_shard_server(root)
+        procs.append(p)
+        ports.append(port)
+        roots.append(root)
+    victim = 2
+    killed = threading.Event()
+
+    def _assassin():
+        # fire the moment the save starts streaming (first chunk file
+        # lands on ANY shard) — a kill -9 in the middle of the fan-out
+        deadline = time.time() + 90
+        while time.time() < deadline and not killed.is_set():
+            if any(f.is_file() and not f.name.endswith(".tmp")
+                   for r in roots for f in r.rglob("*")):
+                os.kill(procs[victim].pid, signal.SIGKILL)
+                killed.set()
+                return
+            time.sleep(0.002)
+
+    try:
+        sp = chunkstore.StoreSpec(
+            scheme="remote",
+            endpoints=tuple(f"127.0.0.1:{pt}" for pt in ports),
+            namespace=ns, replicas=2, cache=str(tmp_path / "cache"))
+        init_fn, step_fn = _pingpong_app()
+        ck1, ck2 = tmp_path / "ck1", tmp_path / "ck2"
+        hit = threading.Thread(target=_assassin, daemon=True)
+        hit.start()
+        with exact_transports():
+            job = MPIJob(n, step_fn, init_fn, transport=target,
+                         ckpt_store=sp)
+        job.checkpoint_at(4, ck1, resume=False)
+        job.run(8, timeout=90)
+        job.stop()
+        hit.join(90)
+        assert killed.is_set(), "the victim replica must have been shot"
+        # nothing lost: the checkpoint deep-validates through the full
+        # 3-endpoint spec with one endpoint dark (reads fail over)
+        fresh = chunkstore.open_store(sp.without_cache())
+        assert checkpoint_valid(ck1, store=fresh, deep=True)
+        # the manifest pins the portable spec (endpoints + replicas)
+        assert load_manifest(ck1)["store"] == sp.without_cache().canonical()
+        # and a restart checkpoints AGAIN with the shard still dead: a
+        # degraded write, not a failed upload
+        with exact_transports():
+            job2 = MPIJob.restart(ck1, step_fn, init_fn, transport=target,
+                                  ckpt_store=sp)
+        job2.checkpoint_at(6, ck2, resume=False)
+        out = job2.run(8, timeout=90)
+        assert len(out) == n
+        if target == "shm":                  # parent-side store visible
+            health = job2.stats().get("ckpt_store")
+            assert health and sum(1 for h in health if not h["up"]) == 1
+        job2.stop()
+        assert checkpoint_valid(ck2, store=fresh, deep=True)
+    finally:
+        for p in procs:
+            p.kill()
+            p.join(5)
 
 
 def test_remote_store_fork_safe_lazy_reconnect(server):
