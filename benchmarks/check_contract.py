@@ -41,6 +41,13 @@ CI runners are noise):
     (3x full size), the always-on ledger pin must cost at most the
     committed fraction over a tight allreduce loop, and the recovered
     survivors' state must be bit-identical to the unfaulted control's.
+  * observability (BENCH_observability.json, DESIGN.md 16): tracing is
+    on by default, so the flight recorder's cost over a tight allreduce
+    loop must stay at most the committed fraction (5% full size, a
+    loose smoke ceiling — ~65ms smoke legs are noise-dominated), and
+    the dump+merge round trip must be exactly 1.0 (parent ids resolve,
+    timestamps sorted — deterministic, any other value means the
+    dump/merge wiring broke).
 """
 from __future__ import annotations
 
@@ -190,6 +197,19 @@ def main() -> None:
     if val is not None:
         check("midstep_recovery/recovered_step_bit_identical",
               val == rcc["bit_identical_required"], f"{val}")
+
+    obs = json.loads((REPO / "BENCH_observability.json").read_text())
+    oc = obs["contract"]
+    val = rows.get("observability/trace_overhead_fraction")
+    if val is not None:
+        ceiling = oc["ci_smoke_trace_overhead_fraction_max" if smoke
+                     else "trace_overhead_fraction_max"]
+        check("observability/trace_overhead_fraction", val <= ceiling,
+              f"{val:.4f} (ceiling {ceiling}{' [smoke]' if smoke else ''})")
+    val = rows.get("observability/dump_merge_ok")
+    if val is not None:
+        check("observability/dump_merge_ok",
+              val == oc["dump_merge_required"], f"{val}")
 
     missing = [n for n, v in (("proxied_roundtrip", fresh_rt),
                               ("delta_write_fraction", fresh_frac))

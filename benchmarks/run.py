@@ -17,8 +17,9 @@ from benchmarks import common
 from benchmarks import (bench_allreduce, bench_ckpt_manager,
                         bench_ckpt_overhead, bench_ckpt_pipeline,
                         bench_data_plane, bench_drain, bench_live_migrate,
-                        bench_midstep_recovery, bench_proxy_overhead,
-                        bench_remote_store, bench_restart, bench_roofline)
+                        bench_midstep_recovery, bench_observability,
+                        bench_proxy_overhead, bench_remote_store,
+                        bench_restart, bench_roofline)
 
 SUITES = {
     "drain": bench_drain.run,
@@ -32,6 +33,7 @@ SUITES = {
     "remote_store": bench_remote_store.run,
     "live_migrate": bench_live_migrate.run,
     "midstep_recovery": bench_midstep_recovery.run,
+    "observability": bench_observability.run,
     "roofline": bench_roofline.run,
 }
 

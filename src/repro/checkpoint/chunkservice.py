@@ -79,6 +79,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.chunkstore import (ChunkStore, ChunkStoreBackend,
                                          StoreSpec, check_token)
+from repro.core import trace as _trace
 from repro.core import tunables
 from repro.core.transport import (dumps_parts, loads_body, read_frame_mv,
                                   write_frame_parts)
@@ -322,8 +323,12 @@ class ChunkServer:
                             f"client speaks chunk protocol v{version}, "
                             f"server v{CHUNK_PROTOCOL_VERSION}")
                     store = self.backing(ns)
-                    results = [self._execute(ns, store, cmd, args)
-                               for cmd, args in cmds]
+                    with _trace.span(
+                            "chunkserver.req", cat="chunkservice",
+                            args={"ns": ns, "n": len(cmds),
+                                  "cmd": cmds[0][0] if cmds else None}):
+                        results = [self._execute(ns, store, cmd, args)
+                                   for cmd, args in cmds]
                     reply = (True, results)
                 except Exception as e:      # noqa: BLE001 - shipped back
                     reply = (False, e)
@@ -547,7 +552,13 @@ class RemoteChunkStore(ChunkStoreBackend):
 
     def _request(self, cmds: Sequence[tuple]) -> list:
         attempts = max(1, int(tunables.CHUNK_RETRIES))
-        with self._lock:
+        # chunk.rpc span: thread-local parenting nests it under whatever
+        # span issued the store call — a rank child's rank.save_image, the
+        # driver's ckptmgr.write — so uploads land on the save's timeline
+        with _trace.span("chunk.rpc", cat="chunk",
+                         args={"n": len(cmds),
+                               "cmd": cmds[0][0] if cmds else None}), \
+                self._lock:
             for attempt in range(attempts):
                 try:
                     blob = self._attempt(cmds)

@@ -34,6 +34,8 @@ import jax
 from repro.checkpoint import chunkstore
 from repro.checkpoint import serialization as ser
 from repro.checkpoint.resharding import restore_resharded
+from repro.core import metrics as _metrics
+from repro.core import trace as _trace
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -68,22 +70,28 @@ class CheckpointManager:
         #: manifest commits (and gc protects every retained manifest's
         #: chunks), so _gc never re-validates a known-valid dir
         self._known_valid: set = set()
-        self.stats = {"saves": 0, "drain_s": 0.0, "snapshot_s": 0.0,
-                      "write_s": 0.0, "gc_removed": 0,
-                      # pipeline stage timings (summed across pool threads)
-                      "hash_s": 0.0, "compress_s": 0.0, "io_s": 0.0,
-                      # incremental accounting, cumulative and per-save
-                      "bytes_written": 0, "bytes_referenced": 0,
-                      "last_bytes_written": 0, "last_bytes_referenced": 0,
-                      "chunks_gc_removed": 0,
-                      # cross-host transfer accounting (networked stores;
-                      # zero for local): wire bytes actually shipped vs
-                      # wire bytes the server already held
-                      "last_bytes_uploaded": 0,
-                      "last_bytes_referenced_remote": 0,
-                      # restore pipeline stage timings
-                      "restores": 0, "restore_io_s": 0.0,
-                      "restore_decompress_s": 0.0, "restore_device_s": 0.0}
+        #: metrics registry group (DESIGN.md §16): same mapping API the
+        #: ad-hoc dict had — tests index it, serialization.py read-modify-
+        #: writes stage timings into it — but every mutation is atomic
+        #: under the group lock and ``snapshot()`` is one consistent view
+        self.stats = _metrics.MetricGroup(
+            "ckpt_manager",
+            {"saves": 0, "drain_s": 0.0, "snapshot_s": 0.0,
+             "write_s": 0.0, "gc_removed": 0,
+             # pipeline stage timings (summed across pool threads)
+             "hash_s": 0.0, "compress_s": 0.0, "io_s": 0.0,
+             # incremental accounting, cumulative and per-save
+             "bytes_written": 0, "bytes_referenced": 0,
+             "last_bytes_written": 0, "last_bytes_referenced": 0,
+             "chunks_gc_removed": 0,
+             # cross-host transfer accounting (networked stores;
+             # zero for local): wire bytes actually shipped vs
+             # wire bytes the server already held
+             "last_bytes_uploaded": 0,
+             "last_bytes_referenced_remote": 0,
+             # restore pipeline stage timings
+             "restores": 0, "restore_io_s": 0.0,
+             "restore_decompress_s": 0.0, "restore_device_s": 0.0})
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, meta: Optional[dict] = None) -> Path:
@@ -91,13 +99,18 @@ class CheckpointManager:
         The manifest meta records the SOURCE world (device count + mesh
         when the caller provides one) and the membership generation, so a
         later elastic restore can report the topology change."""
+        save_span = _trace.begin("ckptmgr.save", cat="ckpt",
+                                 generation=self.generation,
+                                 args={"step": step})
         t0 = time.time()
-        jax.block_until_ready(state)          # drain dispatched computation
-        self.wait()                           # drain the previous async write
+        with _trace.span("ckptmgr.drain", parent=save_span, cat="ckpt"):
+            jax.block_until_ready(state)      # drain dispatched computation
+            self.wait()                       # drain the previous async write
         self.stats["drain_s"] += time.time() - t0
 
         t0 = time.time()
-        host_state = ser.snapshot_to_host(state)   # sync copy: donation-safe
+        with _trace.span("ckptmgr.snapshot", parent=save_span, cat="ckpt"):
+            host_state = ser.snapshot_to_host(state)  # sync: donation-safe
         self.stats["snapshot_s"] += time.time() - t0
 
         ckpt_dir = self.root / f"step_{step:010d}"
@@ -112,15 +125,22 @@ class CheckpointManager:
             u0 = self.store.stats.get("bytes_uploaded", 0)
             rr0 = self.store.stats.get("bytes_referenced_remote", 0)
             try:
-                ser.save_shards(ckpt_dir, host_state, meta=meta,
-                                store=self.store,
-                                workers=self.writer_threads,
-                                stats=self.stats)
+                # context-manager span: runs on the ckpt-writer thread, so
+                # the explicit parent handle (not the spawning thread's
+                # stack) links it under the save — and chunk-store RPC
+                # spans inside save_shards nest under it in turn
+                with _trace.span("ckptmgr.write", parent=save_span,
+                                 cat="ckpt", args={"step": step}):
+                    ser.save_shards(ckpt_dir, host_state, meta=meta,
+                                    store=self.store,
+                                    workers=self.writer_threads,
+                                    stats=self.stats)
             except BaseException as e:  # surfaced on next wait()
                 # NO gc: it would run against a partial dir, and must not
                 # get a chance to touch the previous valid checkpoint
                 self._last_error = e
                 self.stats["write_s"] += time.time() - t1
+                save_span.end(outcome="failed", error=type(e).__name__)
                 return
             self.stats["write_s"] += time.time() - t1
             # last_* deltas describe the last COMPLETED save only — a
@@ -140,6 +160,10 @@ class CheckpointManager:
                 self._gc()
             except BaseException as e:
                 self._last_error = e
+            save_span.end(
+                outcome="ok",
+                bytes_written=self.stats["last_bytes_written"],
+                bytes_referenced=self.stats["last_bytes_referenced"])
 
         self.stats["saves"] += 1
         if self.async_write:
@@ -218,11 +242,13 @@ class CheckpointManager:
         checkpoint is served (the pre-chunk-store 'corrupt ones skipped'
         guarantee).  An explicit `ckpt_dir` still raises."""
         if ckpt_dir is not None:
-            state = restore_resharded(ckpt_dir, template, shardings,
-                                      mesh=mesh, rules=rules,
-                                      store=self.store,
-                                      workers=self.writer_threads,
-                                      stats=self.stats)
+            with _trace.span("ckptmgr.restore", cat="ckpt",
+                             args={"dir": ckpt_dir.name}):
+                state = restore_resharded(ckpt_dir, template, shardings,
+                                          mesh=mesh, rules=rules,
+                                          store=self.store,
+                                          workers=self.writer_threads,
+                                          stats=self.stats)
             self.stats["restores"] += 1
             return state, ser.load_manifest(ckpt_dir).get("meta", {})
         for step in reversed(self.list_steps()):
@@ -230,10 +256,13 @@ class CheckpointManager:
             if not ser.validate(d, store=self.store):
                 continue
             try:
-                state = restore_resharded(d, template, shardings, mesh=mesh,
-                                          rules=rules, store=self.store,
-                                          workers=self.writer_threads,
-                                          stats=self.stats)
+                with _trace.span("ckptmgr.restore", cat="ckpt",
+                                 args={"dir": d.name}):
+                    state = restore_resharded(d, template, shardings,
+                                              mesh=mesh, rules=rules,
+                                              store=self.store,
+                                              workers=self.writer_threads,
+                                              stats=self.stats)
             except (OSError, zlib.error, RuntimeError, ValueError):
                 # payload-level corruption the fast validate can't see
                 # (digest mismatch, truncated codec stream): skip this dir

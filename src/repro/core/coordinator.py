@@ -19,7 +19,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import metrics as _metrics
 from repro.core import recovery as _recovery
+from repro.core import trace as _trace
 
 
 PHASE_RUN = "run"
@@ -114,15 +116,27 @@ class Coordinator:
         self._barrier_count = 0
         self._finished: set = set()
         self.aborted: Optional[str] = None
-        self.stats = {"drain_rounds": 0, "drain_wall_s": 0.0,
-                      "drained_messages": 0, "checkpoints": 0,
-                      "counter_reports": 0, "empty_channel_snapshots": 0,
-                      "stale_rejected": 0,
-                      "migrations": 0, "migrate_rounds": 0,
-                      "migrate_pause_s": 0.0,
-                      "recoveries": 0, "recovery_wall_s": 0.0,
-                      "recovered_ops": 0, "rerun_ops": 0,
-                      "recovery_cancelled": 0}
+        # registry-backed, individually locked: dict(coord.stats) and
+        # stats["k"] += 1 keep working, but snapshot() is one consistent
+        # view no matter which rank threads are bumping counters
+        self.stats = _metrics.MetricGroup("coordinator", {
+            "drain_rounds": 0, "drain_wall_s": 0.0,
+            "drained_messages": 0, "checkpoints": 0,
+            "counter_reports": 0, "empty_channel_snapshots": 0,
+            "stale_rejected": 0,
+            "migrations": 0, "migrate_rounds": 0,
+            "migrate_pause_s": 0.0,
+            "recoveries": 0, "recovery_wall_s": 0.0,
+            "recovered_ops": 0, "rerun_ops": 0,
+            "recovery_cancelled": 0})
+        # flight-recorder span handles for the in-flight checkpoint round
+        # and recovery epoch; phase sub-spans nest under the round/epoch
+        # root, and the root's ctx is what trace_ctx() piggybacks to
+        # rank children over the wire (DESIGN.md §16)
+        self._ckpt_span = None
+        self._ckpt_phase_span = None
+        self._rec_span = None
+        self._rec_phase_span = None
         # ---- mid-collective recovery state (DESIGN.md §14): the active
         # epoch's sub-FSM (collect -> quiesce -> patch -> resume), the
         # ledger consulted for retained contributions, and the outcome log
@@ -165,6 +179,46 @@ class Coordinator:
                 self.stats["stale_rejected"] += 1
             raise
 
+    # ---- tracing ------------------------------------------------------------
+    def trace_ctx(self) -> Optional[tuple]:
+        """(trace_id, span_id) of the in-flight recovery epoch or
+        checkpoint round, for piggybacking on proc-world reply frames so
+        a rank child's work parents under the coordinating operation.
+        Lock-free read: span handles are replaced atomically and a
+        slightly stale ctx only mis-parents a span, never corrupts."""
+        span = self._rec_span or self._ckpt_span
+        if span is None:
+            return None
+        return span.ctx
+
+    def _ckpt_phase_trace_locked(self, name: Optional[str]) -> None:
+        """Close the current checkpoint-phase sub-span and open `name`
+        (None = just close) nested under the round's root span."""
+        if self._ckpt_phase_span is not None:
+            self._ckpt_phase_span.end()
+            self._ckpt_phase_span = None
+        if name is not None and self._ckpt_span is not None:
+            self._ckpt_phase_span = _trace.begin(
+                "coord." + name, parent=self._ckpt_span, cat="coord",
+                generation=self.membership.generation)
+
+    def _end_ckpt_span_locked(self, **args) -> None:
+        self._ckpt_phase_trace_locked(None)
+        if self._ckpt_span is not None:
+            self._ckpt_span.end(**args)
+            self._ckpt_span = None
+
+    def _rec_phase_trace_locked(self, name: Optional[str]) -> None:
+        """Same, for the recovery sub-FSM (collect/quiesce/patch/resume
+        nested under recover.epoch)."""
+        if self._rec_phase_span is not None:
+            self._rec_phase_span.end()
+            self._rec_phase_span = None
+        if name is not None and self._rec_span is not None:
+            self._rec_phase_span = _trace.begin(
+                "recover." + name, parent=self._rec_span, cat="coord",
+                generation=self.membership.generation)
+
     # ---- abort --------------------------------------------------------------
     def abort(self, reason: str) -> None:
         """Cancel the job: every blocked rank raises JobAborted at its next
@@ -173,6 +227,9 @@ class Coordinator:
         with self._lock:
             if self.aborted is None:
                 self.aborted = reason
+                _trace.instant("coord.abort", cat="coord",
+                               generation=self.membership.generation,
+                               args={"reason": reason})
             self._lock.notify_all()
 
     def check_aborted(self) -> None:
@@ -213,7 +270,7 @@ class Coordinator:
         their per-rank statistics (e.g. drained_messages) through their
         endpoint via this, since they cannot touch the dict in-process."""
         with self._lock:
-            self.stats[key] = self.stats.get(key, 0) + n
+            self.stats.add(key, n)
 
     def report_telemetry(self, rank: int, counters: dict,
                          generation: Optional[int] = None) -> None:
@@ -274,7 +331,12 @@ class Coordinator:
             self.ckpt_step: Optional[int] = None
             self.phase = PHASE_PENDING
             self._drain_t0 = time.time()
-            self.stats["checkpoints"] += 1
+            round_no = self.stats.add("checkpoints")
+            self._ckpt_span = _trace.begin(
+                "coord.ckpt_round", cat="coord",
+                generation=self.membership.generation,
+                args={"round": round_no, "resume": resume})
+            self._ckpt_phase_trace_locked("pending")
             self._lock.notify_all()
 
     def propose_ckpt_step(self, rank: int, next_boundary: int,
@@ -293,6 +355,7 @@ class Coordinator:
                     and self._live <= set(self._proposals)):
                 self.ckpt_step = max(self._proposals.values())
                 self.phase = PHASE_DRAIN
+                self._ckpt_phase_trace_locked("drain")
                 self._lock.notify_all()
             return self.ckpt_step
 
@@ -325,6 +388,7 @@ class Coordinator:
                 if self.phase == PHASE_DRAIN:
                     self.phase = PHASE_SNAPSHOT
                     self.stats["drain_wall_s"] += time.time() - self._drain_t0
+                    self._ckpt_phase_trace_locked("snapshot")
                     self._lock.notify_all()
                 return True
             self.stats["drain_rounds"] += 1
@@ -338,12 +402,15 @@ class Coordinator:
             if self._live <= self._snap_ack:
                 if not self._resume_after_snapshot:
                     self.phase = PHASE_EXIT
+                    self._end_ckpt_span_locked(outcome="exit")
                 elif self._join_expected:
                     # migration final: hold the world until every
                     # replacement hot-joins the live generation
                     self.phase = PHASE_JOIN
+                    self._ckpt_phase_trace_locked("join")
                 else:
                     self.phase = PHASE_RESUME
+                    self._ckpt_phase_trace_locked("resume")
                 self._lock.notify_all()
             self._lock.notify_all()
 
@@ -353,6 +420,7 @@ class Coordinator:
                 self._drain_ack.discard(rank)
                 if not self._drain_ack:
                     self.phase = PHASE_RUN
+                    self._end_ckpt_span_locked(outcome="resumed")
                     self._lock.notify_all()
 
     def wait_phase(self, *phases: str,
@@ -469,6 +537,7 @@ class Coordinator:
                 self._mig_round = 0
                 self._join_expected = frozenset()
                 self.phase = PHASE_RESUME
+                self._ckpt_phase_trace_locked("resume")
             self._lock.notify_all()
 
     # ---- mid-collective recovery (DESIGN.md §14) ----------------------------
@@ -540,6 +609,12 @@ class Coordinator:
                 "dead_keys": [tuple(k) for k in dead_keys],
                 "error": None,
             }
+            self._rec_span = _trace.begin(
+                "recover.epoch", cat="coord",
+                generation=self.membership.generation,
+                args={"token": self._rec_epoch,
+                      "dead": sorted(dead_set)})
+            self._rec_phase_trace_locked("collect")
             self._lock.notify_all()
             return self._rec_epoch
 
@@ -571,17 +646,20 @@ class Coordinator:
                         self._cancel_locked(rec, err)
                         return {"phase": "cancelled"}
                     rec["phase"] = "quiesce"
+                    self._rec_phase_trace_locked("quiesce")
             elif phase == "quiesce":
                 if info is not None and "quiet" in info:
                     rec["quiet"][rank] = (rec["quiet"].get(rank, 0) + 1
                                           if info["quiet"] else 0)
                 if all(rec["quiet"].get(r, 0) >= 2 for r in waiting):
                     rec["phase"] = "patch"
+                    self._rec_phase_trace_locked("patch")
             elif phase == "patch":
                 if info and info.get("patched"):
                     rec["patched"].add(rank)
                     if waiting <= rec["patched"]:
                         rec["phase"] = "resume"
+                        self._rec_phase_trace_locked("resume")
             if rec["phase"] == "patch":
                 return {"phase": "patch",
                         "dead": sorted(rec["dead"]),
@@ -691,6 +769,12 @@ class Coordinator:
             "rerun_ops": len(rec["needs"]) - n_complete,
         }
         self._rec = None
+        self._rec_phase_trace_locked(None)
+        if self._rec_span is not None:
+            self._rec_span.end(outcome="ok", wall_s=round(wall, 6),
+                               completed_ops=n_complete,
+                               rerun_ops=len(rec["needs"]) - n_complete)
+            self._rec_span = None
         self._lock.notify_all()
 
     def _cancel_locked(self, rec: dict, reason: str) -> None:
@@ -700,6 +784,10 @@ class Coordinator:
             "ok": False, "dead": sorted(rec["dead"]), "error": reason,
             "wall_s": time.time() - rec["t0"],
         }
+        self._rec_phase_trace_locked(None)
+        if self._rec_span is not None:
+            self._rec_span.end(outcome="cancelled", error=reason)
+            self._rec_span = None
         self._lock.notify_all()
 
     def cancel_recovery(self, token: int, reason: str) -> None:

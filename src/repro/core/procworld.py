@@ -61,13 +61,18 @@ Wire protocol additions (served by the endpoint, not by ProxyCore):
 
 Every reply is ``(ok, value, coord_state)`` with ``coord_state =
 (phase, aborted_reason, ckpt_round, trigger_step, all_finished,
-mig_round, mig_final_ranks, recovery_token)`` — mig_round/
+mig_round, mig_final_ranks, recovery_token, trace_ctx)`` — mig_round/
 mig_final_ranks piggyback the live-migration FSM (DESIGN.md §13): the
 pre-copy round children stream at their next step boundary, and the
 ranks being migrated out at a migration final (``None`` outside one).
 ``recovery_token`` piggybacks the mid-collective recovery epoch
 (DESIGN.md §14): non-None while an epoch is open, which is how a child
 parked at a boundary or inside a collective learns to enlist.
+``trace_ctx`` piggybacks the coordinator's open checkpoint/recovery
+span (DESIGN.md §16): a ``(trace_id, span_id)`` pair the child uses to
+parent its own ``rank.ckpt`` span — which is how a rank's chunk upload
+ends up causally nested under the coordinating save in the merged
+timeline, despite living in a different process.
 """
 from __future__ import annotations
 
@@ -97,6 +102,7 @@ from repro.core.coordinator import (JobAborted, PHASE_DRAIN, PHASE_EXIT,
                                     PHASE_JOIN, PHASE_PENDING, PHASE_RESUME,
                                     PHASE_RUN)
 from repro.core.dataplane import RING_PAYLOAD_MIN, RingRef, ShmRing
+from repro.core import trace as _trace
 from repro.core.messages import Envelope
 from repro.core.proxy import (CMD_POLL_ALL, CMD_SEND, PROTOCOL_VERSION,
                               ProtocolError, ProxyChannel, ProxyCore)
@@ -191,6 +197,11 @@ class ProcWorld:
         job = self.job
         with job._err_lock:
             job.errors.setdefault(rank, err)
+        _trace.instant(
+            "fault.rank_died" if isinstance(err, RankProcessDied)
+            else "fault.rank_failed",
+            cat="coord", rank=rank,
+            args={"error": type(err).__name__, "detail": str(err)})
 
     # ------------------------------------------------------------------ run
     def run(self, n_steps: int, timeout: float) -> List[Any]:
@@ -294,7 +305,7 @@ class ProcWorld:
                 trig[0] if trig is not None else None,
                 c.all_finished(), c.mig_round,
                 tuple(sorted(c.join_expected)) if c.migrating else None,
-                c.recovery_token)
+                c.recovery_token, c.trace_ctx())
 
     def _serve_rank(self, rank: int, conn: socket.socket) -> None:
         """One rank's proxy endpoint: the process-world twin of
@@ -302,6 +313,7 @@ class ProcWorld:
         job = self.job
         core = ProxyCore(rank, job.transport)
         deferred: Optional[Exception] = None
+        win = _trace.BatchWindow("endpoint.batch", rank=rank)
         try:
             while True:
                 blob = read_frame_mv(conn)
@@ -323,7 +335,12 @@ class ProcWorld:
                     self._reply(conn, False, err)
                     continue
                 try:
-                    result = self._execute(core, rank, cmds)
+                    if _trace.ENABLED:
+                        t0 = time.monotonic()
+                        result = self._execute(core, rank, cmds)
+                        win.add(time.monotonic() - t0, len(cmds))
+                    else:
+                        result = self._execute(core, rank, cmds)
                     if want_reply:
                         self._reply(conn, True, result)
                 except Exception as e:  # surfaced now or at the next reply
@@ -334,6 +351,7 @@ class ProcWorld:
         except OSError:
             return                              # reply write hit a dead peer
         finally:
+            win.flush()
             try:
                 conn.close()
             except OSError:
@@ -586,10 +604,10 @@ class SocketChannel(ProxyChannel):
         self.sock.settimeout(None)
         self.sock.sendall(struct.pack("!i", rank))
         #: (phase, aborted_reason, ckpt_round, trigger_step, all_finished,
-        #: mig_round, mig_final_ranks, recovery_token) — piggybacked on
-        #: every reply
+        #: mig_round, mig_final_ranks, recovery_token, trace_ctx) —
+        #: piggybacked on every reply
         self.coord_state: tuple = (PHASE_RUN, None, 0, None, False, 0,
-                                   None, None)
+                                   None, None, None)
 
     # ---- frame transport hooks ---------------------------------------------
     def _push(self, frame: tuple) -> None:
@@ -707,6 +725,15 @@ class CoordClient:
         recovery_poll reply refreshes it, so a parked rank converges."""
         st = self.chan.coord_state
         return st[7] if len(st) > 7 else None
+
+    @property
+    def trace_ctx(self) -> Optional[tuple]:
+        """(trace_id, span_id) of the coordinator's open checkpoint or
+        recovery span (DESIGN.md §16), None outside one.  Cached view:
+        the ckpt_info reply a rank issues right before saving its image
+        refreshes it, so the parent link is current when it matters."""
+        st = self.chan.coord_state
+        return st[8] if len(st) > 8 else None
 
     def check_aborted(self) -> None:
         reason = self.chan.coord_state[1]
@@ -836,6 +863,9 @@ class _ProcRankHost(rankloop.RankHost):
 
     def trigger_step(self, coord):
         return coord.trigger_step
+
+    def ckpt_trace_ctx(self, mpi):
+        return self.coord.trace_ctx
 
     def fire_trigger(self, mpi) -> None:
         self.chan.call("fire_trigger")
@@ -998,6 +1028,13 @@ def _child_main(job, rank: int, port: int, n_steps: int,
                 pass
         code = 1
     finally:
+        try:
+            # flight-recorder dump (no-op unless REPRO_TRACE_DIR is set):
+            # the at-fork hook cleared the parent's inherited ring, so
+            # this file holds only events this rank process emitted
+            _trace.dump(role=f"rank{rank}")
+        except Exception:
+            pass
         try:
             if chan is not None:
                 chan.sock.close()

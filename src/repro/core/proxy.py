@@ -27,8 +27,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import trace as _trace
 from repro.core.messages import Envelope
 from repro.core.transport import Transport
 
@@ -293,6 +295,10 @@ class MPIProxy(threading.Thread):
             self.channel.closed = True
 
     def _serve(self) -> None:
+        # aggregated batch spans (trace.BatchWindow): per-batch spans
+        # would blow the CI overhead budget, the poll fast path below
+        # stays completely untimed either way
+        win = _trace.BatchWindow("proxy.batch", rank=self.rank)
         while True:
             req = self.channel.requests.get()
             if req is _POLL_ALL_FAST_FRAME and self._deferred_error is None:
@@ -325,7 +331,12 @@ class MPIProxy(threading.Thread):
                     return
                 continue
             try:
-                result = self.core.execute_batch(cmds)
+                if _trace.ENABLED:
+                    t0 = time.monotonic()
+                    result = self.core.execute_batch(cmds)
+                    win.add(time.monotonic() - t0, len(cmds))
+                else:
+                    result = self.core.execute_batch(cmds)
                 if want_reply:
                     self.channel.responses.put((True, result))
             except Exception as e:  # surfaced now or at the next reply
@@ -334,6 +345,7 @@ class MPIProxy(threading.Thread):
                 else:
                     self._deferred_error = self._deferred_error or e
             if stop:
+                win.flush()
                 return
 
     def stop(self) -> None:

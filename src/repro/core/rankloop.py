@@ -31,6 +31,7 @@ import time
 from typing import Any, List, Optional, Tuple
 
 from repro.core import recovery as _recovery
+from repro.core import trace as _trace
 from repro.core.coordinator import (PHASE_DRAIN, PHASE_EXIT, PHASE_JOIN,
                                     PHASE_PENDING, PHASE_RESUME, PHASE_RUN)
 
@@ -52,6 +53,20 @@ class RankHost:
 
     def trace(self, *event) -> None:
         self.events.append(tuple(event))
+        # mirror every FSM trace tuple into the flight recorder as an
+        # instant; host.events itself stays byte-identical across
+        # substrates (the parity suite asserts on it)
+        if _trace.ENABLED:
+            _trace.instant(
+                "rank." + str(event[0]), cat="rank",
+                rank=getattr(self, "rank", None),
+                args={"detail": list(event[1:])} if len(event) > 1 else None)
+
+    def ckpt_trace_ctx(self, mpi):
+        """(trace_id, span_id) of the coordinating checkpoint/recovery
+        span, so this rank's checkpoint spans parent under it — the
+        process world reads it off the piggybacked coord-state tuple."""
+        return None
 
     # ---- hooks (substrate-specific) -------------------------------------
     def tick(self, mpi) -> None:
@@ -201,27 +216,43 @@ def checkpoint_rank(host: RankHost, mpi, state: Any, step: int):
     """Flush → drain → snapshot → resume/exit (the paper's FSM, one copy
     for both substrates).  Returns a truthy status when this rank's
     execution should end: "exit" (checkpoint with resume=False) or
-    "migrated" (migration final — a replacement takes the rank over)."""
+    "migrated" (migration final — a replacement takes the rank over).
+
+    The whole dance runs inside a ``rank.ckpt`` span parented under the
+    coordinator's round span (ctx piggybacked across the socket in the
+    process world), so every nested span — the drain loop, the image
+    save, the chunk-store RPCs under it — lands on the coordinating
+    save's timeline."""
+    ctx = host.ckpt_trace_ctx(mpi) if _trace.ENABLED else None
+    with _trace.span("rank.ckpt", parent=ctx, cat="rank", rank=mpi.rank,
+                     generation=mpi.generation, args={"step": step}):
+        return _checkpoint_rank(host, mpi, state, step)
+
+
+def _checkpoint_rank(host: RankHost, mpi, state: Any, step: int):
     coord = mpi.coord
     # flush in-flight batches FIRST: every fire-and-forget send this rank
     # issued is on the transport and its exact counters are at the
     # coordinator before the rank acks drained (DESIGN.md §5)
     mpi.flush()
-    while coord.phase == PHASE_DRAIN:
-        coord.check_aborted()
-        host.tick(mpi)               # draining is alive, not dead
-        pumped = mpi._pump_all()
-        coord.ack_drained(mpi.rank, generation=mpi.generation)
-        coord.drain_complete()
-        if not pumped:
-            time.sleep(0.0002)
+    with _trace.span("rank.drain", cat="rank", rank=mpi.rank):
+        while coord.phase == PHASE_DRAIN:
+            coord.check_aborted()
+            host.tick(mpi)           # draining is alive, not dead
+            pumped = mpi._pump_all()
+            coord.ack_drained(mpi.rank, generation=mpi.generation)
+            coord.drain_complete()
+            if not pumped:
+                time.sleep(0.0002)
     # the channel-empty-at-snapshot invariant: nothing buffered in the
     # plugin, nothing queued to or from the proxy (+ ring slots free)
     host.assert_empty(mpi)
     coord.note_empty_channel(mpi.rank)
     # messages that crossed the checkpoint boundary (restored from cache)
     host.drained_stat(mpi)
-    leaver = host.save_image(mpi, state, step)
+    with _trace.span("rank.save_image", cat="rank", rank=mpi.rank,
+                     args={"step": step}):
+        leaver = host.save_image(mpi, state, step)
     host.trace("ckpt", step)
     # leaver decision is made INSIDE save_image, BEFORE this ack:
     # join_expected/migrating are stable until the join barrier completes,

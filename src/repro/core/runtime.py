@@ -35,6 +35,7 @@ from repro.checkpoint import chunkstore
 from repro.checkpoint.chunkstore import ChunkStoreBackend, StoreSpec
 from repro.core import rankloop
 from repro.core import recovery as _recovery
+from repro.core import trace as _trace
 from repro.core.api import MPI, remap_mpi_snapshot
 from repro.core.ckpt_protocol import (RankImage, commit_manifest,
                                       load_manifest, load_rank_image,
@@ -129,6 +130,11 @@ class _ThreadRankHost(rankloop.RankHost):
     def wait_phase_alive(self, mpi, *phases: str) -> str:
         return self.job._wait_phase_alive(self.rank, *phases)
 
+    def ckpt_trace_ctx(self, mpi):
+        # in-process: read the coordinator's active round/epoch span
+        # directly (the process world pulls the same ctx off the wire)
+        return self.job.coord.trace_ctx()
+
     def finish(self, mpi, state) -> None:
         self.job.states[self.rank] = state
         self.job.results[self.rank] = state
@@ -197,6 +203,9 @@ class MPIJob:
         self._ckpt_store_obj: Optional[ChunkStoreBackend] = None
         self._ckpt_meta: Dict[int, dict] = {}
         self._ckpt_lock = threading.Lock()
+        # serializes stats() snapshot assembly (satellite of DESIGN.md
+        # §16: one consistent view, not a merge of live mutating dicts)
+        self._stats_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
         self._restored = False
         self._trigger: Optional[tuple] = None   # (step, dir, resume)
@@ -467,63 +476,77 @@ class MPIJob:
                        for r in ranks}
         prev_dirty: Optional[int] = None
         converged = False
+        mig_span = _trace.begin("migrate", cat="coord",
+                                generation=coord.generation,
+                                args={"ranks": list(ranks),
+                                      "max_rounds": max_rounds})
         for k in range(1, max_rounds + 1):
-            coord.begin_round(k)
-            entries = coord.wait_round(k, timeout=timeout)
-            migration.write_round_manifest(
-                self._ckpt_dir, k, entries, generation=coord.generation,
-                store_spec=remote_spec)
-            chunks = migration.entries_chunks(entries)
-            staged |= chunks
-            if hasattr(store, "lease"):
-                try:   # pin: a concurrent gc can never collect the round
-                    store.lease(chunks, ttl=lease_ttl, lease_id=lease_id)
-                except (ConnectionError, OSError):
-                    pass
-            dirty = sum(e.get("shipped_bytes", 0) for e in entries.values())
-            total = sum(e.get("total_bytes", 0) for e in entries.values())
-            rounds.append({"round": k, "dirty_bytes": dirty,
-                           "total_bytes": total})
-            if dest is not None:
-                # warm the destination while the world runs: the join-time
-                # fetch then misses only the final delta.  Batched when
-                # the destination can (one get_many per shard per batch);
-                # per-name fallback otherwise.
-                fresh = sorted(chunks - prefetched)
-                pf = getattr(dest, "prefetch", None)
-                if pf is not None:
-                    try:
-                        pf(fresh)
-                    except (OSError, KeyError):
+            # each pre-copy round is a span nested under the migrate
+            # root; break exits close the round span cleanly
+            with _trace.span("migrate.round", parent=mig_span, cat="coord",
+                             args={"round": k}) as rspan:
+                coord.begin_round(k)
+                entries = coord.wait_round(k, timeout=timeout)
+                migration.write_round_manifest(
+                    self._ckpt_dir, k, entries, generation=coord.generation,
+                    store_spec=remote_spec)
+                chunks = migration.entries_chunks(entries)
+                staged |= chunks
+                if hasattr(store, "lease"):
+                    try:  # pin: a concurrent gc can never collect the round
+                        store.lease(chunks, ttl=lease_ttl, lease_id=lease_id)
+                    except (ConnectionError, OSError):
                         pass
-                else:
-                    for name in fresh:
+                dirty = sum(e.get("shipped_bytes", 0)
+                            for e in entries.values())
+                total = sum(e.get("total_bytes", 0)
+                            for e in entries.values())
+                rounds.append({"round": k, "dirty_bytes": dirty,
+                               "total_bytes": total})
+                rspan.end(dirty_bytes=dirty, total_bytes=total)
+                if dest is not None:
+                    # warm the destination while the world runs: the
+                    # join-time fetch then misses only the final delta.
+                    # Batched when the destination can (one get_many per
+                    # shard per batch); per-name fallback otherwise.
+                    fresh = sorted(chunks - prefetched)
+                    pf = getattr(dest, "prefetch", None)
+                    if pf is not None:
                         try:
-                            dest.get(name)
+                            pf(fresh)
                         except (OSError, KeyError):
                             pass
-                prefetched.update(fresh)
-            if staging is not None:
-                for r in ranks:
-                    if r in entries:
-                        staging[r].absorb(entries[r])
-            if dirty == 0:
-                converged = True
-                break
-            if (prev_dirty is not None
-                    and dirty > (1.0 - min_shrink) * prev_dirty):
-                converged = True      # dirty set stopped shrinking: drain
-                break
-            prev_dirty = dirty
+                    else:
+                        for name in fresh:
+                            try:
+                                dest.get(name)
+                            except (OSError, KeyError):
+                                pass
+                    prefetched.update(fresh)
+                if staging is not None:
+                    for r in ranks:
+                        if r in entries:
+                            staging[r].absorb(entries[r])
+                if dirty == 0:
+                    converged = True
+                    break
+                if (prev_dirty is not None
+                        and dirty > (1.0 - min_shrink) * prev_dirty):
+                    converged = True  # dirty set stopped shrinking: drain
+                    break
+                prev_dirty = dirty
         # ---- stop-the-world final delta + hot-join
         t0 = time.time()
-        coord.request_migration_final(ranks)
-        coord.wait_phase(PHASE_JOIN, timeout=timeout)
-        self._spawn_replacements(ranks, dest or store, staging)
-        coord.wait_phase(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN,
-                         timeout=timeout)
+        with _trace.span("migrate.final", parent=mig_span, cat="coord"):
+            coord.request_migration_final(ranks)
+            coord.wait_phase(PHASE_JOIN, timeout=timeout)
+            self._spawn_replacements(ranks, dest or store, staging)
+            coord.wait_phase(PHASE_RUN, PHASE_PENDING, PHASE_DRAIN,
+                             timeout=timeout)
         pause = time.time() - t0
         coord.stat_add("migrate_pause_s", pause)
+        mig_span.end(rounds=len(rounds), converged=converged,
+                     pause_s=round(pause, 6))
         # wire accounting from the committed manifest (substrate-free: in
         # the process world children upload through their own store
         # connections, so parent-side store counters see nothing): the
@@ -615,6 +638,9 @@ class MPIJob:
         out a timeout.  Used by the fault-tolerant driver the moment the
         heartbeat flags a dead rank (seconds, not Recv-timeout minutes)."""
         self.coord.abort(reason)
+        # faults are exactly when the ring matters: persist it (no-op
+        # unless REPRO_TRACE_DIR is set)
+        _trace.dump(role="driver")
 
     # ------------------------------------------- mid-collective recovery
     def recover(self, dead: Sequence[int], timeout: float = 10.0) -> dict:
@@ -688,21 +714,39 @@ class MPIJob:
         counters, the per-generation data-plane telemetry aggregate
         (compute/wait split, bytes per fabric), the straggler tracker's
         per-rank wall/compute/wait report, and — when the checkpoint
-        store is a sharded tier — per-shard health (DESIGN.md §15)."""
-        store = self._ckpt_chunks or self._ckpt_store_obj
-        health = getattr(store, "health", None)
-        return {
-            "transport": self.transport_name,
-            "world_size": self.n,
-            "live_ranks": sorted(self.coord.live_set),
-            "generation": self.coord.generation,
-            "coordinator": dict(self.coord.stats),
-            "telemetry": self.coord.telemetry_summary(),
-            "stragglers": self.stragglers.report(),
-            "ledger": (self.ledger.snapshot_stats()
-                       if self.ledger is not None else None),
-            "ckpt_store": health() if health is not None else None,
-        }
+        store is a sharded tier — per-shard health (DESIGN.md §15).
+
+        One CONSISTENT snapshot: each sub-source is registry-backed (a
+        locked ``metrics.MetricGroup`` or an internally locked reporter)
+        so its snapshot is atomic, and the whole merge runs under the
+        job's stats lock — rank threads bumping counters mid-call can no
+        longer tear the view or blow up a dict iteration."""
+        with self._stats_lock:
+            store = self._ckpt_chunks or self._ckpt_store_obj
+            health = getattr(store, "health", None)
+            return {
+                "transport": self.transport_name,
+                "world_size": self.n,
+                "live_ranks": sorted(self.coord.live_set),
+                "generation": self.coord.generation,
+                "coordinator": self.coord.stats.snapshot(),
+                "telemetry": self.coord.telemetry_summary(),
+                "stragglers": self.stragglers.report(),
+                "ledger": (self.ledger.snapshot_stats()
+                           if self.ledger is not None else None),
+                "ckpt_store": health() if health is not None else None,
+            }
+
+    def dump_trace(self, trace_dir: Optional[str | Path] = None):
+        """Dump THIS process's flight-recorder ring (spans from the
+        coordinator FSM, proxies/endpoints, checkpoint pipeline and chunk
+        client — in the process world rank children dump their own rings
+        on exit).  Target: `trace_dir` or REPRO_TRACE_DIR; returns the
+        written path, or None when neither is set.  Merge per-process
+        dumps with ``python -m repro.core.trace merge <dir>``."""
+        return _trace.dump(
+            role="driver",
+            trace_dir=str(trace_dir) if trace_dir is not None else None)
 
     def rank_pids(self) -> Dict[int, int]:
         """PID-based membership view of a PROCESS world (rank -> pid of
@@ -721,6 +765,7 @@ class MPIJob:
         if self._proc is not None:
             self._proc.stop()
             self.transport.stop()
+            _trace.dump(role="driver")
             return
         for p in self.proxies:
             try:
@@ -730,6 +775,7 @@ class MPIJob:
         for p in self.proxies:
             p.join(timeout=5.0)
         self.transport.stop()
+        _trace.dump(role="driver")
 
     # --------------------------------------------------------------- restart
     @classmethod
@@ -799,29 +845,34 @@ class MPIJob:
         # misses (DESIGN.md §11).  The restored job's checkpoints reuse
         # the backend (connection + presence knowledge already warm).
         img_store = job._store_backend()
-        for r in range(new_n):
-            src = survivors[r % len(survivors)]
-            sources[r] = src
-            if src not in images:
-                images[src] = load_rank_image(ckpt_dir, src,
-                                              store=img_store)
-            img = images[src]
-            snap = img.mpi_state
-            if reshaped:
-                snap = remap_mpi_snapshot(snap, rank_map, r, new_n,
-                                          clone=r >= len(survivors))
-            if job._proc is not None:
-                # process world: the snapshot restores INSIDE the forked
-                # child (admin replay must run against the child's own
-                # endpoint); stash it for fork-time inheritance
-                job._restore_snaps[r] = snap
-            else:
-                job.mpis[r].restore(snap)
-            # first taker of an image gets the materialised object (no
-            # re-pickle pass); clones of the same image get private copies
-            job.states[r] = img.state_obj(fresh=src in claimed)
-            claimed.add(src)
-            job.start_steps[r] = img.step_idx
+        with _trace.span("restore.images", cat="ckpt",
+                         args={"dir": ckpt_dir.name, "world": new_n,
+                               "reshaped": reshaped}):
+            for r in range(new_n):
+                src = survivors[r % len(survivors)]
+                sources[r] = src
+                if src not in images:
+                    images[src] = load_rank_image(ckpt_dir, src,
+                                                  store=img_store)
+                img = images[src]
+                snap = img.mpi_state
+                if reshaped:
+                    snap = remap_mpi_snapshot(snap, rank_map, r, new_n,
+                                              clone=r >= len(survivors))
+                if job._proc is not None:
+                    # process world: the snapshot restores INSIDE the
+                    # forked child (admin replay must run against the
+                    # child's own endpoint); stash it for fork-time
+                    # inheritance
+                    job._restore_snaps[r] = snap
+                else:
+                    job.mpis[r].restore(snap)
+                # first taker of an image gets the materialised object (no
+                # re-pickle pass); clones of the same image get private
+                # copies
+                job.states[r] = img.state_obj(fresh=src in claimed)
+                claimed.add(src)
+                job.start_steps[r] = img.step_idx
         job._restored = True
         if reshaped:
             job.restore_info = {

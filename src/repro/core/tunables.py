@@ -73,6 +73,30 @@ it actually controlled:
                                    elapses and one probe re-tests it, so
                                    a dead server costs one backoff
                                    ladder, not one per chunk.
+  REPRO_TRACE                      "0" disables the flight recorder and
+                                   span emission entirely (core/trace.py
+                                   compiles to no-ops).  Default on: the
+                                   CI-gated overhead budget keeps span
+                                   granularity cheap enough to leave on.
+  REPRO_TRACE_DIR                  where per-process flight-recorder
+                                   rings are dumped on fault/abort/exit
+                                   (and by MPIJob.dump_trace()).  Unset
+                                   means automatic dumps are off;
+                                   explicit dump_trace() calls can still
+                                   pass a directory.  Read at dump time,
+                                   not import time, so tests and forked
+                                   rank children see live changes.
+  REPRO_TRACE_RING                 flight-recorder capacity in events
+                                   per process (default 4096; oldest
+                                   evicted).  Bounds both memory and
+                                   dump size no matter how long a world
+                                   runs.
+  REPRO_METRICS_HIST_BUCKETS       bucket count for metrics histograms
+                                   (default 12 exponential buckets);
+                                   label sets and bucket counts are both
+                                   bounded so a misbehaving caller
+                                   cannot grow the registry without
+                                   limit.
 """
 from __future__ import annotations
 
@@ -131,3 +155,17 @@ SHARD_REPLICAS = env_int("REPRO_REPLICAS", 2,
                          aliases=("REPRO_SHARD_REPLICAS",))
 SHARD_FANOUT = env_int("REPRO_SHARD_FANOUT", 8)
 SHARD_RETRY_S = env_float("REPRO_SHARD_RETRY_S", 3.0)
+
+#: flight recorder + tracing (core/trace.py)
+TRACE_ENABLED = os.environ.get("REPRO_TRACE", "1") != "0"
+TRACE_RING = env_int("REPRO_TRACE_RING", 4096)
+
+
+def trace_dir():
+    """REPRO_TRACE_DIR, read live (dump time) rather than at import so
+    monkeypatched tests and forked rank children agree on the target."""
+    return os.environ.get("REPRO_TRACE_DIR") or None
+
+
+#: metrics registry histograms (core/metrics.py)
+METRICS_HIST_BUCKETS = env_int("REPRO_METRICS_HIST_BUCKETS", 12)

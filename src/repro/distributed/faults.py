@@ -27,20 +27,82 @@ from the dead rank.  Here:
 """
 from __future__ import annotations
 
+import enum
 import inspect
 import os
 import signal
 import threading
 import time
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import metrics as _metrics
+from repro.core import trace as _trace
 from repro.core.coordinator import Membership
 from repro.core.procworld import RankProcessDied  # noqa: F401  (re-export:
 # the driver-facing "a rank's OS process vanished" error lives with the
 # process world but is detected and consumed here)
+
+
+class DriverEventKind(str, enum.Enum):
+    """The driver's event vocabulary, pinned (test_observability).  Every
+    entry in ``FaultTolerantDriver.events`` is a ``DriverEvent`` of one of
+    these kinds; the legacy colon-joined string form is the event's str
+    value, so existing ``e.startswith("dead:")`` consumers keep working."""
+
+    START = "start"                  # start:fresh
+    RESTART = "restart"              # restart:<ckpt>:world=N:gen=G
+    DEAD = "dead"                    # dead:[ranks]:gen=G
+    STRAGGLER = "straggler"          # straggler:[ranks]:gen=G
+    RECOVER = "recover"              # recover:[ranks]:wall_s=..:completed=..
+    FALLBACK = "fallback"            # fallback:[ranks]:<reason>
+    MIGRATE = "migrate"              # migrate:[ranks]:pause_s=..:rounds=..
+    MIGRATE_FAILED = "migrate-failed"  # migrate-failed:[ranks]:<error>
+    CKPT = "ckpt"                    # ckpt:<dir name>
+    WAIT = "wait"                    # wait:rank=R:compute_s=..:wall_s=..
+    DONE = "done"                    # done
+    FAILURE = "failure"              # failure:<error type>
+
+
+@dataclass(frozen=True)
+class DriverEventPayload:
+    """Structured half of a DriverEvent: what the colon-string encodes,
+    without the parsing."""
+    kind: DriverEventKind
+    ranks: Optional[Tuple[int, ...]] = None
+    generation: Optional[int] = None
+    detail: dict = field(default_factory=dict)
+
+
+class DriverEvent(str):
+    """A typed driver event that IS its legacy string form.
+
+    ``str(ev)``, equality, startswith — everything the existing tests and
+    log consumers do — see the exact colon-joined string the driver used
+    to append; ``ev.kind`` / ``ev.payload`` carry the typed form for new
+    consumers (no regex re-parsing of ranks and generations)."""
+
+    kind: DriverEventKind
+    payload: DriverEventPayload
+
+    def __new__(cls, kind: "DriverEventKind | str", text: str,
+                ranks: Optional[Sequence[int]] = None,
+                generation: Optional[int] = None, **detail):
+        self = super().__new__(cls, text)
+        self.kind = DriverEventKind(kind)
+        self.payload = DriverEventPayload(
+            kind=self.kind,
+            ranks=tuple(ranks) if ranks is not None else None,
+            generation=generation, detail=detail)
+        return self
+
+
+#: driver events by kind — bounded label set (the pinned vocabulary)
+_EVENT_COUNTER = _metrics.labeled_counter("driver_events",
+                                          max_series=len(DriverEventKind))
 
 
 def kill_rank_process(job, rank: int, sig: int = signal.SIGKILL) -> int:
@@ -231,7 +293,7 @@ class FaultTolerantDriver:
         #: (job.migrate — pre-copy rounds, bounded pause, same
         #: incarnation) instead of waiting for the exclusion ladder
         self.migrate_windows = migrate_windows
-        self.events: List[str] = []
+        self.events: List[DriverEvent] = []
         #: per-recovery reports ({"dead", "wall_s", "completed_ops", ...})
         self.recoveries: List[dict] = []
         self._rec_failures = 0
@@ -242,6 +304,19 @@ class FaultTolerantDriver:
             len(inspect.signature(restart_factory).parameters) >= 5)
 
     # ------------------------------------------------------------- plumbing
+    def _event(self, kind: "DriverEventKind | str", text: str,
+               ranks: Optional[Sequence[int]] = None,
+               generation: Optional[int] = None, **detail) -> DriverEvent:
+        """Append one typed event + mirror it into the flight recorder and
+        the driver_events labeled counter."""
+        ev = DriverEvent(kind, text, ranks=ranks, generation=generation,
+                         **detail)
+        self.events.append(ev)
+        _trace.instant("driver." + ev.kind.value, cat="driver",
+                       generation=generation, args={"text": text})
+        _EVENT_COUNTER.inc(ev.kind.value)
+        return ev
+
     def _latest_valid(self) -> Optional[Path]:
         from repro.core.ckpt_protocol import checkpoint_valid, load_manifest
         if not self.ckpt_root.exists():
@@ -323,7 +398,8 @@ class FaultTolerantDriver:
         else:
             gen = self.membership.bump(
                 dead, world_size=self._next_world(job.n, dead))
-        self.events.append(f"{kind}:{list(observed)}:gen={gen}")
+        self._event(kind, f"{kind}:{list(observed)}:gen={gen}",
+                    ranks=observed, generation=gen)
         return dead
 
     def _confirmed_stragglers(self, job, counts: Dict[int, int],
@@ -349,7 +425,9 @@ class FaultTolerantDriver:
         if not self.recovery or not hasattr(job, "recover"):
             return False
         if time.monotonic() < self._rec_block_until:
-            self.events.append(f"fallback:{list(dead)}:backoff")
+            self._event(DriverEventKind.FALLBACK,
+                        f"fallback:{list(dead)}:backoff",
+                        ranks=dead, reason="backoff")
             return False
         try:
             rep = job.recover(dead, timeout=self.recovery_timeout_s)
@@ -357,15 +435,19 @@ class FaultTolerantDriver:
             self._rec_failures += 1
             self._rec_block_until = time.monotonic() + \
                 self.recovery_backoff_s * 2 ** (self._rec_failures - 1)
-            self.events.append(
-                f"fallback:{list(dead)}:{type(e).__name__}:{e}")
+            self._event(DriverEventKind.FALLBACK,
+                        f"fallback:{list(dead)}:{type(e).__name__}:{e}",
+                        ranks=dead, error=type(e).__name__)
             return False
         self._rec_failures = 0
         self._rec_block_until = 0.0
         self.recoveries.append(rep)
-        self.events.append(
+        self._event(
+            DriverEventKind.RECOVER,
             f"recover:{rep['dead']}:wall_s={rep['wall_s']:.4f}"
-            f":completed={rep['completed_ops']}:rerun={rep['rerun_ops']}")
+            f":completed={rep['completed_ops']}:rerun={rep['rerun_ops']}",
+            ranks=rep["dead"], wall_s=rep["wall_s"],
+            completed_ops=rep["completed_ops"], rerun_ops=rep["rerun_ops"])
         return True
 
     def _auto_migrate(self, job, slow: Tuple[int, ...]) -> None:
@@ -379,15 +461,19 @@ class FaultTolerantDriver:
         try:
             rep = job.migrate(ck, ranks=list(slow))
         except Exception as e:  # noqa: BLE001 - migration is best-effort
-            self.events.append(
-                f"migrate-failed:{list(slow)}:{type(e).__name__}")
+            self._event(DriverEventKind.MIGRATE_FAILED,
+                        f"migrate-failed:{list(slow)}:{type(e).__name__}",
+                        ranks=slow, error=type(e).__name__)
             return
         for r in slow:
             job.stragglers.forget(r)
-        self.events.append(
+        self._event(
+            DriverEventKind.MIGRATE,
             f"migrate:{list(slow)}:pause_s={rep['pause_s']:.4f}"
             f":rounds={len(rep['rounds'])}"
-            f":final_fraction={rep['final_fraction']:.4f}")
+            f":final_fraction={rep['final_fraction']:.4f}",
+            ranks=slow, pause_s=rep["pause_s"], rounds=len(rep["rounds"]),
+            final_fraction=rep["final_fraction"])
 
     def _exclude_stragglers(self, job, slow: Tuple[int, ...]) -> bool:
         """The 'next checkpoint boundary' half of the straggler policy:
@@ -406,7 +492,7 @@ class FaultTolerantDriver:
             job.wait_checkpoint(timeout=30.0)
         except (RuntimeError, TimeoutError):
             return False
-        self.events.append(f"ckpt:{ck.name}")
+        self._event(DriverEventKind.CKPT, f"ckpt:{ck.name}", name=ck.name)
         return True
 
     # ------------------------------------------------------------------ run
@@ -419,13 +505,16 @@ class FaultTolerantDriver:
             latest = self._latest_valid()
             if latest is None:
                 job = self._fresh_job()
-                self.events.append("start:fresh")
+                self._event(DriverEventKind.START, "start:fresh")
             else:
                 job = self._restart_job(latest, transport_after_failure,
                                         pending_dead, pending_gen)
-                self.events.append(
+                self._event(
+                    DriverEventKind.RESTART,
                     f"restart:{latest.name}:world={job.n}"
-                    f":gen={job.coord.generation}")
+                    f":gen={job.coord.generation}",
+                    generation=job.coord.generation,
+                    ckpt=latest.name, world=job.n)
             pending_dead, pending_gen = (), None
             if self.membership is None:
                 # adopt the first incarnation's membership: it survives
@@ -482,10 +571,12 @@ class FaultTolerantDriver:
                         for r in slow:
                             rep = report.get(r, {})
                             comp, wall = rep.get("compute_s"), rep.get("wall_s")
-                            self.events.append(
+                            self._event(
+                                DriverEventKind.WAIT,
                                 f"wait:rank={r}"
                                 f":compute_s={comp if comp is None else round(comp, 4)}"
-                                f":wall_s={wall if wall is None else round(wall, 4)}")
+                                f":wall_s={wall if wall is None else round(wall, 4)}",
+                                ranks=(r,), compute_s=comp, wall_s=wall)
                         dead = self._declare_dead(job, slow,
                                                   kind="straggler")
                         job.abort(
@@ -520,7 +611,7 @@ class FaultTolerantDriver:
             t.join(min(timeout, 10.0))
             job.stop()
             if "result" in box and not dead:
-                self.events.append("done")
+                self._event(DriverEventKind.DONE, "done")
                 return box["result"]
             if "result" not in box and not dead:
                 # the job died faster than the monitor could poll (every
@@ -532,8 +623,10 @@ class FaultTolerantDriver:
                     dead = self._declare_dead(job, post)
             attempts += 1
             err = box.get("error")
-            self.events.append(
-                f"failure:{type(err).__name__ if err else 'DeadRank'}")
+            self._event(
+                DriverEventKind.FAILURE,
+                f"failure:{type(err).__name__ if err else 'DeadRank'}",
+                error=type(err).__name__ if err else "DeadRank")
             if attempts > self.max_restarts:
                 if err is not None:
                     raise err
